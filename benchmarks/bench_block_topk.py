@@ -1,0 +1,77 @@
+"""(Ours, DESIGN.md §3) Block- vs token-granular top-k selection fidelity.
+
+The TPU adaptation selects top-k at 128-token *block* granularity (per-block
+score maxima) instead of the paper's per-token top-k. This benchmark measures
+what that costs: Jaccard overlap with exact-token top-k and attention-mass
+recall (fraction of the true softmax mass covered by the selection), on real
+captured (q, K) from the bench model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_jaccard import captured_qk
+
+
+def mass_recall(exact, sel_mask):
+    """exact (…,S) raw scores; sel_mask (…,S) bool. softmax-mass covered."""
+    e = np.exp(exact - exact.max(-1, keepdims=True))
+    p = e / e.sum(-1, keepdims=True)
+    return float((p * sel_mask).sum(-1).mean())
+
+
+def run() -> list:
+    qs, ks, cfg = captured_qk()
+    calib = common.calibration("synthA")
+    proj = calib.projections("pre")
+    l_, b, s, n_kv, dim = ks.shape
+    h = qs.shape[3]
+    g = h // n_kv
+    q = qs[:, :, -1].reshape(l_, b, n_kv, g, dim)
+    k_hat = np.einsum("lbshd,lhde->lbshe", ks, proj)
+    q_hat = np.einsum("lbhgd,lhde->lbhge", q, proj)
+    exact = np.einsum("lbhgd,lbshd->lbhgs", q, ks)
+    d = max(int(0.25 * dim), 8)
+    approx = np.einsum("lbhgd,lbshd->lbhgs", q_hat[..., :d],
+                       np.ascontiguousarray(k_hat[..., :d]))
+    k_f = 0.25
+    k_tok = int(k_f * s)
+    top_tok = np.argsort(-approx, -1)[..., :k_tok]
+    tok_mask = np.zeros_like(approx, bool)
+    np.put_along_axis(tok_mask, top_tok, True, -1)
+    exact_top = np.argsort(-exact, -1)[..., :k_tok]
+
+    rows = []
+    for bs in (8, 16, 32):
+        nb = s // bs
+        blk = approx[..., : nb * bs].reshape(*approx.shape[:-1], nb, bs)
+        bmax = blk.max(-1)
+        kb = max(int(k_f * nb), 1)
+        top_blk = np.argsort(-bmax, -1)[..., :kb]
+        blk_mask = np.zeros_like(bmax, bool)
+        np.put_along_axis(blk_mask, top_blk, True, -1)
+        sel_mask = np.repeat(blk_mask, bs, axis=-1)
+        if sel_mask.shape[-1] < s:
+            sel_mask = np.concatenate(
+                [sel_mask, np.zeros((*sel_mask.shape[:-1],
+                                     s - sel_mask.shape[-1]), bool)], -1)
+        # jaccard vs exact-token selection
+        jac = []
+        fe = exact_top.reshape(-1, k_tok)
+        fm = sel_mask.reshape(-1, s)
+        for i in range(fe.shape[0]):
+            a = set(fe[i])
+            b_ = set(np.nonzero(fm[i])[0])
+            jac.append(len(a & b_) / len(a | b_))
+        rows.append({
+            "bench": "block_topk", "block_size": bs, "k_f": k_f,
+            "jaccard_vs_exact": float(np.mean(jac)),
+            "mass_recall_block": mass_recall(exact, sel_mask),
+            "mass_recall_token": mass_recall(exact, tok_mask),
+        })
+    return common.emit(rows, "block_topk")
+
+
+if __name__ == "__main__":
+    run()

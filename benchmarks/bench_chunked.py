@@ -1,0 +1,71 @@
+"""(Ours, DESIGN.md §4) Chunk-local vs global Loki selection fidelity.
+
+The distributed adaptation splits the KV cache into n_chunks sequence shards
+and takes top-(k/n) per chunk, keeping every gather device-local. This
+benchmark measures what that costs in selection quality on real captured
+(q, K): overlap with global top-k, attention-mass recall, and the decode-NLL
+delta through the model.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_block_topk import mass_recall
+from benchmarks.bench_jaccard import captured_qk
+
+
+def run() -> list:
+    qs, ks, cfg = captured_qk()
+    calib = common.calibration("synthA")
+    proj = calib.projections("pre")
+    l_, b, s, n_kv, dim = ks.shape
+    h = qs.shape[3]
+    g = h // n_kv
+    q = qs[:, :, -1].reshape(l_, b, n_kv, g, dim)
+    k_hat = np.einsum("lbshd,lhde->lbshe", ks, proj)
+    q_hat = np.einsum("lbhgd,lhde->lbhge", q, proj)
+    exact = np.einsum("lbhgd,lbshd->lbhgs", q, ks)
+    d = max(int(0.25 * dim), 8)
+    approx = np.einsum("lbhgd,lbshd->lbhgs", q_hat[..., :d],
+                       np.ascontiguousarray(k_hat[..., :d]))
+    k_f = 0.25
+    k_tot = int(k_f * s)
+
+    glob = np.argsort(-approx, -1)[..., :k_tot]
+    gmask = np.zeros_like(approx, bool)
+    np.put_along_axis(gmask, glob, True, -1)
+
+    rows = []
+    params_loki = common.loki_params("pre")
+    toks = common.eval_tokens(n_seqs=8, seq_len=96, seed_step=12000)
+    nll_global = common.decode_nll(
+        params_loki, common.policy_cfg("loki", k_f=0.25, d_f=0.25), toks, 32)
+    rows.append({"bench": "chunked", "n_chunks": 0,
+                 "overlap_with_global": 1.0,
+                 "mass_recall": mass_recall(exact, gmask),
+                 "decode_nll": nll_global})
+    for nc in (2, 4, 8):
+        if s % nc:
+            continue
+        sc = s // nc
+        kpc = max(k_tot // nc, 1)
+        ch = approx.reshape(*approx.shape[:-1], nc, sc)
+        idx = np.argsort(-ch, -1)[..., :kpc]
+        cmask = np.zeros_like(ch, bool)
+        np.put_along_axis(cmask, idx, True, -1)
+        cmask = cmask.reshape(*approx.shape[:-1], nc * sc)
+        overlap = float((cmask & gmask).sum() / max(gmask.sum(), 1))
+        pcfg = common.policy_cfg("loki", k_f=0.25, d_f=0.25, n_chunks=nc)
+        nll = common.decode_nll(params_loki, pcfg, toks, 32)
+        rows.append({"bench": "chunked", "n_chunks": nc,
+                     "overlap_with_global": overlap,
+                     "mass_recall": mass_recall(exact, cmask),
+                     "decode_nll": nll})
+    return common.emit(rows, "chunked")
+
+
+if __name__ == "__main__":
+    run()

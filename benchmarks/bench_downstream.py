@@ -1,0 +1,45 @@
+"""Paper Figure 5 / Tables 3-4: downstream task performance across policies
+and (k_f, d_f) settings.
+
+Offline proxy: greedy next-token accuracy on held-out structured synthetic
+data, through the decode path. The paper's trends validated:
+  * accuracy degrades as k_f/d_f shrink,
+  * k_f hurts more than d_f (k=0.125,d=0.5 < k=0.5,d=0.125),
+  * loki >= h2o at matched budgets.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+GRID = [(0.5, 0.5), (0.5, 0.125), (0.25, 0.25), (0.125, 0.5), (0.125, 0.125)]
+
+
+def run(prompt_len: int = 32, seq_len: int = 96) -> list:
+    params_plain, cfg = common.trained_params()
+    params_loki = common.loki_params("pre")
+    toks = common.eval_tokens(n_seqs=8, seq_len=seq_len, seed_step=6000)
+    rows = [{
+        "bench": "downstream", "policy": "full", "k_f": 1.0, "d_f": 1.0,
+        "acc": common.decode_accuracy(params_plain, cfg, toks, prompt_len),
+    }]
+    for k_f, d_f in GRID:
+        pcfg = common.policy_cfg("loki", k_f=k_f, d_f=d_f)
+        rows.append({
+            "bench": "downstream", "policy": "loki", "k_f": k_f, "d_f": d_f,
+            "acc": common.decode_accuracy(params_loki, pcfg, toks,
+                                          prompt_len),
+        })
+    for k_f in (0.25,):
+        for policy in ("exact_topk", "h2o"):
+            pcfg = common.policy_cfg(policy, k_f=k_f)
+            rows.append({
+                "bench": "downstream", "policy": policy, "k_f": k_f,
+                "d_f": 1.0,
+                "acc": common.decode_accuracy(params_plain, pcfg, toks,
+                                              prompt_len),
+            })
+    return common.emit(rows, "downstream")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Appendix E (Table 5): PCAAttn ablation — the negative control.
+
+PCAAttn computes softmax attention *directly* from truncated d-dim PCA scores
+(no top-k re-ranking, K cache stored truncated). The paper shows it fails
+badly (ppl 38 -> 933 vs ~5 full). We reproduce the qualitative result: Loki
+at the same d_f stays near full attention while PCAAttn degrades by an order
+of magnitude more.
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks import common
+
+
+def run(prompt_len: int = 32, seq_len: int = 96) -> list:
+    params_plain, cfg = common.trained_params()
+    params_loki = common.loki_params("post")   # PCAAttn uses post-rotary (paper)
+    toks = common.eval_tokens(n_seqs=8, seq_len=seq_len, seed_step=9000)
+    rows = [{
+        "bench": "pcaattn", "policy": "full", "d_f": 1.0,
+        "ppl": math.exp(common.decode_nll(params_plain, cfg, toks,
+                                          prompt_len)),
+    }]
+    for d_f in (0.5, 0.25, 0.125):
+        loki_cfg = common.policy_cfg("loki", k_f=0.25, d_f=d_f,
+                                     transform="post")
+        rows.append({
+            "bench": "pcaattn", "policy": "loki", "d_f": d_f,
+            "ppl": math.exp(common.decode_nll(params_loki, loki_cfg, toks,
+                                              prompt_len)),
+        })
+        pa_cfg = common.policy_cfg("pcaattn", d_f=d_f, transform="post")
+        rows.append({
+            "bench": "pcaattn", "policy": "pcaattn", "d_f": d_f,
+            "ppl": math.exp(common.decode_nll(params_loki, pa_cfg, toks,
+                                              prompt_len)),
+        })
+    return common.emit(rows, "pcaattn")
+
+
+if __name__ == "__main__":
+    run()

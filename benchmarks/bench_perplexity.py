@@ -1,0 +1,46 @@
+"""Paper Table 2: perplexity of full / exact-top-k / H2O / Loki.
+
+Scored through the decode path (prefill + per-token decode_step) so each
+policy's real serving code is what's measured. Expected ordering (the paper's
+quality claim): full <= exact-topk ~= loki < h2o, with loki within a small
+delta of full.
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks import common
+
+
+POLICIES = [
+    ("full", {}),
+    ("exact_topk", dict(k_f=0.25)),
+    ("h2o", dict(k_f=0.25)),
+    ("loki", dict(k_f=0.25, d_f=0.25)),
+    ("loki", dict(k_f=0.125, d_f=0.5)),
+    ("loki_block", dict(k_f=0.25, d_f=0.25, block_size=8)),
+]
+
+
+def run(prompt_len: int = 32, seq_len: int = 96) -> list:
+    params_plain, cfg = common.trained_params()
+    params_loki = common.loki_params("pre")
+    toks = common.eval_tokens(n_seqs=8, seq_len=seq_len)
+    rows = []
+    for policy, kw in POLICIES:
+        pcfg = common.policy_cfg(policy, **kw)
+        params = params_loki if policy.startswith("loki") else params_plain
+        nll = common.decode_nll(params, pcfg, toks, prompt_len)
+        rows.append({
+            "bench": "perplexity", "policy": policy,
+            "k_f": kw.get("k_f", 1.0), "d_f": kw.get("d_f", 1.0),
+            "nll": nll, "ppl": math.exp(nll),
+        })
+    base = rows[0]["ppl"]
+    for r in rows:
+        r["ppl_delta_vs_full"] = r["ppl"] - base
+    return common.emit(rows, "perplexity")
+
+
+if __name__ == "__main__":
+    run()

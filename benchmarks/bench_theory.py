@@ -1,0 +1,63 @@
+"""Paper Eq. (5): theoretical speedup vs measured compiled-FLOP ratio.
+
+speedup = 2DS / (dS + 2Dk + 2D^2) ~= 1 / (d_f/2 + k_f)    (D << S)
+
+We lower vanilla decode attention and Loki decode attention with XLA and
+compare the actual HLO FLOP counts; the ratio should track Eq. 5 (FLOPs, not
+bytes, is what the formula models).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.configs.base import LokiConfig
+from repro.core.attention import decode_full
+from repro.core.loki import loki_decode
+
+
+def hlo_flops(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(c, list):
+        c = c[0]
+    return float(c.get("flops", 0.0))
+
+
+def run() -> list:
+    rows = []
+    b, h, dim, s = 1, 8, 128, 8192
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, dim), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, dim), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, dim), jnp.float32)
+    proj = jnp.broadcast_to(jnp.eye(dim), (h, dim, dim))
+    cur = jnp.full((b,), s, jnp.int32)
+
+    f_full = hlo_flops(lambda q, k, v, c: decode_full(q, k, v, c),
+                       q, k, v, cur)
+    for k_f, d_f in [(0.25, 0.25), (0.125, 0.5), (0.125, 0.25),
+                     (0.5, 0.5)]:
+        cfg = LokiConfig(d_f=d_f, k_f=k_f, local_window=0, min_k=1)
+        f_loki = hlo_flops(
+            lambda q, k, v, c, p: loki_decode(q, k, v, c, p, cfg),
+            q, k, v, cur, proj)
+        d = max(int(d_f * dim), 8)
+        kk = max(int(k_f * s), 1)
+        exact = 2.0 * dim * s / (d * s + 2 * dim * kk + 2 * dim * dim)
+        approx = 1.0 / (d_f / 2 + k_f)
+        rows.append({
+            "bench": "theory", "k_f": k_f, "d_f": d_f,
+            "hlo_flops_full": f_full, "hlo_flops_loki": f_loki,
+            "measured_flop_ratio": f_full / f_loki,
+            "eq5_exact": exact, "eq5_approx": approx,
+            # loki also pays the q-projection (2D^2 per head) + topk, so the
+            # measured ratio should be <= eq5_exact but the same order
+            "within_2x_of_eq5": bool(
+                0.5 < (f_full / f_loki) / exact < 2.0),
+        })
+    return common.emit(rows, "theory")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,228 @@
+"""Shared benchmark substrate.
+
+All paper-table benchmarks run against the same artifact: a small LM of the
+paper's family (Llama-2-like dense GQA) *briefly trained* on the structured
+synthetic corpus so that its attention concentrates mass (the property Loki's
+top-k selection exploits), plus PCA calibrations from several synthetic
+"datasets" (different generator seeds/temperatures stand in for
+WikiText-103 / C4 / BookCorpus in this offline container).
+
+The trained model + calibrations are cached under experiments/bench_cache so
+the full ``python -m benchmarks.run`` sweep is fast after the first build.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import pca as PCA
+from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
+from repro.models import lm
+from repro.optim import adamw
+from repro.training.step import TrainState, make_train_step
+
+ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "experiments"))
+BENCH_DIR = os.path.join(ROOT, "bench")
+CACHE_DIR = os.path.join(ROOT, "bench_cache")
+
+# the bench model: paper-family (dense, GQA-capable, RoPE, SwiGLU).
+BENCH_CFG = ModelConfig(
+    arch="bench-llama", family="dense", n_layers=4, d_model=256,
+    n_heads=4, n_kv_heads=4, d_ff=512, vocab=512, mlp="swiglu",
+    dtype="float32")
+
+BENCH_DATA = DataConfig(vocab=512, seq_len=128, global_batch=8, seed=7,
+                        n_states=32, temperature=0.22)
+
+# stand-ins for the paper's calibration corpora (§6.3 generalizability)
+CALIB_DATASETS: Dict[str, DataConfig] = {
+    "synthA": BENCH_DATA,
+    "synthB": DataConfig(vocab=512, seq_len=128, global_batch=8, seed=1234,
+                         n_states=48, temperature=0.3),
+    "synthC": DataConfig(vocab=512, seq_len=128, global_batch=8, seed=99,
+                         n_states=24, temperature=0.2),
+}
+
+TRAIN_STEPS = 200
+
+
+# --------------------------------------------------------------- caching
+
+def _params_path() -> str:
+    return os.path.join(CACHE_DIR, "bench_model.npz")
+
+
+def _calib_path(name: str) -> str:
+    return os.path.join(CACHE_DIR, f"calib_{name}.npz")
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten_like(tree, flat, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}{k}/")
+                for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_unflatten_like(v, flat, f"{prefix}{i}/")
+                          for i, v in enumerate(tree))
+    return jnp.asarray(flat[prefix[:-1]])
+
+
+def trained_params(force: bool = False):
+    """Train (or load) the bench model; returns (params, cfg)."""
+    cfg = BENCH_CFG
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = _params_path()
+    template = lm.init(jax.random.PRNGKey(0), cfg)
+    if os.path.exists(path) and not force:
+        flat = dict(np.load(path))
+        return _unflatten_like(template, flat), cfg
+
+    data = SyntheticLM(BENCH_DATA)
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=10, total_steps=TRAIN_STEPS)
+    state = TrainState(template, adamw.init_state(template))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    t0 = time.time()
+    for i in range(TRAIN_STEPS):
+        state, m = step(state, jax_batch(data.batch_at(i)))
+    print(f"[common] trained bench model {TRAIN_STEPS} steps in "
+          f"{time.time() - t0:.0f}s final loss={float(m['loss']):.3f}")
+    np.savez(path, **_flatten(state.params))
+    return state.params, cfg
+
+
+def calibration(dataset: str = "synthA", n_batches: int = 4,
+                force: bool = False) -> PCA.PCACalibration:
+    """PCA calibration of the bench model's keys on a synthetic corpus."""
+    path = _calib_path(dataset)
+    if os.path.exists(path) and not force:
+        return PCA.PCACalibration.load(path)
+    params, cfg = trained_params()
+    data = SyntheticLM(CALIB_DATASETS[dataset])
+    batches = [jnp.asarray(data.batch_at(1000 + i)["tokens"])
+               for i in range(n_batches)]
+    calib = PCA.calibrate_model(params, cfg, batches)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    calib.save(path)
+    return calib
+
+
+def loki_params(transform: str = "pre", dataset: str = "synthA"):
+    params, cfg = trained_params()
+    return PCA.install_projections(params, calibration(dataset), transform)
+
+
+# ------------------------------------------------------- decode-path eval
+
+def decode_nll(params, cfg: ModelConfig, tokens: np.ndarray,
+               prompt_len: int, smax: Optional[int] = None) -> float:
+    """Teacher-forced NLL through the *decode path* (prefill + per-token
+    decode_step), so every policy's actual serving code is what's scored."""
+    b, s = tokens.shape
+    smax = smax or s + 8
+    toks = jnp.asarray(tokens)
+    lg, cache, pos = lm.prefill(params, cfg, toks[:, :prompt_len], smax,
+                                cache_dtype=jnp.float32)
+
+    @jax.jit
+    def step(cache, tok, pos):
+        return lm.decode_step(params, cfg, cache, tok, pos)
+
+    rows = jnp.arange(b)
+    nll, n = 0.0, 0
+    logits = lg
+    for t in range(prompt_len, s):
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll += float(-lp[rows, toks[:, t]].mean())
+        n += 1
+        logits, cache = step(cache, toks[:, t], pos)
+        pos = pos + 1
+    return nll / n
+
+
+def decode_accuracy(params, cfg: ModelConfig, tokens: np.ndarray,
+                    prompt_len: int) -> float:
+    """Greedy next-token accuracy through the decode path (the downstream
+    'task accuracy' proxy — top-1 agreement with the corpus)."""
+    b, s = tokens.shape
+    toks = jnp.asarray(tokens)
+    lg, cache, pos = lm.prefill(params, cfg, toks[:, :prompt_len], s + 8,
+                                cache_dtype=jnp.float32)
+
+    @jax.jit
+    def step(cache, tok, pos):
+        return lm.decode_step(params, cfg, cache, tok, pos)
+
+    hits, n = 0, 0
+    logits = lg
+    for t in range(prompt_len, s):
+        hits += int((jnp.argmax(logits, -1) == toks[:, t]).sum())
+        n += b
+        logits, cache = step(cache, toks[:, t], pos)
+        pos = pos + 1
+    return hits / n
+
+
+def eval_tokens(n_seqs: int = 8, seq_len: int = 96,
+                seed_step: int = 5000) -> np.ndarray:
+    data = SyntheticLM(BENCH_DATA)
+    rows = []
+    step = seed_step
+    while sum(r.shape[0] for r in rows) < n_seqs:
+        rows.append(data.batch_at(step)["tokens"][:, :seq_len])
+        step += 1
+    return np.concatenate(rows, axis=0)[:n_seqs]
+
+
+def policy_cfg(policy: str, k_f: float = 0.25, d_f: float = 0.25,
+               transform: str = "pre", **kw) -> ModelConfig:
+    cfg = BENCH_CFG
+    if policy == "full":
+        return cfg
+    return cfg.with_policy(policy, k_f=k_f, d_f=d_f, transform=transform,
+                           **kw)
+
+
+# ------------------------------------------------------------ timing/io
+
+def time_fn(fn: Callable[[], None], *, repeats: int = 10,
+            warmup: int = 2) -> float:
+    """Median wall-seconds of fn() (fn must block_until_ready itself)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows: List[Dict], name: str) -> List[Dict]:
+    """Print CSV rows and persist them under experiments/bench/."""
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    for r in rows:
+        print(",".join(f"{k}={v:.6g}" if isinstance(v, float)
+                       else f"{k}={v}" for k, v in r.items()))
+    return rows

@@ -1,0 +1,58 @@
+"""Benchmark harness: one suite per paper table/figure (see DESIGN.md §7).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # all suites
+    PYTHONPATH=src python -m benchmarks.run rank jaccard
+
+Prints CSV-ish rows and persists JSON under experiments/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = {
+    "rank": ("benchmarks.bench_rank_analysis", "Fig 1/2 + App A: Rank@90"),
+    "perplexity": ("benchmarks.bench_perplexity", "Table 2: ppl by policy"),
+    "downstream": ("benchmarks.bench_downstream", "Fig 5/Tables 3-4: acc"),
+    "jaccard": ("benchmarks.bench_jaccard", "Fig 6 left: top-k agreement"),
+    "generalization": ("benchmarks.bench_generalization",
+                       "Fig 6 mid: calib datasets"),
+    "attention_time": ("benchmarks.bench_attention_time",
+                       "Fig 6 right/Fig 7: attn time + bytes"),
+    "kernels": ("benchmarks.bench_kernels", "App C: kernel sweep + bytes"),
+    "pcaattn": ("benchmarks.bench_pcaattn", "App E/Table 5: PCAAttn"),
+    "block_topk": ("benchmarks.bench_block_topk",
+                   "ours: block vs token select"),
+    "chunked": ("benchmarks.bench_chunked",
+                "ours: chunk-local vs global selection"),
+    "theory": ("benchmarks.bench_theory", "Eq 5: speedup vs HLO FLOPs"),
+}
+
+
+def main() -> None:
+    import importlib
+    names = sys.argv[1:] or list(SUITES)
+    t_all = time.time()
+    failures = []
+    for name in names:
+        mod_name, desc = SUITES[name]
+        print(f"\n=== {name}: {desc} ===")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.run()
+            print(f"--- {name} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # keep the sweep going; report at the end
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\ntotal {time.time() - t_all:.1f}s")
+    if failures:
+        print(f"{len(failures)} suite failures: {failures}")
+        sys.exit(1)
+    print("all benchmark suites OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Quickstart: Loki sparse attention end to end on a small model, on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's full pipeline:
+  1. train a small Llama-family LM briefly on structured synthetic data
+  2. calibrate PCA transforms over its attention keys (paper §3)
+  3. report Rank@90 (the low-dimensionality observation, Fig 1/2)
+  4. generate with full attention vs Loki (k_f = d_f = 0.25) and compare
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import pca as PCA
+from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
+from repro.models import lm
+from repro.optim import adamw
+from repro.training.step import TrainState, make_train_step
+
+
+def main():
+    cfg = ModelConfig(arch="quickstart", family="dense", n_layers=4,
+                      d_model=256, n_heads=4, n_kv_heads=4, d_ff=512,
+                      vocab=512, mlp="swiglu", dtype="float32")
+    dcfg = DataConfig(vocab=512, seq_len=128, global_batch=8, seed=7,
+                      n_states=32, temperature=0.22)
+    data = SyntheticLM(dcfg)
+
+    # 1. brief training so attention concentrates (what top-k exploits)
+    print("== 1. training a ~3M-param model for 120 steps ==")
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=10, total_steps=120)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    state = TrainState(params, adamw.init_state(params))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    t0 = time.time()
+    for i in range(120):
+        state, m = step(state, jax_batch(data.batch_at(i)))
+        if i % 30 == 0:
+            print(f"  step {i:4d} loss {float(m['loss']):.3f}")
+    print(f"  done in {time.time()-t0:.0f}s, loss {float(m['loss']):.3f}")
+
+    # 2. PCA calibration over captured keys (paper Section 3)
+    print("== 2. PCA calibration of attention keys ==")
+    batches = [jnp.asarray(data.batch_at(1000 + i)["tokens"])
+               for i in range(3)]
+    calib = PCA.calibrate_model(state.params, cfg, batches)
+
+    # 3. the paper's observation: keys are low-rank
+    r_pre = calib.rank_at(0.90, "pre").mean(axis=1)
+    r_post = calib.rank_at(0.90, "post").mean(axis=1)
+    print(f"  head_dim = {cfg.resolved_head_dim}")
+    print(f"  Rank@90 per layer, pre-rotary : {np.round(r_pre, 1)}")
+    print(f"  Rank@90 per layer, post-rotary: {np.round(r_post, 1)}")
+    print("  -> keys live in a much lower-dimensional space (Fig 1/2)")
+
+    # 4. generate with full attention vs Loki
+    print("== 3. greedy generation: full attention vs Loki ==")
+    loki_params = PCA.install_projections(state.params, calib, "pre")
+    prompt = jnp.asarray(data.batch_at(5000)["tokens"][:2, :48])
+
+    def generate(params, c, n_new=24):
+        lg, cache, pos = lm.prefill(params, c, prompt, smax=96,
+                                    cache_dtype=jnp.float32)
+        dec = jax.jit(lambda cc, t, p: lm.decode_step(params, c, cc, t, p))
+        toks = []
+        tok = jnp.argmax(lg, -1)
+        for _ in range(n_new):
+            toks.append(np.asarray(tok))
+            lg, cache = dec(cache, tok, pos)
+            pos = pos + 1
+            tok = jnp.argmax(lg, -1)
+        return np.stack(toks, 1)
+
+    full_out = generate(state.params, cfg)
+    loki_cfg = cfg.with_loki(k_f=0.25, d_f=0.25)
+    loki_out = generate(loki_params, loki_cfg)
+    agree = (full_out == loki_out).mean()
+    print(f"  full: {full_out[0][:12]}...")
+    print(f"  loki: {loki_out[0][:12]}...")
+    print(f"  greedy-token agreement over 24 new tokens: {agree:.2%}")
+    print("  (Loki reads ~d_f/2 + k_f = 37.5% of the KV-cache bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end fault-tolerant training driver (deliverable b).
+
+Trains a ~100M-parameter (full flag) or ~3M (default, CPU-friendly) dense LM
+for a few hundred steps through the production runner: async atomic
+checkpointing, an injected node failure mid-run, automatic restart +
+bit-exact resume, straggler accounting, and gradient compression on.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200] [--full]
+"""
+import argparse
+import os
+import shutil
+import tempfile
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.synthetic import DataConfig
+from repro.training.runner import (FailureInjector, TrainRunner,
+                                   run_with_restarts)
+
+
+def model_cfg(full: bool) -> ModelConfig:
+    if full:    # ~100M params
+        return ModelConfig(arch="e2e-100m", family="dense", n_layers=12,
+                           d_model=768, n_heads=12, n_kv_heads=4,
+                           d_ff=2048, vocab=32768, mlp="swiglu",
+                           dtype="float32")
+    return ModelConfig(arch="e2e-small", family="dense", n_layers=4,
+                       d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+                       vocab=512, mlp="swiglu", dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (slow on CPU)")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step "
+                         "(default: mid-run)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = model_cfg(args.full)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=8, seed=7,
+                      n_states=32, temperature=0.22)
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                       grad_clip=1.0, nan_skip=True,
+                       grad_compression="topk", compression_ratio=0.05)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_e2e_")
+    fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
+    print(f"model={cfg.arch} steps={args.steps} ckpt={ckpt_dir} "
+          f"injected-failure@{fail_at}")
+
+    def make_runner():
+        return TrainRunner(cfg, tcfg, dcfg, ckpt_dir, ckpt_every=20, keep=2)
+
+    injector = FailureInjector(fail_at=fail_at)
+    result = run_with_restarts(make_runner, args.steps, injector=injector)
+
+    losses = [m["loss"] for m in result["metrics"]]
+    print(f"survived injected failure; resumed from checkpoint and finished "
+          f"{result['final_step']} steps")
+    print(f"loss: first={losses[0]:.3f} last={losses[-1]:.3f} "
+          f"stragglers={result['stragglers']}")
+    assert losses[-1] < losses[0], "training did not make progress"
+    if args.ckpt_dir is None:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The config is a
+plain frozen dataclass (hashable -> usable as a jit static arg) and fully
+determines parameter shapes, block composition and sharding-relevant dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0          # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba (S6) / xLSTM state settings."""
+    state_dim: int = 16           # N: per-channel state size (mamba) / head qk dim (mlstm)
+    expand: int = 2               # d_inner = expand * d_model (mamba)
+    conv_width: int = 4
+    n_heads: int = 4              # mlstm/slstm heads
+
+
+@dataclasses.dataclass(frozen=True)
+class LokiConfig:
+    """Paper technique knobs (Section 4)."""
+    enabled: bool = False
+    d_f: float = 0.25             # fraction of head_dim used for approximate scores
+    k_f: float = 0.25             # fraction of tokens kept for exact attention
+    transform: str = "pre"        # calibration covariance source: "pre"|"post" rotary
+    block_size: int = 128         # block granularity of the TPU (Pallas) select path
+    token_granular: bool = True   # XLA path: paper-faithful token-level top-k
+    min_k: int = 16               # never select fewer than this many tokens
+    local_window: int = 16        # always-keep recency window (attention-sink safety)
+    # distributed selection: split the cache into n_chunks sequence chunks and
+    # take top-(k/n_chunks) per chunk. Aligned with the kv_seq sharding this
+    # keeps every gather shard-local (no cross-device cache movement) — the
+    # TPU-native adaptation of the paper's token top-k (DESIGN.md §3).
+    # 0 = global top-k (paper-faithful; GSPMD-hostile at scale).
+    n_chunks: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str = "model"
+    family: str = "dense"         # dense|moe|hybrid|ssm|encdec|vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab: int = 256
+    mlp: str = "swiglu"           # swiglu|geglu|sq_relu|gelu
+    norm: str = "rms"             # rms|ln
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    rope: bool = True
+    sliding_window: int = 0       # 0 = disabled (mixtral SWA)
+    logit_softcap: float = 0.0
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    loki: LokiConfig = dataclasses.field(default_factory=LokiConfig)
+    # decode attention policy: full|loki|loki_block|exact_topk|pcaattn|h2o
+    policy: str = "full"
+    # hybrid: which layers are attention (hymba runs attn ∥ mamba inside a block)
+    hybrid_parallel: bool = False
+    # ssm (xlstm): 1-in-`slstm_every` blocks is an sLSTM block, rest mLSTM
+    slstm_every: int = 0
+    # enc-dec (whisper)
+    is_encoder_decoder: bool = False
+    enc_layers: int = 0
+    enc_seq: int = 1500           # whisper: fixed 30s -> 1500 frames
+    # vlm
+    vision_tokens: int = 0        # patch embeddings prepended by the stub frontend
+    dtype: str = "bfloat16"       # activation/compute dtype
+    param_dtype: str = "float32"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.resolved_head_dim
+
+    def attn_policy(self) -> str:
+        return self.policy
+
+    def with_policy(self, policy: str, **loki_kw) -> "ModelConfig":
+        lk = dataclasses.replace(
+            self.loki, enabled=policy in ("loki", "loki_block"), **loki_kw)
+        return dataclasses.replace(self, policy=policy, loki=lk)
+
+    def with_loki(self, **kw) -> "ModelConfig":
+        lk = dataclasses.replace(self.loki, enabled=True, **kw)
+        return dataclasses.replace(self, policy="loki", loki=lk)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in SHAPES]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    microbatch: int = 0           # 0 = no accumulation
+    remat: str = "none"           # none|full|dots
+    z_loss: float = 1e-4
+    seed: int = 0
+    # distributed-optimization knobs
+    grad_compression: str = "none"   # none|topk|int8 (cross-pod reduction)
+    compression_ratio: float = 0.01  # topk: fraction of grads communicated
+    nan_skip: bool = True            # skip steps with non-finite grads

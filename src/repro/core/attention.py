@@ -1,0 +1,171 @@
+"""Attention: full (train/prefill, memory-bounded chunked softmax) + decode.
+
+Decode-time attention is expressed as pluggable *policies* (full, exact-topk,
+Loki, PCAAttn, H2O) — see loki.py / baselines.py. This module holds the shared
+math: GQA-aware score computation, chunked causal attention for long
+sequences (flash-style online softmax in pure jnp, so it lowers everywhere),
+and masking helpers.
+
+Shapes (conventions used throughout the framework):
+  q          (B, S, H,   Dh)
+  k, v       (B, S, Hkv, Dh)
+  kv cache   (B, Smax, Hkv, Dh)
+  decode q   (B, H, Dh)        — a single new token per slot
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain
+
+NEG_INF = -1e30
+
+
+def _group(q, n_kv):
+    """(B,S,H,D) -> (B,S,Hkv,G,D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def causal_attention(q, k, v, *, causal=True, sliding_window=0,
+                     chunk=512, logit_scale=None):
+    """Chunked (online-softmax) attention. Memory O(S * chunk) not O(S^2).
+
+    q (B,S,H,D); k,v (B,S,Hkv,D). Returns (B,S,H,D).
+    """
+    b, s, h, d = q.shape
+    sk = k.shape[1]
+    n_kv = k.shape[2]
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    qg = _group(q, n_kv) * scale                       # (B,S,Hkv,G,D)
+    chunk = min(chunk, s)
+    n_chunks = s // chunk if s % chunk == 0 else 1
+    if s % chunk != 0:
+        chunk = s
+
+    kT = jnp.swapaxes(k, 1, 2)                         # (B,Hkv,Sk,D)
+    vT = jnp.swapaxes(v, 1, 2)
+
+    kv_pos = jnp.arange(sk)
+
+    def one_chunk(ci, qc):
+        # qc: (B,chunk,Hkv,G,D)
+        q_pos = ci * chunk + jnp.arange(chunk)
+        qc = constrain(qc, ("batch", "act_seq", "kv_heads", "heads", None))
+        scores = jnp.einsum("bchgd,bhsd->bhgcs", qc, kT,
+                            preferred_element_type=jnp.float32)
+        # TP fallback chain: kv_heads if divisible, else q-group, else the
+        # q-chunk (sequence parallel) — spec_for dedups left to right
+        scores = constrain(scores,
+                           ("batch", "kv_heads", "heads", "act_seq", None))
+        mask = jnp.ones((chunk, sk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if sliding_window:
+            mask &= q_pos[:, None] - kv_pos[None, :] < sliding_window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhgcs,bhsd->bchgd", w, vT)
+        return constrain(o, ("batch", "act_seq", "kv_heads", "heads", None))
+
+    if n_chunks == 1:
+        out = one_chunk(0, qg)
+    else:
+        qs = qg.reshape(b, n_chunks, chunk, n_kv, h // n_kv, d)
+        qs = jnp.swapaxes(qs, 0, 1)                    # (n,B,chunk,Hkv,G,D)
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(n_chunks), qs))
+        out = jnp.swapaxes(out, 0, 1).reshape(b, s, n_kv, h // n_kv, d)
+    out = out.reshape(b, s, h, d)
+    return constrain(out, ("batch", "seq", "heads", "head_dim"))
+
+
+def cross_attention(q, k, v, chunk=512):
+    return causal_attention(q, k, v, causal=False, chunk=chunk)
+
+
+# ------------------------------------------------------------ decode scores
+
+def decode_scores(q, k_cache, *, d_slice: Optional[int] = None,
+                  logit_scale=None):
+    """Scores of one new token against the cache.
+
+    q (B,H,D), k_cache (B,Smax,Hkv,D) -> (B,Hkv,G,Smax) fp32 (unmasked).
+    ``d_slice`` restricts the contraction to the first d feature dims
+    (Loki's approximate scoring — contiguous slice, the paper's key trick).
+    """
+    b, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    qg = q.reshape(b, n_kv, h // n_kv, d)
+    if d_slice is not None and d_slice < d:
+        qg = qg[..., :d_slice]
+        k_cache = k_cache[..., :d_slice]
+    return jnp.einsum("bhgd,bshd->bhgs", qg * scale, k_cache,
+                      preferred_element_type=jnp.float32)
+
+
+def length_mask(smax: int, cur_len, extra=None):
+    """(Smax,) or (B,1,1,Smax) validity mask for cache positions < cur_len."""
+    pos = jnp.arange(smax)
+    if jnp.ndim(cur_len) == 0:
+        m = pos < cur_len
+        return m[None, None, None, :]
+    m = pos[None, :] < cur_len[:, None]            # (B,Smax)
+    return m[:, None, None, :]
+
+
+def window_mask(smax: int, cur_len, window: int):
+    pos = jnp.arange(smax)
+    if jnp.ndim(cur_len) == 0:
+        m = pos >= cur_len - window
+        return m[None, None, None, :]
+    m = pos[None, :] >= (cur_len[:, None] - window)
+    return m[:, None, None, :]
+
+
+def decode_full(q, k_cache, v_cache, cur_len, *, sliding_window=0,
+                logit_scale=None):
+    """Vanilla decode attention over the whole (valid) cache."""
+    scores = decode_scores(q, k_cache, logit_scale=logit_scale)
+    m = length_mask(k_cache.shape[1], cur_len)
+    if sliding_window:
+        m = m & window_mask(k_cache.shape[1], cur_len, sliding_window)
+    scores = jnp.where(m, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache)
+    b, _, _, d = out.shape
+    return out.reshape(b, q.shape[1], d)
+
+
+def gather_heads(cache, idx):
+    """Gather cache rows per (kv-head, group).
+
+    cache (B,S,Hkv,D), idx (B,Hkv,G,K) -> (B,Hkv,G,K,D)."""
+    b, s, n_kv, d = cache.shape
+    g, k = idx.shape[2], idx.shape[3]
+    c = jnp.swapaxes(cache, 1, 2)                      # (B,Hkv,S,D)
+    flat = idx.reshape(b, n_kv, g * k)                 # no G-fold broadcast
+    out = jnp.take_along_axis(c, flat[..., None], axis=2)
+    out = out.reshape(b, n_kv, g, k, d)
+    return constrain(out, ("batch", "kv_heads", None, None, None))
+
+
+def attend_selected(q, k_sel, v_sel, valid, *, logit_scale=None):
+    """Exact attention over a selected key subset.
+
+    q (B,H,D); k_sel, v_sel (B,Hkv,G,K,D); valid (B,Hkv,G,K) bool."""
+    b, h, d = q.shape
+    n_kv = k_sel.shape[1]
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    qg = q.reshape(b, n_kv, h // n_kv, d) * scale
+    scores = jnp.einsum("bhgd,bhgkd->bhgk", qg, k_sel,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_sel.dtype)
+    out = jnp.einsum("bhgk,bhgkd->bhgd", w, v_sel)
+    return out.reshape(b, h, d)

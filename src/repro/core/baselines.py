@@ -1,0 +1,128 @@
+"""Sparse-attention baselines the paper compares against (Section 5, Table 1).
+
+* exact top-k — full-dimensionality scores, then top-k (quality upper bound
+  for Loki; no speedup).
+* H2O — heavy-hitter token eviction with a fixed-budget cache (half heavy
+  hitters by accumulated attention mass, half recent), permanent deletion.
+* PCAAttn — appendix E ablation: attention computed *directly* from the
+  truncated d-dim PCA keys (known to fail; reproduced as a negative control).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LokiConfig
+from repro.core.attention import (NEG_INF, attend_selected, decode_full,
+                                  decode_scores, gather_heads, length_mask)
+from repro.core.loki import select_topk
+
+
+def exact_topk_decode(q_rope, k_cache, v_cache, cur_len, cfg: LokiConfig,
+                      *, logit_scale=None):
+    """Top-k over *exact* scores, exact attention over the selection."""
+    smax = k_cache.shape[1]
+    scores = decode_scores(q_rope, k_cache, logit_scale=logit_scale)
+    scores = jnp.where(length_mask(smax, cur_len), scores, NEG_INF)
+    idx, valid = select_topk(scores, cfg, cur_len, smax)
+    k_sel = gather_heads(k_cache, idx)
+    v_sel = gather_heads(v_cache, idx)
+    return attend_selected(q_rope, k_sel, v_sel, valid,
+                           logit_scale=logit_scale)
+
+
+def pcaattn_decode(q_rope, k_hat_cache_d, v_cache, cur_len, proj,
+                   cfg: LokiConfig, *, logit_scale=None):
+    """Appendix E: softmax over truncated-basis scores directly.
+
+    k_hat_cache_d (B,Smax,Hkv,d) stores ONLY the first d PCA dims (this
+    variant does shrink the K half of the cache by d/D)."""
+    b, h, dim = q_rope.shape
+    d = k_hat_cache_d.shape[-1]
+    n_kv = proj.shape[0]
+    qg = q_rope.reshape(b, n_kv, h // n_kv, dim)
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg,
+                       proj[..., :d].astype(q_rope.dtype))
+    q_hat = q_hat.reshape(b, h, d)
+    # NOTE scores scaled by sqrt(D) (paper Algorithm 2 line 6), not sqrt(d)
+    scale = logit_scale if logit_scale is not None else dim ** -0.5
+    scores = decode_scores(q_hat, k_hat_cache_d, logit_scale=scale)
+    scores = jnp.where(length_mask(k_hat_cache_d.shape[1], cur_len),
+                       scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache)
+    return out.reshape(b, h, v_cache.shape[-1])
+
+
+# ----------------------------------------------------------------- H2O
+
+class H2OState(NamedTuple):
+    """Fixed-budget eviction cache. Slots [0, budget)."""
+    k: jax.Array          # (B, budget, Hkv, D)
+    v: jax.Array          # (B, budget, Hkv, D)
+    pos: jax.Array        # (B, budget) original positions, -1 = empty
+    acc: jax.Array        # (B, Hkv, budget) accumulated attention mass
+    fill: jax.Array       # (B,) number of live slots
+
+
+def h2o_init(batch, budget, n_kv, d, dtype=jnp.bfloat16) -> H2OState:
+    return H2OState(
+        k=jnp.zeros((batch, budget, n_kv, d), dtype),
+        v=jnp.zeros((batch, budget, n_kv, d), dtype),
+        pos=jnp.full((batch, budget), -1, jnp.int32),
+        acc=jnp.zeros((batch, n_kv, budget), jnp.float32),
+        fill=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def h2o_decode(q_rope, k_new, v_new, state: H2OState, step, *,
+               recent_frac=0.5, logit_scale=None):
+    """One H2O decode step: attend over the budget cache, accumulate scores,
+    insert the new token (evicting the weakest non-recent heavy hitter when
+    full). Returns (out (B,H,D), new_state).
+
+    step: (B,) or scalar current position of the new token.
+    """
+    b, h, d = q_rope.shape
+    budget = state.k.shape[1]
+    n_kv = state.k.shape[2]
+    step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (b,))
+
+    # 1. insert new token first (so it can be attended this step)
+    full = state.fill >= budget
+    recent_slots = int(budget * recent_frac)
+    # eviction candidates: non-recent region by original position rank.
+    # slots are kept unsorted; "recent" = pos within (step - recent_slots).
+    is_recent = state.pos >= (step[:, None] - recent_slots)
+    score_for_evict = state.acc.mean(axis=1)                   # (B,budget)
+    score_for_evict = jnp.where(is_recent | (state.pos < 0),
+                                jnp.inf, score_for_evict)
+    evict_slot = jnp.argmin(score_for_evict, axis=-1)          # (B,)
+    slot = jnp.where(full, evict_slot, state.fill)
+
+    def put(arr, upd):
+        return arr.at[jnp.arange(b), slot].set(upd.astype(arr.dtype))
+
+    k_cache = put(state.k, k_new)
+    v_cache = put(state.v, v_new)
+    pos = state.pos.at[jnp.arange(b), slot].set(step)
+    acc = jnp.swapaxes(state.acc, 1, 2).at[jnp.arange(b), slot].set(0.0)
+    acc = jnp.swapaxes(acc, 1, 2)
+    fill = jnp.minimum(state.fill + 1, budget)
+
+    # 2. attend over live slots
+    scale = logit_scale if logit_scale is not None else d ** -0.5
+    qg = q_rope.reshape(b, n_kv, h // n_kv, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg * scale, k_cache,
+                        preferred_element_type=jnp.float32)
+    live = pos >= 0                                            # (B,budget)
+    scores = jnp.where(live[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(v_cache.dtype), v_cache)
+
+    # 3. accumulate attention mass (mean over query groups, the H2O oracle)
+    acc = acc + w.mean(axis=2)
+    return (out.reshape(b, h, d),
+            H2OState(k_cache, v_cache, pos, acc, fill))

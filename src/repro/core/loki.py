@@ -1,0 +1,252 @@
+"""Loki: PCA-based top-k sparse decode attention (paper Algorithm 1).
+
+The decode KV cache stores keys **in the PCA basis** (K̂ = K_rope @ P, full D
+— no memory overhead, Lemma 4.1 makes attention in that basis exact). Each
+step:
+
+  1. q̂ = q_rope @ P                                        (O(D²))
+  2. approx scores from the first d = d_f·D components      (O(dS))
+  3. top-k (k = k_f·S) token indices from approx scores     (O(S log S))
+  4. exact attention over the selected keys/values only     (O(2Dk))
+
+Two selection granularities:
+  * token (paper-faithful, default for the XLA path / dry-run lowering)
+  * block of ``block_size`` tokens (TPU Pallas path — see kernels/, selection
+    over per-block score maxima; DESIGN.md §3 justifies the adaptation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LokiConfig
+from repro.core.attention import (NEG_INF, attend_selected, decode_scores,
+                                  gather_heads, length_mask, window_mask)
+
+
+def project_qk(q, k, proj):
+    """Rotate post-RoPE q/k into the PCA basis.
+
+    q (B,H,D), k (B,Hkv,D) or (B,S,Hkv,D); proj (Hkv,D,D).
+    Query heads use their kv-group's projection."""
+    n_kv = proj.shape[0]
+    b = q.shape[0]
+    h = q.shape[1]
+    qg = q.reshape(b, n_kv, h // n_kv, q.shape[-1])
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q.dtype))
+    q_hat = q_hat.reshape(b, h, q.shape[-1])
+    if k.ndim == 3:                                  # (B,Hkv,D) single token
+        k_hat = jnp.einsum("bhd,hde->bhe", k, proj.astype(k.dtype))
+    else:                                            # (B,S,Hkv,D)
+        k_hat = jnp.einsum("bshd,hde->bshe", k, proj.astype(k.dtype))
+    return q_hat, k_hat
+
+
+def static_k(cfg: LokiConfig, smax: int) -> int:
+    k = max(int(cfg.k_f * smax), cfg.min_k)
+    return min(k, smax)
+
+
+def select_topk(approx_scores, cfg: LokiConfig, cur_len, smax: int):
+    """Token-granular selection. approx_scores (B,Hkv,G,S) fp32 (masked).
+
+    Returns (idx (B,Hkv,G,K), valid (B,Hkv,G,K)). K is static (k_f * Smax);
+    entries beyond k_f*cur_len are marked invalid so quality tracks the
+    *dynamic* budget the paper uses while shapes stay jit-stable."""
+    k = static_k(cfg, smax)
+    _, idx = jax.lax.top_k(approx_scores, k)
+    # dynamic budget: only the first k_f*cur_len (>= min_k) picks are live
+    live = jnp.maximum((cfg.k_f * cur_len).astype(jnp.int32), cfg.min_k)
+    ranks = jnp.arange(k)
+    if jnp.ndim(cur_len) == 0:
+        valid = ranks < live
+        valid = jnp.broadcast_to(valid, idx.shape)
+    else:
+        valid = ranks[None, :] < live[:, None]       # (B,K)
+        valid = jnp.broadcast_to(valid[:, None, None, :], idx.shape)
+    # positions past cur_len were masked to NEG_INF; drop them too
+    taken = jnp.take_along_axis(approx_scores, idx, axis=-1)
+    valid = valid & (taken > NEG_INF / 2)
+    return idx, valid
+
+
+def loki_decode_chunked(q_rope, k_hat_cache, v_cache, cur_len, proj,
+                        cfg: LokiConfig, *, sliding_window: int = 0,
+                        logit_scale: Optional[float] = None):
+    """Distributed Loki: per-chunk local top-k (k/n_chunks each), exact
+    attention over the union of selections.
+
+    With the cache's sequence dim sharded n_chunks-way, every top-k and
+    gather is device-local; only (B,H)-sized softmax statistics cross the
+    interconnect. Equals global-top-k Loki when the score mass is spread
+    (measured in benchmarks/bench_jaccard.py) and is *exact* at k_f=1."""
+    from repro.sharding.rules import constrain
+    b, h, dim = q_rope.shape
+    smax = k_hat_cache.shape[1]
+    nc = cfg.n_chunks
+    assert nc > 0 and smax % nc == 0
+    sc = smax // nc
+    d = max(int(cfg.d_f * dim), 8)
+    n_kv = proj.shape[0]
+    g = h // n_kv
+
+    qg = q_rope.reshape(b, n_kv, g, dim)
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    scale = logit_scale if logit_scale is not None else dim ** -0.5
+
+    # chunk view of the cache: (B, nc, Sc, Hkv, D); nc rides the kv_seq shards
+    kc = k_hat_cache.reshape(b, nc, sc, n_kv, dim)
+    kc = constrain(kc, ("batch", "kv_seq", None, "kv_heads", None))
+    vc = v_cache.reshape(b, nc, sc, n_kv, dim)
+    vc = constrain(vc, ("batch", "kv_seq", None, "kv_heads", None))
+
+    # approximate scores from the leading d PCA dims, chunk-local
+    approx = jnp.einsum("bhgd,bcshd->bhgcs", (q_hat * scale)[..., :d],
+                        kc[..., :d],
+                        preferred_element_type=jnp.float32)  # (B,Hkv,G,nc,Sc)
+    # keep scores batch- and chunk-sharded: without this GSPMD replicates the
+    # (B,Hkv,G,nc,Sc) tensor across the data axis to run one global sort
+    # (§Perf L1: 10.3 GB all-gather + 14.5 GB sort per step)
+    approx = constrain(approx, ("batch", "kv_heads", None, "kv_seq", None))
+    pos = jnp.arange(smax).reshape(nc, sc)
+    if jnp.ndim(cur_len) == 0:
+        live = pos[None] < cur_len
+    else:
+        live = pos[None] < cur_len[:, None, None]
+    live = live[:, None, None]                         # (B,1,1,nc,Sc)
+    if sliding_window:
+        lo = (cur_len - sliding_window)
+        win = (pos[None] >= (lo if jnp.ndim(cur_len) == 0
+                             else lo[:, None, None]))[:, None, None]
+        live = live & win
+    if cfg.local_window:
+        rec = (pos[None] >= ((cur_len - cfg.local_window)
+                             if jnp.ndim(cur_len) == 0
+                             else (cur_len - cfg.local_window)[:, None, None])
+               )[:, None, None]
+        approx = jnp.where(rec, jnp.float32(1e4) + approx, approx)
+    approx = jnp.where(live, approx, NEG_INF)
+
+    kpc = max(static_k(cfg, smax) // nc, 1)            # picks per chunk
+    # §Perf L2: argsort-based selection instead of lax.top_k. XLA lowers
+    # top_k to an opaque TopK custom-call with no SPMD partitioning rule, so
+    # GSPMD all-gathers the full (B,...,S) score tensor to every device and
+    # sorts globally. A plain sort HLO partitions over the non-sort dims,
+    # keeping selection chunk-local.
+    order = jnp.argsort(approx, axis=-1, descending=True)
+    idx = order[..., :kpc]                             # (B,Hkv,G,nc,kpc)
+    idx = constrain(idx, ("batch", "kv_heads", None, "kv_seq", None))
+    top_s = jnp.take_along_axis(approx, idx, axis=-1)
+    valid = top_s > NEG_INF / 2
+
+    # chunk-local gathers (operand + index sharded identically on nc)
+    kcx = jnp.swapaxes(kc, 2, 3)                       # (B,nc,Hkv,Sc,D)
+    vcx = jnp.swapaxes(vc, 2, 3)
+    kcx = constrain(kcx, ("batch", "kv_seq", "kv_heads", None, None))
+    vcx = constrain(vcx, ("batch", "kv_seq", "kv_heads", None, None))
+    idx_g = jnp.moveaxis(idx, 3, 1).reshape(b, nc, n_kv, g * kpc)
+    idx_g = constrain(idx_g, ("batch", "kv_seq", "kv_heads", None))
+    k_sel = jnp.take_along_axis(kcx, idx_g[..., None], axis=3)
+    v_sel = jnp.take_along_axis(vcx, idx_g[..., None], axis=3)
+    k_sel = constrain(k_sel, ("batch", "kv_seq", "kv_heads", None, None))
+    v_sel = constrain(v_sel, ("batch", "kv_seq", "kv_heads", None, None))
+    k_sel = k_sel.reshape(b, nc, n_kv, g, kpc, dim)
+    v_sel = v_sel.reshape(b, nc, n_kv, g, kpc, dim)
+
+    # exact scores over the union; softmax across (nc, kpc) jointly
+    scores = jnp.einsum("bhgd,bchgkd->bhgck", q_hat * scale, k_sel,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(valid, scores, NEG_INF)         # (B,Hkv,G,nc,kpc)
+    m = jnp.max(scores, axis=(3, 4), keepdims=True)
+    w = jnp.exp(scores - m)
+    den = jnp.sum(w, axis=(3, 4), keepdims=True)
+    w = (w / jnp.maximum(den, 1e-30)).astype(v_sel.dtype)
+    out = jnp.einsum("bhgck,bchgkd->bhgd", w, v_sel)
+    return out.reshape(b, h, dim)
+
+
+def loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
+                cfg: LokiConfig, *, sliding_window: int = 0,
+                logit_scale: Optional[float] = None):
+    """Decode attention with Loki (Algorithm 1, lines 3-9).
+
+    q_rope       (B,H,D)    post-RoPE query (original basis)
+    k_hat_cache  (B,Smax,Hkv,D) keys already in PCA basis
+    v_cache      (B,Smax,Hkv,D)
+    proj         (Hkv,D,D)  PCA projection for this layer
+    Returns (B,H,D).
+    """
+    b, h, dim = q_rope.shape
+    smax = k_hat_cache.shape[1]
+    d = max(int(cfg.d_f * dim), 8)
+
+    # line 3: rotate the query into the PCA basis
+    n_kv = proj.shape[0]
+    qg = q_rope.reshape(b, n_kv, h // n_kv, dim)
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    q_hat = q_hat.reshape(b, h, dim)
+
+    # line 5: approximate scores from the leading d PCA components
+    approx = decode_scores(q_hat, k_hat_cache, d_slice=d,
+                           logit_scale=logit_scale)
+    m = length_mask(smax, cur_len)
+    if sliding_window:
+        m = m & window_mask(smax, cur_len, sliding_window)
+    if cfg.local_window:
+        # optionally force-include a recency window by inflating its scores
+        recent = window_mask(smax, cur_len, cfg.local_window)
+        approx = jnp.where(recent, jnp.float32(1e4) + approx, approx)
+    approx = jnp.where(m, approx, NEG_INF)
+
+    # lines 6-7: select + gather
+    idx, valid = select_topk(approx, cfg, cur_len, smax)
+    k_sel = gather_heads(k_hat_cache, idx)
+    v_sel = gather_heads(v_cache, idx)
+
+    # lines 8-9: exact attention in the PCA basis over the selection
+    return attend_selected(q_hat, k_sel, v_sel, valid,
+                           logit_scale=logit_scale)
+
+
+def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
+                      cfg: LokiConfig, *, logit_scale=None):
+    """Block-granular Loki (the TPU-native formulation; jnp reference).
+
+    Selection happens over per-block maxima of the approximate scores, and
+    exact attention runs over the union of selected blocks. This is the
+    oracle for kernels/gather_attention.py."""
+    b, h, dim = q_rope.shape
+    smax = k_hat_cache.shape[1]
+    bs = cfg.block_size
+    assert smax % bs == 0, "cache length must be a multiple of block_size"
+    d = max(int(cfg.d_f * dim), 8)
+    n_blocks = smax // bs
+
+    n_kv = proj.shape[0]
+    qg = q_rope.reshape(b, n_kv, h // n_kv, dim)
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    q_hat = q_hat.reshape(b, h, dim)
+
+    approx = decode_scores(q_hat, k_hat_cache, d_slice=d,
+                           logit_scale=logit_scale)
+    approx = jnp.where(length_mask(smax, cur_len), approx, NEG_INF)
+    blk = approx.reshape(*approx.shape[:-1], n_blocks, bs).max(-1)
+
+    k_blocks = max(int(cfg.k_f * n_blocks), 1)
+    _, bidx = jax.lax.top_k(blk, k_blocks)              # (B,Hkv,G,kb)
+    taken = jnp.take_along_axis(blk, bidx, axis=-1)
+    bvalid = taken > NEG_INF / 2
+
+    # expand block indices -> token indices (kb*bs,)
+    tok = bidx[..., None] * bs + jnp.arange(bs)
+    idx = tok.reshape(*tok.shape[:-2], k_blocks * bs)
+    valid = jnp.broadcast_to(bvalid[..., None], tok.shape)
+    valid = valid.reshape(idx.shape)
+    valid = valid & (jnp.take_along_axis(approx, idx, axis=-1) > NEG_INF / 2)
+
+    k_sel = gather_heads(k_hat_cache, idx)
+    v_sel = gather_heads(v_cache, idx)
+    return attend_selected(q_hat, k_sel, v_sel, valid,
+                           logit_scale=logit_scale)

@@ -1,0 +1,164 @@
+"""Offline PCA calibration of attention keys (paper Section 3 + 4.1).
+
+Streaming per-(layer, head) second-moment accumulation over a calibration
+run, eigendecomposition into orthogonal projections P (descending explained
+variance), and the Rank@v analysis of Figures 1/2.
+
+The calibrator is model-agnostic: the LM forward pass is run with
+``capture_keys=True`` which returns pre-rotary and post-rotary keys per layer;
+we accumulate E[k k^T] and E[k] in fp64-ish (fp32 running sums) and finalize
+covariance eigenvectors offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class KeyStats:
+    """Streaming covariance stats for keys of shape (L, Hkv, D)."""
+    sum_outer: np.ndarray   # (L, Hkv, D, D)
+    sum_vec: np.ndarray     # (L, Hkv, D)
+    count: int
+
+    @classmethod
+    def create(cls, n_layers: int, n_kv: int, d: int) -> "KeyStats":
+        return cls(np.zeros((n_layers, n_kv, d, d), np.float64),
+                   np.zeros((n_layers, n_kv, d), np.float64), 0)
+
+    def update(self, keys) -> None:
+        """keys: (L, B, S, Hkv, D) array (one captured forward pass)."""
+        k = np.asarray(keys, np.float64)
+        l, b, s, h, d = k.shape
+        k = np.moveaxis(k, 3, 1).reshape(l, h, b * s, d)
+        self.sum_outer += np.einsum("lhnd,lhne->lhde", k, k)
+        self.sum_vec += k.sum(axis=2)
+        self.count += b * s
+
+    def covariance(self) -> np.ndarray:
+        mu = self.sum_vec / max(self.count, 1)
+        return (self.sum_outer / max(self.count, 1)
+                - np.einsum("lhd,lhe->lhde", mu, mu))
+
+
+def eig_projections(cov: np.ndarray):
+    """Eigendecompose (L,Hkv,D,D) covariances.
+
+    Returns (P, eigvals): P (L,Hkv,D,D) with components as *columns* ordered by
+    descending eigenvalue (so ``k @ P`` puts high-variance dims first), and the
+    normalized eigenvalue spectra (L,Hkv,D), descending.
+    """
+    w, v = np.linalg.eigh(cov)          # ascending
+    w = w[..., ::-1]
+    v = v[..., ::-1]
+    w = np.maximum(w, 0.0)
+    w_norm = w / np.maximum(w.sum(axis=-1, keepdims=True), 1e-12)
+    return v.astype(np.float32), w_norm.astype(np.float32)
+
+
+def rank_at(eigvals: np.ndarray, v: float = 0.90) -> np.ndarray:
+    """Rank_{l,h}@v of Eq. (2): smallest d with cumulative variance >= v."""
+    c = np.cumsum(eigvals, axis=-1)
+    return (c < v).sum(axis=-1) + 1
+
+
+@dataclasses.dataclass
+class PCACalibration:
+    """Result of a calibration pass: projections for both candidate transforms
+    (paper Section 4.1 — Lemma 4.1 holds for any orthogonal P, so both the
+    pre-rotary and post-rotary covariance eigenbases are applied to post-RoPE
+    q/k at inference; which works better is model-dependent)."""
+    proj_pre: np.ndarray        # (L, Hkv, D, D)
+    proj_post: np.ndarray
+    eig_pre: np.ndarray         # (L, Hkv, D) normalized, descending
+    eig_post: np.ndarray
+
+    def projections(self, transform: str) -> np.ndarray:
+        return self.proj_pre if transform == "pre" else self.proj_post
+
+    def rank_at(self, v: float = 0.90, transform: str = "post") -> np.ndarray:
+        eig = self.eig_pre if transform == "pre" else self.eig_post
+        return rank_at(eig, v)
+
+    def save(self, path: str) -> None:
+        np.savez(path, proj_pre=self.proj_pre, proj_post=self.proj_post,
+                 eig_pre=self.eig_pre, eig_post=self.eig_post)
+
+    @classmethod
+    def load(cls, path: str) -> "PCACalibration":
+        z = np.load(path)
+        return cls(z["proj_pre"], z["proj_post"], z["eig_pre"], z["eig_post"])
+
+    @classmethod
+    def identity(cls, n_layers: int, n_kv: int, d: int) -> "PCACalibration":
+        eye = np.broadcast_to(np.eye(d, dtype=np.float32),
+                              (n_layers, n_kv, d, d)).copy()
+        flat = np.full((n_layers, n_kv, d), 1.0 / d, np.float32)
+        return cls(eye, eye.copy(), flat, flat.copy())
+
+
+def calibrate(forward_capture, batches, n_layers: int, n_kv: int,
+              d: int) -> PCACalibration:
+    """Run ``forward_capture(batch) -> (pre_keys, post_keys)`` over calibration
+    batches, each (L,B,S,Hkv,D), and produce both candidate transforms."""
+    st_pre = KeyStats.create(n_layers, n_kv, d)
+    st_post = KeyStats.create(n_layers, n_kv, d)
+    for batch in batches:
+        pre, post = forward_capture(batch)
+        st_pre.update(pre)
+        st_post.update(post)
+    p_pre, e_pre = eig_projections(st_pre.covariance())
+    p_post, e_post = eig_projections(st_post.covariance())
+    return PCACalibration(p_pre, p_post, e_pre, e_post)
+
+
+def calibrate_model(params, cfg, token_batches) -> PCACalibration:
+    """Calibrate PCA transforms for an LM by capturing its keys over token
+    batches (each (B,S) int32). The model-agnostic entry point examples and
+    benchmarks use."""
+    from repro.models import lm
+
+    @jax.jit
+    def capture(tokens):
+        _, _, (pre, post, _q) = lm.forward(params, tokens, cfg,
+                                           capture_keys=True)
+        return pre, post
+
+    def fwd(tokens):
+        pre, post = capture(tokens)
+        return np.asarray(pre), np.asarray(post)
+
+    return calibrate(fwd, token_batches, cfg.n_layers, cfg.n_kv_heads,
+                     cfg.resolved_head_dim)
+
+
+def install_projections(params, calib: "PCACalibration",
+                        transform: str = "pre"):
+    """Return params with each attention block's ``pca`` leaf replaced by the
+    calibrated projection (stacked (L,Hkv,D,D) for scan models, per-layer
+    slices otherwise). Everything else is shared by reference."""
+    proj = jnp.asarray(calib.projections(transform))
+    layers = params["layers"]
+    new = dict(params)
+    if isinstance(layers, list):
+        out = []
+        for i, p in enumerate(layers):
+            if "attn" in p:
+                p = dict(p)
+                attn = dict(p["attn"])
+                attn["pca"] = proj[i]
+                p["attn"] = attn
+            out.append(p)
+        new["layers"] = out
+    else:
+        lt = dict(layers)
+        attn = dict(lt["attn"])
+        attn["pca"] = proj.astype(attn["pca"].dtype)
+        lt["attn"] = attn
+        new["layers"] = lt
+    return new

@@ -1,0 +1,107 @@
+"""Pallas-TPU kernel: block-sparse top-k attention (Loki lines 8-9).
+
+Given the indices of the selected KV blocks (from the approx-score block
+top-k), run exact flash-style attention over ONLY those blocks. The sparse
+HBM read happens in the grid itself: the BlockSpec ``index_map`` looks up the
+prefetched block index, so the selected K̂/V blocks stream from HBM directly
+into VMEM — no dense gather copy is ever materialized (the paper's Triton
+kernels achieve this with register-level indexing; scalar-prefetched index
+maps are the TPU-native equivalent, DESIGN.md §3).
+
+Grid: (BH, n_sel). The n_sel axis is sequential per row — the online-softmax
+accumulator lives in VMEM scratch across grid steps.
+
+  q_hat    (BH, D)        PCA-basis query (full D -> exact, Lemma 4.1)
+  k_hat    (BH, S, D)     PCA-basis key cache
+  v        (BH, S, D)
+  blk_idx  (BH, n_sel)    selected block indices (scalar-prefetched)
+  cur_len  (BH,)          valid prefix length
+Output:
+  out      (BH, D)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, scale: float, n_sel: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0] = NEG_INF
+        l_ref[0] = 0.0
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # (D,)
+    k = k_ref[0].astype(jnp.float32)                       # (bs, D)
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+
+    blk = blk_idx_ref[i, j]
+    pos = blk * bs + jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+    live = pos < len_ref[i]
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    # guard: all-masked block with empty accumulator
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0)) * (m_prev > NEG_INF / 2)
+    p = jnp.exp(s - m_safe) * live                         # (bs,)
+    v_blk = v_ref[0].astype(jnp.float32)                   # (bs, D)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_blk, preferred_element_type=jnp.float32)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    m_ref[0] = m_new
+
+    @pl.when(j == n_sel - 1)
+    def _fini():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[0], 1e-30)).astype(out_ref.dtype)
+
+
+def block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len, *,
+                           block_size: int = 128, scale=None,
+                           interpret: bool = False):
+    bh, dim = q_hat.shape
+    s_len = k_hat.shape[1]
+    bs = block_size
+    n_sel = blk_idx.shape[1]
+    assert s_len % bs == 0
+    scale = float(scale if scale is not None else dim ** -0.5)
+
+    kernel = functools.partial(_kernel, bs=bs, scale=scale, n_sel=n_sel)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(bh, n_sel),
+            in_specs=[
+                pl.BlockSpec((1, dim), lambda i, j, bi, ln: (i, 0)),
+                # the sparse read: block index comes from the prefetched
+                # selection, so only chosen blocks leave HBM
+                pl.BlockSpec((1, bs, dim),
+                             lambda i, j, bi, ln: (i, bi[i, j], 0)),
+                pl.BlockSpec((1, bs, dim),
+                             lambda i, j, bi, ln: (i, bi[i, j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dim), lambda i, j, bi, ln: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1,), jnp.float32),   # running max
+                pltpu.VMEM((1,), jnp.float32),   # running denom
+                pltpu.VMEM((dim,), jnp.float32), # accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, dim), q_hat.dtype),
+        interpret=interpret,
+    )(blk_idx.astype(jnp.int32), cur_len.astype(jnp.int32), q_hat, k_hat, v)
+    return out

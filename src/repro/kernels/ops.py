@@ -1,0 +1,75 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``loki_decode_attention`` is the full TPU decode pipeline of the paper:
+
+  1. block_max_scores kernel      — approx scores from d PCA dims, reading
+                                    only d/D of the cache bytes
+  2. lax.top_k over block maxima  — S/bs-long selection (128× cheaper than
+                                    the token-level torch.topk the paper
+                                    identifies as a bottleneck, §6.4)
+  3. block_sparse_attention kernel — exact attention over selected blocks,
+                                    streamed via scalar-prefetch index maps
+
+``interpret=True`` runs the kernel bodies in Python on CPU (how this repo
+validates them); on TPU hardware the same calls compile through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.approx_scores import block_max_scores
+from repro.kernels.approx_scores_fm import block_max_scores_fm
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gather_attention import block_sparse_attention
+
+
+@functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
+                                             "interpret"))
+def loki_decode_attention(q_hat, k_hat, v, cur_len, *, d: int,
+                          k_blocks: int, block_size: int = 128,
+                          interpret: bool = False):
+    """Full Loki decode step over flattened (BH) rows.
+
+    q_hat (BH,D) PCA-basis post-RoPE query; k_hat (BH,S,D) PCA-basis cache;
+    v (BH,S,D); cur_len (BH,). Returns (BH,D).
+    """
+    dim = q_hat.shape[-1]
+    scale = dim ** -0.5
+    blk_max = block_max_scores(q_hat, k_hat, cur_len, d=d,
+                               block_size=block_size, scale=scale,
+                               interpret=interpret)
+    _, blk_idx = jax.lax.top_k(blk_max, k_blocks)
+    return block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len,
+                                  block_size=block_size, scale=scale,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
+                                             "interpret"))
+def loki_decode_attention_fm(q_hat, k_hat_T, v, cur_len, *, d: int,
+                             k_blocks: int, block_size: int = 128,
+                             interpret: bool = False):
+    """Feature-major scoring variant: the cache's K half is stored (BH,D,S)
+    so the d-slice is sublane-aligned (DESIGN.md §3.1). The exact pass takes
+    the token-major view (transpose is free for the gathered blocks)."""
+    dim = q_hat.shape[-1]
+    scale = dim ** -0.5
+    blk_max = block_max_scores_fm(q_hat, k_hat_T, cur_len, d=d,
+                                  block_size=block_size, scale=scale,
+                                  interpret=interpret)
+    _, blk_idx = jax.lax.top_k(blk_max, k_blocks)
+    k_hat = jnp.swapaxes(k_hat_T, 1, 2)
+    return block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len,
+                                  block_size=block_size, scale=scale,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash(q, k, v, *, causal=True, block_q=128, block_k=128,
+          interpret=False):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)

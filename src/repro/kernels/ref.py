@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors its kernel's semantics exactly, in straight-line jnp —
+tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def block_max_scores_ref(q_hat, k_hat, cur_len, *, d, block_size=128,
+                         scale=None):
+    bh, dim = q_hat.shape
+    s_len = k_hat.shape[1]
+    nb = s_len // block_size
+    scale = scale if scale is not None else dim ** -0.5
+    s = jnp.einsum("bd,bsd->bs", q_hat[:, :d].astype(jnp.float32),
+                   k_hat[..., :d].astype(jnp.float32)) * scale
+    pos = jnp.arange(s_len)
+    s = jnp.where(pos[None] < cur_len[:, None], s, NEG_INF)
+    return s.reshape(bh, nb, block_size).max(-1)
+
+
+def block_sparse_attention_ref(q_hat, k_hat, v, blk_idx, cur_len, *,
+                               block_size=128, scale=None):
+    bh, dim = q_hat.shape
+    s_len = k_hat.shape[1]
+    bs = block_size
+    scale = scale if scale is not None else dim ** -0.5
+    # token indices of selected blocks
+    tok = (blk_idx[..., None] * bs + jnp.arange(bs)).reshape(bh, -1)
+    k_sel = jnp.take_along_axis(k_hat, tok[..., None], axis=1)
+    v_sel = jnp.take_along_axis(v, tok[..., None], axis=1)
+    s = jnp.einsum("bd,bkd->bk", q_hat.astype(jnp.float32),
+                   k_sel.astype(jnp.float32)) * scale
+    s = jnp.where(tok < cur_len[:, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    # all-masked guard: softmax of all -inf -> uniform; zero it instead
+    any_live = jnp.any(tok < cur_len[:, None], axis=-1, keepdims=True)
+    w = jnp.where(any_live, w, 0.0)
+    return jnp.einsum("bk,bkd->bd", w, v_sel.astype(jnp.float32)
+                      ).astype(q_hat.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    bh, sq, dim = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else dim ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,272 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set the forced host device count before ANY other import touches jax.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+# ruff: noqa: E402
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config, shape_by_name, SHAPES
+from repro.configs.base import TrainConfig
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.sharding import axes as AX
+from repro.sharding.rules import spec_for, tree_specs
+from repro.training.step import TrainState, make_train_step
+from repro.utils.hlo import collective_bytes
+from repro.utils.roofline import Roofline, model_flops
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _shardings(tree_of_axes, shapes_tree, mesh):
+    def one(ax, sh):
+        return NamedSharding(mesh, spec_for(ax, sh.shape, mesh))
+    return jax.tree.map(one, tree_of_axes, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def _analyze(lowered, compiled, *, cfg, arch, shape, mesh_name, policy,
+             chips, n_layers):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    # xla's cost_analysis counts while bodies once; our loop-weighted HLO
+    # analyzer (utils.hlo) is the authoritative source for roofline terms.
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        peak = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.alias_size_in_bytes)
+        mem_str = {
+            "temp": mem.temp_size_in_bytes,
+            "args": mem.argument_size_in_bytes,
+            "out": mem.output_size_in_bytes,
+            "peak_sum": peak,
+        }
+    except Exception:
+        peak, mem_str = None, {}
+    text = compiled.as_text()
+    from repro.utils.hlo import analyze as hlo_analyze
+    hc = hlo_analyze(text)
+    rl = Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, policy=policy,
+        flops_per_device=hc.flops, bytes_per_device=hc.bytes_accessed,
+        collective_bytes_per_device=hc.collective_bytes,
+        model_flops=model_flops(cfg, shape), chips=chips,
+        peak_mem_per_device=peak)
+    rec = rl.to_dict()
+    rec["collectives"] = hc.collectives
+    rec["collective_counts"] = hc.collective_counts
+    rec["memory_analysis"] = mem_str
+    rec["xla_cost_flops_unweighted"] = xla_flops
+    rec["xla_cost_bytes_unweighted"] = xla_bytes
+    rec["hlo_size"] = len(text)
+    return rec
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy: str = None, verbose: bool = True,
+               extra_cfg=None, loki_kw=None, tcfg_kw=None,
+               return_text: bool = False):
+    """Lower + compile one cell; returns the roofline record dict."""
+    shape = shape_by_name(shape_name)
+    cfg = get_config(arch)
+    if policy is None:
+        policy = "full" if shape.kind != "decode" else default_policy(cfg)
+    if shape.kind == "decode" and policy != "full":
+        applicable = cfg.family not in ("ssm",)
+        if applicable:
+            kw = {"d_f": 0.25, "k_f": 0.25}
+            if policy == "loki":
+                # chunk-local selection aligned with the kv_seq shards:
+                # 16 (model) at decode_32k, 256 (data x model) at long_500k
+                kw["n_chunks"] = 256 if shape.name == "long_500k" else 16
+            if loki_kw:
+                kw.update(loki_kw)
+            cfg = cfg.with_policy(policy, **kw)
+        else:
+            policy = "full"
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    p_shapes = S.params_specs(cfg)
+    p_axes = AX.param_axes_tree(p_shapes)
+    p_sh = _shardings(p_axes, p_shapes, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        tcfg = TrainConfig(**{"remat": "dots", **(tcfg_kw or {})})
+        st_shapes = S.state_specs(cfg)
+        st_axes = TrainState(p_axes, type(st_shapes.opt)(
+            (None,),
+            jax.tree.map(lambda a: a, p_axes),
+            jax.tree.map(lambda a: a, p_axes)))
+        # frozen pca leaves in opt state are scalars; fix axes by shape
+
+        def fix(ax, sh):
+            return ax if len(ax) == len(sh.shape) else (None,) * len(sh.shape)
+        st_axes = jax.tree.map(
+            fix, st_axes, st_shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        st_sh = _shardings(st_axes, st_shapes, mesh)
+        b_shapes = S.batch_specs(cfg, shape)
+        b_axes = AX.batch_axes(b_shapes)
+        b_sh = _shardings(b_axes, b_shapes, mesh)
+        step = make_train_step(cfg, tcfg)
+        with jax.sharding.set_mesh(mesh):
+            jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None), donate_argnums=(0,))
+            lowered = jitted.lower(st_shapes, b_shapes)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        args, kw = S.prefill_input_specs(cfg, shape)
+        tok_sh = NamedSharding(mesh, spec_for(
+            ("batch", "seq"), args[0].shape, mesh))
+        frames = kw.get("frames")
+        patches = kw.get("patches")
+        extra_specs = [v for v in (frames, patches) if v is not None]
+        extra_sh = [NamedSharding(mesh, spec_for(("batch", None, None),
+                                                 v.shape, mesh))
+                    for v in extra_specs]
+
+        def prefill_fn(params, tokens, *extras):
+            kwargs = {}
+            it = iter(extras)
+            if frames is not None:
+                kwargs["frames"] = next(it)
+            if patches is not None:
+                kwargs["patches"] = next(it)
+            return lm.prefill(params, cfg, tokens, shape.seq_len, **kwargs)
+
+        with jax.sharding.set_mesh(mesh):
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(p_sh, tok_sh, *extra_sh),
+                             out_shardings=None)
+            lowered = jitted.lower(p_shapes, args[0], *extra_specs)
+            compiled = lowered.compile()
+    else:  # decode
+        # serving weights are bf16 (§Perf L4); PCA stays f32
+        p_shapes = S.serve_params_specs(cfg)
+        p_sh = _shardings(p_axes, p_shapes, mesh)
+        cache_shapes, tok_spec, pos_spec = S.decode_input_specs(cfg, shape)
+        c_axes = AX.cache_axes_tree(cache_shapes)
+        c_sh = _shardings(c_axes, cache_shapes, mesh)
+        tok_sh = NamedSharding(mesh, spec_for(("batch",), tok_spec.shape,
+                                              mesh))
+
+        def decode_fn(params, cache, token, pos_len):
+            return lm.decode_step(params, cfg, cache, token, pos_len)
+
+        with jax.sharding.set_mesh(mesh):
+            jitted = jax.jit(decode_fn,
+                             in_shardings=(p_sh, c_sh, tok_sh, tok_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_shapes, cache_shapes, tok_spec, pos_spec)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    rec = _analyze(lowered, compiled, cfg=cfg, arch=arch, shape=shape,
+                   mesh_name=mesh_name, policy=policy, chips=chips,
+                   n_layers=cfg.n_layers)
+    rec["compile_seconds"] = compile_s
+    if return_text:
+        rec["_text"] = compiled.as_text()
+    if verbose:
+        print(f"[dryrun] {arch} {shape.name} mesh={mesh_name} "
+              f"policy={policy} compile={compile_s:.1f}s "
+              f"flops/dev={rec['flops_per_device']:.3g} "
+              f"bytes/dev={rec['bytes_per_device']:.3g} "
+              f"coll/dev={rec['collective_bytes_per_device']:.3g} "
+              f"bottleneck={rec['bottleneck']}")
+    return rec
+
+
+def default_policy(cfg) -> str:
+    if cfg.family == "ssm":
+        return "full"          # no KV cache; Loki inapplicable
+    return "loki"
+
+
+def save(rec, tag=""):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}_{rec['policy']}{tag}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for sh in SHAPES:
+                cells.append((arch, sh.name))
+    else:
+        shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+        archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+        for arch in archs:
+            for sh in shapes:
+                cells.append((arch, sh))
+
+    failures = []
+    for arch, sh in cells:
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        pol = args.policy
+        if args.skip_existing:
+            cfgp = get_config(arch)
+            p = pol or ("full" if shape_by_name(sh).kind != "decode"
+                        else default_policy(cfgp))
+            f = os.path.join(OUT_DIR, f"{arch}_{sh}_{mesh_name}_{p}{args.tag}.json")
+            if os.path.exists(f):
+                print(f"[dryrun] skip existing {arch} {sh}")
+                continue
+        try:
+            rec = lower_cell(arch, sh, multi_pod=args.multi_pod,
+                             policy=args.policy)
+            save(rec, args.tag)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, sh, repr(e)))
+            print(f"[dryrun] FAIL {arch} {sh}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state. The dry-run launcher force-creates 512 host devices (see
+dryrun.py) before calling this.
+
+Mesh axes:
+  pod   — pure data parallelism across pods (slow ICI/DCN links); gradient
+          compression targets reductions along this axis.
+  data  — within-pod data parallel + FSDP shard axis for parameters.
+  model — tensor parallel (heads / ffn / vocab / experts) + decode-time
+          KV-cache sequence shards.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devs)} present; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for unit tests (requires forced host devices)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_single_device_mesh() -> Mesh:
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+No device allocation — everything here is abstract. The same specs feed
+jit(...).lower() for the dry-run and the roofline derivation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import lm
+from repro.optim import adamw
+from repro.training.step import TrainState
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_tokens:
+        specs["patches"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                               jnp.bfloat16)
+    return specs
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(lm.init, cfg=cfg), jax.random.key(0))
+
+
+def state_specs(cfg: ModelConfig):
+    p = params_specs(cfg)
+    opt = jax.eval_shape(adamw.init_state, p)
+    return TrainState(p, opt)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, smax: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, batch, smax, dtype))
+
+
+def cast_serving_params(params):
+    """Serving-time weight cast: linear/embedding weights to bf16 (halves
+    param HBM traffic per decode step -- Perf L4); PCA projections and any
+    non-float leaves stay as-is (basis precision for Lemma 4.1 exactness)."""
+    def f(path, a):
+        name = getattr(path[-1], "key", str(path[-1])) if path else ""
+        if name == "pca" or not jnp.issubdtype(a.dtype, jnp.floating):
+            return a
+        return a.astype(jnp.bfloat16)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def serve_params_specs(cfg: ModelConfig):
+    return jax.eval_shape(cast_serving_params, params_specs(cfg))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache, token, pos_len) for one serve_step with a seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = cache_specs(cfg, b, s)
+    return cache, SDS((b,), jnp.int32), SDS((b,), jnp.int32)
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    specs = [SDS((b, s), jnp.int32)]
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["frames"] = SDS((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_tokens:
+        kw["patches"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                            jnp.bfloat16)
+    return specs, kw

@@ -1,0 +1,142 @@
+"""Primitive layers: norms, MLP variants, embeddings, RoPE, initializers.
+
+Pure-functional style: ``init_*`` builds a param dict, ``*_apply`` consumes it.
+All matmuls go through ``dot`` which casts to the compute dtype and constrains
+logical sharding axes on the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import constrain
+
+
+def dot(x, w, prec=None):
+    return jnp.matmul(x, w, precision=prec)
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:            # RMSNorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------- MLPs
+
+def init_mlp(key, cfg, d_ff=None):
+    """Gated (swiglu/geglu) or plain (sq_relu/gelu) MLP params."""
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 3)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {
+        "w_in": _init(ks[0], (d, 2 * f if gated else f)),
+        "w_out": _init(ks[1], (f, d)),
+    }
+    return p
+
+
+def mlp_apply(p, x, cfg):
+    f = p["w_out"].shape[0]
+    ax = ("batch", "seq", "mlp") if x.ndim == 3 else ("batch", "mlp")
+    h = dot(x, p["w_in"].astype(x.dtype))
+    h = constrain(h, ax)
+    if cfg.mlp in ("swiglu", "geglu"):
+        gate, up = h[..., :f], h[..., f:]
+        act = jax.nn.silu(gate) if cfg.mlp == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    elif cfg.mlp == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    out = dot(h, p["w_out"].astype(x.dtype))
+    return constrain(out, ("batch", "seq", "act_embed") if x.ndim == 3
+                     else ("batch", "act_embed"))
+
+
+# logical axes of MLP params (used by the sharding rule engine)
+def mlp_axes():
+    return {"w_in": ("embed", "mlp"), "w_out": ("mlp", "embed")}
+
+
+# ---------------------------------------------------------------- embeddings
+
+def init_embed(key, cfg):
+    # 1/sqrt(d) keeps tied-unembed logits O(1) at init (xent starts at ln V)
+    return {"table": _init(key, (cfg.vocab, cfg.d_model),
+                           scale=cfg.d_model ** -0.5)}
+
+
+def embed_apply(p, tokens, cfg):
+    out = jnp.take(p["table"].astype(jnp.dtype(cfg.dtype)), tokens, axis=0)
+    return constrain(out, ("batch", "seq", "act_embed"))
+
+
+def unembed_apply(p, x, cfg):
+    # matmul in the activation dtype, accumulate in fp32 (loss stability
+    # without materializing an fp32 copy of the vocab table every step)
+    logits = jnp.matmul(x, p["table"].T.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D). positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                              # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- losses
+
+def softmax_xent(logits, labels, z_loss=0.0, mask=None):
+    """logits (B,S,V) fp32, labels (B,S) int32. Returns mean loss."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        loss = loss * mask
+        return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

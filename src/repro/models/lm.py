@@ -1,0 +1,487 @@
+"""Language-model assembly for every assigned architecture family.
+
+One parameter tree, three entry points:
+
+  init(key, cfg)                                   -> params
+  forward(params, tokens, cfg, ...)                -> logits       (train/eval)
+  prefill(params, cfg, inputs)                     -> (logits, cache)
+  decode_step(params, cfg, cache, token, pos_len)  -> (logits, cache)
+
+Layers are stacked along a leading L axis and driven with ``lax.scan`` so the
+lowered HLO stays compact regardless of depth (critical for the 512-device
+dry-run compiles). Architectures whose layers are heterogeneous (xLSTM's
+mLSTM/sLSTM mix) use a Python loop over per-layer param trees instead
+(cfg-driven; these models are shallow).
+
+Block composition per family:
+  dense   : [attn, mlp]
+  moe     : [attn, moe]
+  hybrid  : [attn ∥ mamba, mlp]          (hymba: parallel heads, mean-fused)
+  ssm     : [mlstm] or [slstm]           (xlstm; no attention at all)
+  encdec  : encoder [attn, mlp] + decoder [attn, cross-attn, mlp]  (whisper)
+  vlm     : dense backbone; vision patch embeddings prepended (llava)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.sharding.rules import constrain
+
+
+# --------------------------------------------------------------- init
+
+def _is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return bool(cfg.slstm_every) and (i % cfg.slstm_every == cfg.slstm_every - 1)
+
+
+def init_layer(key, cfg: ModelConfig, kind: str):
+    """kind: dense|moe|hybrid|mlstm|slstm|enc|dec"""
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "hybrid", "enc", "dec"):
+        p["ln1"] = L.init_norm(cfg)
+        p["attn"] = B.init_attention(ks[0], cfg)
+        p["ln2"] = L.init_norm(cfg)
+    if kind in ("dense", "hybrid", "enc", "dec"):
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    if kind == "moe":
+        p["moe"] = B.init_moe(ks[1], cfg)
+    if kind == "hybrid":
+        p["ssm"] = B.init_mamba(ks[2], cfg)
+        p["ln_ssm"] = L.init_norm(cfg)
+    if kind == "mlstm":
+        p["ln1"] = L.init_norm(cfg)
+        p["ssm"] = B.init_mlstm(ks[0], cfg)
+        p["ln2"] = L.init_norm(cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg, d_ff=2 * cfg.d_model)
+    if kind == "slstm":
+        p["ln1"] = L.init_norm(cfg)
+        p["ssm"] = B.init_slstm(ks[0], cfg)
+        p["ln2"] = L.init_norm(cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg, d_ff=2 * cfg.d_model)
+    if kind == "dec" and cfg.is_encoder_decoder:
+        p["ln_x"] = L.init_norm(cfg)
+        p["xattn"] = B.init_attention(ks[3], cfg)
+    return p
+
+
+def layer_kind(cfg: ModelConfig, i: int) -> str:
+    if cfg.family == "ssm":
+        return "slstm" if _is_slstm(cfg, i) else "mlstm"
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.is_encoder_decoder:
+        return "dec"
+    return "dense"
+
+
+def uses_scan(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"          # xlstm layers are heterogeneous
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_layers, k_enc, k_out = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"embed": L.init_embed(k_emb, cfg)}
+    if uses_scan(cfg):
+        kind = layer_kind(cfg, 0)
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: init_layer(k, cfg, kind))(keys)
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = [init_layer(keys[i], cfg, layer_kind(cfg, i))
+                            for i in range(cfg.n_layers)]
+    if cfg.is_encoder_decoder:
+        ekeys = jax.random.split(k_enc, cfg.enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: init_layer(k, cfg, "enc"))(ekeys)
+        params["enc_norm"] = L.init_norm(cfg)
+    if cfg.vision_tokens:
+        # stub frontend: a single linear adapter over precomputed patch
+        # embeddings (anyres tiling & the ViT tower are out of scope — the
+        # dry-run feeds ShapeDtypeStructs for the patch embeddings).
+        params["vision_adapter"] = L._init(k_out, (cfg.d_model, cfg.d_model))
+    params["final_norm"] = L.init_norm(cfg)
+    return params
+
+
+# ----------------------------------------------------- layer train fns
+
+def _block_train(p, x, positions, cfg: ModelConfig, kind: str,
+                 enc_out=None, capture=None):
+    aux = jnp.float32(0.0)
+    if kind in ("dense", "moe", "hybrid", "dec"):
+        h = L.norm_apply(p["ln1"], x)
+        a = B.attn_train(p["attn"], h, positions, cfg, capture=capture)
+        if kind == "hybrid":
+            s = B.mamba_train(p["ssm"], h, cfg)
+            a = 0.5 * (L.norm_apply(p["ln_ssm"], a) +
+                       L.norm_apply(p["ln_ssm"], s))
+        x = x + a
+        if kind == "dec" and cfg.is_encoder_decoder:
+            h = L.norm_apply(p["ln_x"], x)
+            q, _, _ = B._qkv(p["xattn"], h, cfg)
+            from repro.core.attention import cross_attention
+            ek, ev = enc_out
+            o = cross_attention(q, ek, ev)
+            b, s_ = h.shape[:2]
+            x = x + L.dot(o.reshape(b, s_, cfg.q_dim),
+                          p["xattn"]["wo"].astype(h.dtype))
+        h = L.norm_apply(p["ln2"], x)
+        if kind == "moe":
+            y, aux = B.moe_apply(p["moe"], h, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], h, cfg)
+        x = x + y
+    elif kind in ("mlstm", "slstm"):
+        h = L.norm_apply(p["ln1"], x)
+        y = (B.mlstm_train(p["ssm"], h, cfg) if kind == "mlstm"
+             else B.slstm_train(p["ssm"], h, cfg))
+        x = x + y
+        h = L.norm_apply(p["ln2"], x)
+        x = x + L.mlp_apply(p["mlp"], h, cfg)
+    return x, aux
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    """Whisper-style encoder over precomputed frame embeddings.
+
+    Returns per-layer-agnostic encoder output projected to (k, v) per decoder
+    layer lazily (we return the hidden states; cross-attn projects)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.arange(frames.shape[1])[None]
+    x = x + _sinusoidal(frames.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(x, p):
+        h = L.norm_apply(p["ln1"], x)
+        a = B.encoder_attn_train(p["attn"], h, pos, cfg)
+        x = x + a
+        h = L.norm_apply(p["ln2"], x)
+        return x + L.mlp_apply(p["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm_apply(params["enc_norm"], x)
+
+
+def _sinusoidal(s: int, d: int):
+    import numpy as np
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)[None]
+
+
+def _enc_kv(p_layer, enc_x, cfg: ModelConfig):
+    """Project encoder hidden states to this decoder layer's cross (k, v)."""
+    _, k, v = B._qkv(p_layer["xattn"], enc_x, cfg)
+    return k, v
+
+
+# --------------------------------------------------------------- forward
+
+def forward(params, tokens, cfg: ModelConfig, *, frames=None, patches=None,
+            remat: str = "none", capture_keys: bool = False):
+    """Teacher-forced forward -> logits (B,S,V).
+
+    frames: (B,enc_seq,d_model) whisper stub input.
+    patches: (B,vision_tokens,d_model) llava stub input (prepended).
+    capture_keys: also return (pre, post) rotary keys per layer for PCA
+    calibration — (L,B,S,Hkv,D) each.
+    """
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None]
+    if cfg.vision_tokens and patches is not None:
+        vis = L.dot(patches.astype(x.dtype),
+                    params["vision_adapter"].astype(x.dtype))
+        x = jnp.concatenate([vis, x[:, : s - cfg.vision_tokens]], axis=1)
+    if not cfg.rope and not cfg.is_encoder_decoder and cfg.family != "ssm":
+        x = x + _sinusoidal(s, cfg.d_model).astype(x.dtype)
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoidal(s, cfg.d_model).astype(x.dtype)
+
+    enc_x = _encode(params, frames, cfg) if cfg.is_encoder_decoder else None
+
+    captures = [] if capture_keys else None
+
+    if uses_scan(cfg) and not capture_keys:
+        kind = layer_kind(cfg, 0)
+
+        def body(carry, p):
+            x, aux = carry
+            enc_out = _enc_kv(p, enc_x, cfg) if cfg.is_encoder_decoder else None
+            x, a = _block_train(p, x, positions, cfg, kind, enc_out=enc_out)
+            return (x, aux + a), None
+
+        if remat != "none":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if remat == "full"
+                      else jax.checkpoint_policies.checkpoint_dots)
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                   params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        layers = params["layers"]
+        n = cfg.n_layers
+        for i in range(n):
+            if uses_scan(cfg):
+                p = jax.tree.map(lambda a: a[i], layers)
+                kind = layer_kind(cfg, 0)
+            else:
+                p = layers[i]
+                kind = layer_kind(cfg, i)
+            cap = {} if capture_keys and "attn" in p else None
+            enc_out = _enc_kv(p, enc_x, cfg) if cfg.is_encoder_decoder else None
+            x, a = _block_train(p, x, positions, cfg, kind,
+                                enc_out=enc_out, capture=cap)
+            aux = aux + a
+            if cap is not None:
+                captures.append(cap)
+
+    x = L.norm_apply(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    if capture_keys:
+        pre = jnp.stack([c["pre"] for c in captures]) if captures else None
+        post = jnp.stack([c["post"] for c in captures]) if captures else None
+        qs = jnp.stack([c["q"] for c in captures]) if captures else None
+        return logits, aux, (pre, post, qs)
+    return logits, aux
+
+
+# --------------------------------------------------------------- caches
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Stacked (L, ...) decode cache for the whole model."""
+    def one(kind):
+        c = {}
+        if kind in ("dense", "moe", "hybrid", "dec"):
+            c["attn"] = B.init_attn_cache(cfg, batch, smax, dtype)
+        if kind == "hybrid":
+            c["ssm"] = B.init_mamba_cache(cfg, batch, dtype)
+        if kind == "mlstm":
+            c["ssm"] = B.init_mlstm_cache(cfg, batch)
+        if kind == "slstm":
+            c["ssm"] = B.init_slstm_cache(cfg, batch)
+        if kind == "dec" and cfg.is_encoder_decoder:
+            hd = cfg.resolved_head_dim
+            c["cross_k"] = jnp.zeros(
+                (batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype)
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+
+    if uses_scan(cfg):
+        kind = layer_kind(cfg, 0)
+        layer = one(kind)
+        return {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (cfg.n_layers,) + a.shape).copy(), layer)}
+    return {"layers": [one(layer_kind(cfg, i)) for i in range(cfg.n_layers)]}
+
+
+# --------------------------------------------------------------- decode
+
+def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str):
+    if kind in ("dense", "moe", "hybrid", "dec"):
+        h = L.norm_apply(p["ln1"], x)
+        a, new_attn = B.attn_decode(p["attn"], c["attn"], h, pos_len, cfg)
+        c = dict(c)
+        c["attn"] = new_attn
+        if kind == "hybrid":
+            s, new_ssm = B.mamba_decode(p["ssm"], c["ssm"], h, cfg)
+            c["ssm"] = new_ssm
+            a = 0.5 * (L.norm_apply(p["ln_ssm"], a) +
+                       L.norm_apply(p["ln_ssm"], s))
+        x = x + a
+        if kind == "dec" and cfg.is_encoder_decoder:
+            h = L.norm_apply(p["ln_x"], x)
+            from repro.core.attention import decode_full
+            q, _, _ = B._qkv(p["xattn"], h[:, None], cfg)
+            o = decode_full(q[:, 0], c["cross_k"], c["cross_v"],
+                            jnp.int32(c["cross_k"].shape[1]))
+            x = x + L.dot(o.reshape(x.shape[0], cfg.q_dim),
+                          p["xattn"]["wo"].astype(x.dtype))
+        h = L.norm_apply(p["ln2"], x)
+        y = (B.moe_decode(p["moe"], h, cfg) if kind == "moe"
+             else L.mlp_apply(p["mlp"], h, cfg))
+        x = x + y
+    else:
+        h = L.norm_apply(p["ln1"], x)
+        fn = B.mlstm_decode if kind == "mlstm" else B.slstm_decode
+        y, new_ssm = fn(p["ssm"], c["ssm"], h, cfg)
+        c = dict(c)
+        c["ssm"] = new_ssm
+        x = x + y
+        h = L.norm_apply(p["ln2"], x)
+        x = x + L.mlp_apply(p["mlp"], h, cfg)
+    return x, c
+
+
+_UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+def _cache_bits(tree):
+    """Float leaves -> same-width uint views (free bitcast on TPU). The scan
+    then slices/stacks the per-layer cache with *integer* dynamic-slice /
+    dynamic-update-slice, which every backend does in place — XLA:CPU
+    legalizes low-precision float DUS via f32, rewriting the whole stacked
+    cache with converts each layer (§Perf L3)."""
+    def f(a):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            return jax.lax.bitcast_convert_type(
+                a, _UINT_OF[jnp.dtype(a.dtype).itemsize])
+        return a
+    return jax.tree.map(f, tree)
+
+
+def _cache_unbits(tree, dtypes):
+    return jax.tree.map(
+        lambda a, dt: jax.lax.bitcast_convert_type(a, dt)
+        if a.dtype != dt else a, tree, dtypes)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos_len):
+    """One generation step. token (B,) int32; pos_len (B,) tokens cached.
+
+    Returns (logits (B,V), new_cache)."""
+    x = L.embed_apply(params["embed"], token[:, None], cfg)[:, 0]
+    if not cfg.rope and cfg.family != "ssm":
+        # sinusoidal decoders: add position encoding for the current slot
+        d = cfg.d_model
+        x = x + _sinusoidal_at(pos_len, d).astype(x.dtype)
+
+    if uses_scan(cfg):
+        kind = layer_kind(cfg, 0)
+        dtypes = jax.tree.map(lambda a: a.dtype, cache["layers"])
+
+        def body(x, pc):
+            p, cbits = pc
+            c = _cache_unbits(cbits, dtypes)
+            x, c = _layer_decode(p, c, x, pos_len, cfg, kind)
+            return x, _cache_bits(c)
+
+        x, new_bits = jax.lax.scan(
+            body, x, (params["layers"], _cache_bits(cache["layers"])))
+        new_cache = {"layers": _cache_unbits(new_bits, dtypes)}
+    else:
+        new_list = []
+        x_cur = x
+        for i in range(cfg.n_layers):
+            x_cur, c = _layer_decode(params["layers"][i], cache["layers"][i],
+                                     x_cur, pos_len, cfg, layer_kind(cfg, i))
+            new_list.append(c)
+        x = x_cur
+        new_cache = {"layers": new_list}
+
+    x = L.norm_apply(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x[:, None], cfg)[:, 0]
+    return logits, new_cache
+
+
+def _sinusoidal_at(pos, d):
+    import numpy as np
+    i = jnp.arange(d // 2)[None]
+    ang = pos[:, None].astype(jnp.float32) / jnp.power(
+        10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def prefill(params, cfg: ModelConfig, tokens, smax: int, *, frames=None,
+            patches=None, cache_dtype=jnp.bfloat16):
+    """Process a prompt, returning (logits_last (B,V), cache, pos_len)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, smax, cache_dtype)
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    positions = jnp.arange(s)[None]
+    if cfg.vision_tokens and patches is not None:
+        vis = L.dot(patches.astype(x.dtype),
+                    params["vision_adapter"].astype(x.dtype))
+        x = jnp.concatenate([vis, x[:, : s - cfg.vision_tokens]], axis=1)
+    if (not cfg.rope or cfg.is_encoder_decoder) and cfg.family != "ssm":
+        x = x + _sinusoidal(s, cfg.d_model).astype(x.dtype)
+    enc_x = _encode(params, frames, cfg) if cfg.is_encoder_decoder else None
+
+    if uses_scan(cfg):
+        kind = layer_kind(cfg, 0)
+
+        def body(carry, pc):
+            x = carry
+            p, c = pc
+            h = L.norm_apply(p["ln1"], x)
+            if kind in ("dense", "moe", "hybrid", "dec"):
+                a, new_attn = B.attn_prefill(p["attn"], c["attn"], h,
+                                             positions, cfg)
+                c = dict(c)
+                c["attn"] = new_attn
+                if kind == "hybrid":
+                    sy, xz_states = _mamba_prefill(p["ssm"], h, cfg)
+                    c["ssm"] = xz_states
+                    a = 0.5 * (L.norm_apply(p["ln_ssm"], a) +
+                               L.norm_apply(p["ln_ssm"], sy))
+                x = x + a
+                if kind == "dec" and cfg.is_encoder_decoder:
+                    ek, ev = _enc_kv(p, enc_x, cfg)
+                    c["cross_k"] = ek.astype(c["cross_k"].dtype)
+                    c["cross_v"] = ev.astype(c["cross_v"].dtype)
+                    hx = L.norm_apply(p["ln_x"], x)
+                    q, _, _ = B._qkv(p["xattn"], hx, cfg)
+                    from repro.core.attention import cross_attention
+                    o = cross_attention(q, ek, ev)
+                    x = x + L.dot(o.reshape(b, s, cfg.q_dim),
+                                  p["xattn"]["wo"].astype(x.dtype))
+                h = L.norm_apply(p["ln2"], x)
+                if kind == "moe":
+                    y, _ = B.moe_apply(p["moe"], h, cfg)
+                else:
+                    y = L.mlp_apply(p["mlp"], h, cfg)
+                x = x + y
+            return x, c
+
+        x, new_layers = jax.lax.scan(body, x,
+                                     (params["layers"], cache["layers"]))
+        cache = {"layers": new_layers}
+    else:
+        # ssm family: prefill == run the recurrence, keep final states.
+        # The train-path scans already carry exactly the decode state, so we
+        # take their final carry instead of re-scanning the prompt through
+        # the decode cell token-by-token (§Perf X2: removes a 32768-step
+        # while loop and its per-step collectives per layer).
+        for i in range(cfg.n_layers):
+            kind = layer_kind(cfg, i)
+            p = params["layers"][i]
+            h = L.norm_apply(p["ln1"], x)
+            fn = B.mlstm_train if kind == "mlstm" else B.slstm_train
+            y, st = fn(p["ssm"], h, cfg, return_state=True)
+            cache["layers"][i]["ssm"] = st
+            x = x + y
+            h2 = L.norm_apply(p["ln2"], x)
+            x = x + L.mlp_apply(p["mlp"], h2, cfg)
+
+    x = L.norm_apply(params["final_norm"], x[:, -1:])
+    logits = L.unembed_apply(params["embed"], x, cfg)[:, 0]
+    pos_len = jnp.full((b,), s, jnp.int32)
+    return logits, cache, pos_len
+
+
+def _mamba_prefill(p, x, cfg):
+    s = cfg.ssm
+    b = x.shape[0]
+    d_in = s.expand * cfg.d_model
+    xz = L.dot(x, p["in_proj"].astype(x.dtype))
+    conv0 = jnp.zeros((b, s.conv_width - 1, d_in), x.dtype)
+    ssm0 = jnp.zeros((b, d_in, s.state_dim), jnp.float32)
+    y, conv, ssm = B._mamba_scan(p, xz, conv0, ssm0, cfg)
+    y = L.dot(y, p["out_proj"].astype(x.dtype))
+    return y, {"conv": conv, "ssm": ssm}
+

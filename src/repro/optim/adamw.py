@@ -1,0 +1,92 @@
+"""AdamW + schedules, pure pytree implementation (no optax offline).
+
+PCA projection matrices (params paths containing 'pca') are calibration
+artifacts, not trainable weights — they get zero updates and no optimizer
+state contribution beyond placeholders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def _is_frozen(path) -> bool:
+    return any(getattr(k, "key", None) == "pca" for k in path)
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map_with_path(
+        lambda p, x: jnp.zeros_like(x) if not _is_frozen(p)
+        else jnp.zeros((), x.dtype), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_schedule(cfg: TrainConfig):
+    def lr_at(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * cfg.lr * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr_at
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params, grads, state: AdamWState, cfg: TrainConfig):
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = cosine_schedule(cfg)(step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, mu, nu):
+        if _is_frozen(path):
+            return p, mu, nu
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        u = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - lr * u).astype(p.dtype), mu, nu
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, mu, nu: upd(path, p, g, mu, nu),
+        params, grads, state.mu, state.nu)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), gnorm

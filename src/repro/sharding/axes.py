@@ -1,0 +1,115 @@
+"""Logical-axis assignment for parameter and cache pytrees.
+
+Leaves are matched by their dict key name; the returned logical-axes tuple is
+left-padded with ``None`` to the leaf's rank (so stacked (L, ...) scan params
+and unstacked params share one table).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PARAM_AXES = {
+    "table": ("vocab", "embed"),
+    "wq": ("embed", "qkv"), "wk": ("embed", "qkv"), "wv": ("embed", "qkv"),
+    "wo": ("qkv", "embed"),
+    "bq": ("qkv",), "bk": ("qkv",), "bv": ("qkv",),
+    "pca": ("kv_heads", None, None),
+    "router": ("embed", None),
+    "in_proj": ("embed", "mlp"),
+    "conv_w": (None, "mlp"),
+    "x_proj": ("mlp", None),
+    "dt_proj": (None, "mlp"),
+    "dt_bias": ("mlp",),
+    "a_log": ("mlp", None),
+    "d_skip": ("mlp",),
+    "out_proj": ("mlp", "embed"),
+    "w_if": ("embed", None),
+    "b_if": (None,),
+    "wo_gate": ("embed", "qkv"),
+    "w_gates": ("embed", "qkv"),
+    "r_gates": (None, None, None),
+    "b_gates": (None,),
+    "scale": (None,), "bias": (None,),
+    "vision_adapter": ("embed", None),
+}
+
+# moe expert weights share names with the dense mlp but have rank 3
+PARAM_AXES_3D = {
+    "w_in": ("expert", "embed", "mlp"),
+    "w_out": ("expert", "mlp", "embed"),
+}
+PARAM_AXES_2D = {
+    "w_in": ("embed", "mlp"),
+    "w_out": ("mlp", "embed"),
+}
+
+CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "cross_k": ("batch", None, "kv_heads", None),
+    "cross_v": ("batch", None, "kv_heads", None),
+    "acc": ("batch", "kv_heads", None),
+    "conv": ("batch", None, "mlp"),
+    "ssm": ("batch", "mlp", None),
+}
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return k.key
+    return ""
+
+
+def _pad(core: Tuple, ndim: int) -> Tuple:
+    core = tuple(core)[:ndim]
+    return (None,) * (ndim - len(core)) + core
+
+
+def _stack_depth(path, name: str, ndim: int, core_len: int) -> int:
+    return ndim - core_len
+
+
+def param_axes_tree(params_shapes):
+    """Pytree of logical-axes tuples matching a params shape tree."""
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        in_layer = any(getattr(k, "key", None) in ("layers", "enc_layers")
+                       for k in path)
+        if name in ("w_in", "w_out"):
+            under_moe = any(getattr(k, "key", None) == "moe" for k in path)
+            core = (PARAM_AXES_3D if under_moe else PARAM_AXES_2D)[name]
+        else:
+            core = PARAM_AXES.get(name, ())
+        if not core:
+            core = (None,) * ndim
+        return _pad(core, ndim)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+def cache_axes_tree(cache_shapes):
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        core = CACHE_AXES.get(name)
+        if core is not None:
+            return _pad(core, ndim)
+        # generic: batch-shard the first non-stacked dim
+        stacked = (any(getattr(k, "key", None) == "layers" for k in path)
+                   and not any(hasattr(k, "idx") for k in path))
+        lead = (None,) if stacked else ()
+        axes = lead + ("batch",)
+        return (axes + (None,) * (ndim - len(axes)))[:ndim]
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+def batch_axes(batch_shapes):
+    def assign(path, leaf):
+        return _pad(("batch", "seq") + (None,) * 8, len(leaf.shape))
+    return jax.tree_util.tree_map_with_path(assign, batch_shapes)

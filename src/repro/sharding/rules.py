@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Arrays in the framework carry *logical* axis names; the rules map logical
+names to mesh axes. A logical axis is only sharded when the dimension size is
+divisible by the product of the mapped mesh axes — otherwise it silently falls
+back to replication for that dimension (e.g. kv_heads=2 on a 16-way ``model``
+axis). This keeps one rule table valid across all 10 assigned architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# Default rule table. "fsdp" rides the data axis (ZeRO-3 style), tensor
+# parallel dims ride the model axis, batch rides every pure-DP axis.
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # sequence-parallel fallback: the q-chunk dim of attention scores takes
+    # the model axis when no head dim divides it (hymba: 25 heads = 5x5 on a
+    # 16-way axis). Dedup order in the constraint tuple makes this automatic.
+    "act_seq": "model",
+    "act_embed": None,
+    "embed": "data",              # FSDP shard of the embed/row dim of weights
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "vocab": "model",
+    "expert": "model",
+    "moe_group": ("pod", "data"),   # token-group dim of the MoE dispatch
+    # fallback compute shard for MoE when n_experts doesn't divide the model
+    # axis (granite: 40 experts, 16-way axis): the expert-capacity dim takes
+    # the axis instead (spec_for dedups, first divisible axis wins)
+    "expert_capacity": "model",
+    # decode-time KV cache sequence dim. Tuple + dedup gives the right
+    # sharding at both batch regimes: decode_32k (B=128 takes "data", the
+    # cache seq gets "model" = 16-way) and long_500k (B=1 takes nothing,
+    # the 512k-token cache shards over BOTH axes = 256-way).
+    "kv_seq": ("data", "model"),
+    "kv_seq_long": ("data", "model"),  # alias (kept for config overrides)
+    "head_dim": None,
+    "state": None,
+    "conv": None,
+    "pos": None,
+}
+
+
+def _mesh_axis_size(mesh: Mesh, ax: AxisVal) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax] if ax in mesh.axis_names else 0
+    return math.prod(_mesh_axis_size(mesh, a) for a in ax)
+
+
+def _present(mesh: Mesh, ax: AxisVal) -> Optional[AxisVal]:
+    """Drop mesh axes not present in this mesh (e.g. 'pod' on single-pod)."""
+    if ax is None:
+        return None
+    if isinstance(ax, str):
+        return ax if ax in mesh.axis_names else None
+    kept = tuple(a for a in ax if a in mesh.axis_names)
+    return kept if kept else None
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Dict[str, AxisVal]] = None,
+    allow_padded: bool = False,
+) -> P:
+    """Map logical axis names to a PartitionSpec, honoring divisibility.
+
+    ``shape`` and ``mesh`` are optional; when given, any dimension that is not
+    divisible by its mapped mesh-axis product is replicated instead.
+    """
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    cands = []
+    for name in logical_axes:
+        ax = rules.get(name) if name else None
+        if mesh is not None:
+            ax = _present(mesh, ax)
+        cands.append(ax)
+    out = [None] * len(cands)
+    used: set = set()
+
+    def _claim(i, ax, mode):
+        """Try to give dim i mesh axes `ax` (minus already-used ones)."""
+        flat = (ax,) if isinstance(ax, str) else tuple(ax)
+        flat = tuple(a for a in flat if a not in used)
+        if not flat:
+            return None
+        ax = flat[0] if len(flat) == 1 else flat
+        if shape is not None and mesh is not None:
+            if i >= len(shape):      # logical axes longer than tensor rank
+                return None
+            n = _mesh_axis_size(mesh, ax)
+            dim = shape[i]
+            if n == 0:
+                return None
+            if mode == "exact" and dim % n != 0:
+                return None
+            if mode == "padded":
+                # second chance for non-divisible dims: GSPMD pads; accept
+                # when padding waste is bounded (24 heads on 16 -> pad 32,
+                # 1.33x; but kv_heads=2 on 16 -> 8x, rejected)
+                if dim % n == 0 or dim < n:
+                    return None
+                if (-(-dim // n) * n) / dim > 1.5:
+                    return None
+        for a in ((ax,) if isinstance(ax, str) else ax):
+            used.add(a)
+        return ax
+
+    checked = shape is not None and mesh is not None
+    # pass 1: dims that divide their mesh axes exactly claim them, in order
+    for i, ax in enumerate(cands):
+        if ax is not None:
+            out[i] = _claim(i, ax, "exact" if checked else "any")
+    # pass 2: leftover axes go to dims where padded sharding still wins.
+    # Padded (non-divisible) specs are only legal as sharding *constraints*
+    # (GSPMD pads internally) -- jit input shardings must divide exactly.
+    if checked and allow_padded:
+        for i, ax in enumerate(cands):
+            if ax is not None and out[i] is None:
+                out[i] = _claim(i, ax, "padded")
+    # trim trailing Nones for tidier specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None,
+                   rules: Optional[Dict[str, AxisVal]] = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical_axes, shape, mesh, rules))
+
+
+def tree_specs(logical_tree, shapes_tree, mesh: Mesh, rules=None):
+    """Map a pytree of logical-axis tuples + matching ShapeDtypeStruct tree to
+    a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda ax, s: spec_for(ax, s.shape, mesh, rules),
+        logical_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def tree_shardings(logical_tree, shapes_tree, mesh: Mesh, rules=None):
+    specs = tree_specs(logical_tree, shapes_tree, mesh, rules)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]], rules=None):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:  # pragma: no cover - env dependent
+            return x
+        if len(logical_axes) != x.ndim:
+            # rank-mismatched constraints (train-shaped axes on squeezed
+            # decode tensors) are no-ops, never active replication
+            return x
+        # the abstract mesh carries axis names AND sizes, so the divisibility
+        # fallback applies here too (kv_heads=2 must NOT grab a 16-way axis)
+        spec = spec_for(logical_axes, x.shape, mesh, rules,
+                        allow_padded=True)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

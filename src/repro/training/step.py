@@ -1,0 +1,111 @@
+"""Jit-able train / eval / serve step functions.
+
+``make_train_step`` builds the canonical SPMD step: loss -> grad -> AdamW,
+with optional gradient accumulation (microbatching), remat policy, NaN-skip,
+and cross-pod gradient compression (see optim.compression).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import layers as L
+from repro.models import lm
+from repro.optim import adamw
+from repro.optim.compression import compressed_psum
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    logits, aux = lm.forward(
+        params, batch["tokens"], cfg,
+        frames=batch.get("frames"), patches=batch.get("patches"),
+        remat=tcfg.remat)
+    loss = L.softmax_xent(logits, batch["labels"], z_loss=tcfg.z_loss,
+                          mask=batch.get("mask"))
+    return loss + 1e-2 * aux, (loss, aux)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    def grads_of(params, batch):
+        g, (loss, aux) = jax.grad(loss_fn, has_aux=True)(
+            params, batch, cfg, tcfg)
+        return g, loss, aux
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+        if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
+            mb = tcfg.microbatch
+            n = batch["tokens"].shape[0] // mb
+            shaped = jax.tree.map(
+                lambda x: x.reshape(n, mb, *x.shape[1:]), batch)
+
+            def acc_body(carry, micro):
+                g_acc, l_acc, a_acc = carry
+                g, loss, aux = grads_of(params, micro)
+                return (jax.tree.map(jnp.add, g_acc, g),
+                        l_acc + loss, a_acc + aux), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.float32(0), jnp.float32(0)), shaped)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss, aux = loss / n, aux / n
+        else:
+            grads, loss, aux = grads_of(params, batch)
+
+        if tcfg.grad_compression != "none":
+            grads = compressed_psum(grads, tcfg)
+
+        new_params, new_opt, gnorm = adamw.apply_updates(
+            params, grads, state.opt, tcfg)
+
+        if tcfg.nan_skip:
+            ok = jnp.isfinite(gnorm) & jnp.isfinite(loss)
+            new_params = jax.tree.map(
+                lambda new, old: jnp.where(ok, new, old), new_params, params)
+            new_opt = jax.tree.map(
+                lambda new, old: jnp.where(ok, new, old), new_opt, state.opt)
+
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm,
+                   "step": new_opt.step}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    tcfg = tcfg or TrainConfig(z_loss=0.0)
+
+    def eval_step(params, batch):
+        logits, _ = lm.forward(params, batch["tokens"], cfg,
+                               frames=batch.get("frames"),
+                               patches=batch.get("patches"))
+        loss = L.softmax_xent(logits, batch["labels"],
+                              mask=batch.get("mask"))
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return {"loss": loss, "ppl_proxy": jnp.exp(loss), "acc": acc}
+
+    return eval_step
+
+
+def make_serve_steps(cfg: ModelConfig, smax: int):
+    """(prefill_fn, decode_fn) for the serving engine / dry-run."""
+    def prefill_fn(params, tokens, frames=None, patches=None):
+        return lm.prefill(params, cfg, tokens, smax,
+                          frames=frames, patches=patches)
+
+    def decode_fn(params, cache, token, pos_len):
+        return lm.decode_step(params, cfg, cache, token, pos_len)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,380 @@
+"""Loop-weighted cost accounting over compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body exactly once, which
+under-counts lax.scan-over-layers (and sequence scans) by the trip count. XLA
+annotates ``backend_config={"known_trip_count":{"n":...}}`` on while ops, so
+we parse the HLO, build the call graph (while body/cond, fusion calls,
+to_apply), weight every computation by the product of trip counts on the path
+from ENTRY, and accumulate:
+
+  * flops            — dot ops: 2 × |result| × contraction size (dots are
+                       >99% of model flops; elementwise ignored)
+  * bytes accessed   — operand + result bytes of top-level ops, with
+                       slice-awareness: dynamic-slice reads only the slice,
+                       dynamic-update-slice writes only the update (KV-cache
+                       appends, scan param slicing), and fusions that merely
+                       slice a big operand charge the slice, not the buffer
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+All numbers are per-device (the partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\](?:\{[\d,:TSE()]*\})?")
+_COMMENT = re.compile(r"/\*.*?\*/")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*?\)\s*->\s*.*\{")
+
+
+def _parse_instr_line(line: str):
+    """Parse '%name = TYPE opcode(args...), attrs' robustly (TYPE may be a
+    huge tuple containing parens/commas). Returns None or
+    (name, type_str, opcode, rest)."""
+    line = _COMMENT.sub("", line)
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):          # tuple type: find the balanced close
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str, rest = rest[:i + 1], rest[i + 1:]
+                    break
+        else:
+            return None
+    else:                             # array type: up to first space
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    mo = _OPCODE.match(rest)
+    if not mo:
+        return None
+    return name, type_str, mo.group(1), rest[mo.end():]
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+def parse_shape(s: str) -> Tuple[Optional[Tuple[str, Tuple[int, ...]]], int]:
+    """First (dtype, dims) in s, and total bytes of all shapes in s."""
+    total = 0
+    first = None
+    for dtype, dims in _SHAPE_TOKEN.findall(s):
+        if dtype not in DTYPE_BYTES:
+            continue
+        d = tuple(int(x) for x in dims.split(",") if x.strip())
+        n = 1
+        for x in d:
+            n *= x
+        total += n * DTYPE_BYTES[dtype]
+        if first is None:
+            first = (dtype, d)
+    return first, total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_shape: Optional[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+    param_idx: int = -1
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+
+
+def _split_operands(argstr: str) -> Tuple[List[str], str, str]:
+    """Split 'a, b, c), attrs' -> (operand names, inner text, attrs)."""
+    depth = 1
+    for i, ch in enumerate(argstr):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner, attrs = argstr[:i], argstr[i + 1:]
+                ops = re.findall(r"%([\w\.\-]+)", inner)
+                return ops, inner, attrs
+    return re.findall(r"%([\w\.\-]+)", argstr), argstr, ""
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and "->" in line:
+            name = hdr.group(2)
+            current = Computation(name, {})
+            comps[name] = current
+            if hdr.group(1):
+                entry = name
+            continue
+        if current is None or line.strip() == "}":
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        iname, shape_str, opcode, rest = parsed
+        operands, inner, attrs = _split_operands(rest)
+        rshape, rbytes = parse_shape(shape_str)
+        ins = Instr(iname, opcode, rbytes, rshape, operands, attrs)
+        if opcode == "parameter":
+            try:
+                ins.param_idx = int(inner.strip())
+            except ValueError:
+                pass
+        current.instrs[iname] = ins
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    if ins.opcode != "dot" or ins.result_shape is None:
+        return 0.0
+    out_elems = math.prod(ins.result_shape[1]) if ins.result_shape[1] else 1
+    lhs = comp.instrs.get(ins.operands[0]) if ins.operands else None
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contraction = 1
+    if lhs is not None and lhs.result_shape is not None and cdims:
+        dims = [int(x) for x in cdims.group(1).split(",") if x.strip()]
+        for d in dims:
+            if d < len(lhs.result_shape[1]):
+                contraction *= lhs.result_shape[1][d]
+    return 2.0 * out_elems * contraction
+
+
+def _weights(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """Execution count per computation (product of trip counts from ENTRY)."""
+    w: Dict[str, float] = defaultdict(float)
+
+    def visit(cname: str, mult: float, depth=0):
+        w[cname] += mult
+        comp = comps.get(cname)
+        if comp is None or depth > 16:
+            return
+        for ins in comp.instrs.values():
+            callees = _CALLS.findall(ins.attrs)
+            if not callees:
+                continue
+            trip = 1.0
+            if ins.opcode == "while":
+                mt = _TRIP.search(ins.attrs)
+                trip = float(mt.group(1)) if mt else 1.0
+            for callee in set(callees):
+                visit(callee, mult * trip, depth + 1)
+
+    visit(entry, 1.0)
+    return dict(w)
+
+
+def _param_slice_bytes(comp: Computation) -> Dict[int, int]:
+    """For a fused computation: param indices that are only consumed as the
+    sliced operand of (dynamic-)slice ops -> bytes actually read."""
+    users: Dict[str, List[Instr]] = defaultdict(list)
+    for ins in comp.instrs.values():
+        for op in ins.operands:
+            users[op].append(ins)
+    out: Dict[int, int] = {}
+    for ins in comp.instrs.values():
+        if ins.opcode != "parameter" or ins.param_idx < 0:
+            continue
+        us = users.get(ins.name, [])
+        if not us:
+            out[ins.param_idx] = 0
+            continue
+        total = 0
+        ok = True
+        for u in us:
+            if u.opcode in ("dynamic-slice", "slice") and \
+                    u.operands and u.operands[0] == ins.name:
+                total += u.result_bytes
+            elif u.opcode == "dynamic-update-slice" and \
+                    u.operands and u.operands[0] == ins.name:
+                # in-place update: the buffer itself isn't streamed
+                total += 0
+            else:
+                ok = False
+                break
+        if ok:
+            out[ins.param_idx] = total
+    return out
+
+
+def _instr_bytes(ins: Instr, comp: Computation,
+                 comps: Dict[str, Computation]) -> int:
+    """HBM bytes for one top-level instruction (slice-aware)."""
+    def opsize(name: str) -> int:
+        src = comp.instrs.get(name)
+        return src.result_bytes if src is not None else 0
+
+    oc = ins.opcode
+    if oc in ("dynamic-slice", "slice", "gather"):
+        return 2 * ins.result_bytes
+    if oc == "dynamic-update-slice":
+        upd = opsize(ins.operands[1]) if len(ins.operands) > 1 else 0
+        return 2 * upd
+    if oc == "scatter":
+        upd = opsize(ins.operands[2]) if len(ins.operands) > 2 else 0
+        return 2 * upd + (opsize(ins.operands[1])
+                          if len(ins.operands) > 1 else 0)
+    if oc == "fusion":
+        m = _CALLS.search(ins.attrs)
+        callee = comps.get(m.group(1)) if m else None
+        sliced = _param_slice_bytes(callee) if callee else {}
+        total = ins.result_bytes
+        # in-place dus fusions: result aliases operand 0
+        if callee is not None and any(
+                i.opcode == "dynamic-update-slice"
+                for i in callee.instrs.values()):
+            total = 0
+            for i in callee.instrs.values():
+                if i.opcode == "dynamic-update-slice":
+                    total += 2 * (callee.instrs[i.operands[1]].result_bytes
+                                  if len(i.operands) > 1 and
+                                  i.operands[1] in callee.instrs else 0)
+        for idx, opname in enumerate(ins.operands):
+            if idx in sliced:
+                total += sliced[idx]
+            else:
+                total += opsize(opname)
+        return total
+    # default: all operands + result
+    return sum(opsize(o) for o in ins.operands) + ins.result_bytes
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collectives: Dict[str, float]
+    collective_counts: Dict[str, float]
+    weights: Dict[str, float]
+
+
+def analyze(text: str) -> HLOCost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].instrs)) if comps else ""
+    weights = _weights(comps, entry)
+
+    fused_names = set()
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            if ins.opcode == "fusion":
+                m = _CALLS.search(ins.attrs)
+                if m:
+                    fused_names.add(m.group(1))
+            else:
+                for callee in _CALLS.findall(ins.attrs):
+                    if ins.opcode in ("reduce", "reduce-window", "sort",
+                                      "scatter", "select-and-scatter",
+                                      "map", "all-reduce", "reduce-scatter"):
+                        fused_names.add(callee)
+
+    flops = 0.0
+    nbytes = 0.0
+    coll: Dict[str, float] = defaultdict(float)
+    coll_counts: Dict[str, float] = defaultdict(float)
+
+    for cname, comp in comps.items():
+        wt = weights.get(cname, 0.0)
+        if wt == 0.0:
+            continue
+        interior = cname in fused_names
+        for ins in comp.instrs.values():
+            f = _dot_flops(ins, comp)
+            if f:
+                flops += f * wt
+            if interior or ins.opcode in FREE_OPS:
+                continue
+            base = ins.opcode.split(".")[0]
+            if base in ("while", "conditional", "call"):
+                continue  # attributed inside callees
+            b = _instr_bytes(ins, comp, comps)
+            nbytes += b * wt
+            for kind in COLLECTIVES:
+                if ins.opcode.startswith(kind):
+                    op_b = sum(
+                        comp.instrs[o].result_bytes for o in ins.operands
+                        if o in comp.instrs)
+                    coll[kind] += op_b * wt
+                    coll_counts[kind] += wt
+                    break
+    return HLOCost(flops, nbytes, sum(coll.values()), dict(coll),
+                   dict(coll_counts), weights)
+
+
+def collective_bytes(text: str, default_trip: int = 1):
+    """Compatibility helper returning (bytes_by_kind, counts_by_kind)."""
+    cost = analyze(text)
+    return cost.collectives, cost.collective_counts
+
+
+def top_bytes(text: str, n: int = 25):
+    """Top-n instructions by loop-weighted HBM bytes — the hillclimb's
+    profiler stand-in. Returns [(weighted_bytes, opcode, comp, name,
+    result_shape_str)]."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        return []
+    weights = _weights(comps, entry)
+    fused_names = set()
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            if ins.opcode == "fusion":
+                m = _CALLS.search(ins.attrs)
+                if m:
+                    fused_names.add(m.group(1))
+    rows = []
+    for cname, comp in comps.items():
+        wt = weights.get(cname, 0.0)
+        if wt == 0.0 or cname in fused_names:
+            continue
+        for ins in comp.instrs.values():
+            if ins.opcode in FREE_OPS or ins.opcode in ("while",
+                                                        "conditional",
+                                                        "call"):
+                continue
+            b = _instr_bytes(ins, comp, comps) * wt
+            if b:
+                rows.append((b, ins.opcode, cname, ins.name,
+                             str(ins.result_shape)))
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,129 @@
+"""Markdown report generator over experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.utils.report [--dir experiments/dryrun]
+
+Emits the §Dry-run and §Roofline tables consumed by EXPERIMENTS.md.
+TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, 16 GB HBM.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+HBM_GB = 16.0
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        r["_file"] = os.path.basename(f)
+        recs.append(r)
+    return recs
+
+
+def _key(r):
+    return (r["arch"], SHAPE_ORDER.index(r["shape"]), r["mesh"], r["policy"])
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{1e3*x:.2f}ms"
+    return f"{1e6*x:.1f}us"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | policy | compile | peak mem/dev | "
+           "fits 16G | collectives (count) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=_key):
+        mem = (r.get("peak_mem_per_device") or 0) / 1e9
+        cc = r.get("collective_counts", {})
+        cstr = " ".join(f"{k.replace('collective-','c-')}:{int(v)}"
+                        for k, v in sorted(cc.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} | "
+            f"{r.get('compile_seconds', 0):.1f}s | {mem:.1f} GB | "
+            f"{'Y' if mem <= HBM_GB else 'N'} | {cstr} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | policy | t_comp | t_mem | t_coll | bound | "
+           "useful=MODEL/HLO | MFU@bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=_key):
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['policy']} | "
+            f"{fmt_s(r['t_compute'])} | {fmt_s(r['t_memory'])} | "
+            f"{fmt_s(r['t_collective'])} | **{r['bottleneck'][:4]}** | "
+            f"{r['useful_flops_fraction']:.2f} | {r['mfu_bound']*100:.1f}% |")
+    return "\n".join(out)
+
+
+def bottleneck_notes(recs: List[Dict], mesh: str = "16x16") -> str:
+    """One sentence per cell on what would move the dominant term."""
+    notes = []
+    for r in sorted(recs, key=_key):
+        if r["mesh"] != mesh:
+            continue
+        b = r["bottleneck"]
+        if r["shape"] == "train_4k" and b == "memory":
+            n = ("memory-bound: remat re-reads dominate — relax remat policy "
+                 "or raise arithmetic intensity with larger per-device batch")
+        elif r["shape"].startswith("decode") or r["shape"] == "long_500k":
+            if b == "memory":
+                n = ("memory-bound (expected: decode IS KV-bandwidth-bound) "
+                     "— Loki's d_f/k_f byte cut is the lever; next: "
+                     "feature-major cache layout / quantized cache")
+            elif b == "collective":
+                n = ("collective-bound: shard KV over fewer axes or move "
+                     "top-k to chunk-local selection")
+            else:
+                n = "compute-bound decode: batch large enough to feed MXU"
+        elif b == "compute":
+            n = ("compute-bound: good — push MFU via fusion/layout; "
+                 "check useful-fraction for remat waste")
+        elif b == "collective":
+            n = ("collective-bound: overlap collectives with compute, "
+                 "gradient compression on cross-pod axis")
+        else:
+            n = "memory-bound: increase per-device arithmetic intensity"
+        notes.append(f"- **{r['arch']} {r['shape']} ({r['policy']})**: {n}")
+    return "\n".join(notes)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments",
+        "dryrun"))
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "notes"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run (all cells, both meshes)\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline (single-pod 16x16)\n")
+        print(roofline_table(recs))
+        print()
+    if args.section in ("all", "notes"):
+        print("### Bottleneck notes\n")
+        print(bottleneck_notes(recs))
+
+
+if __name__ == "__main__":
+    main()

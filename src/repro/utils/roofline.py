@@ -1,0 +1,129 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Hardware model: TPU v5e —
+  peak compute   197 TFLOP/s bf16 per chip
+  HBM bandwidth  819 GB/s per chip
+  ICI link       ~50 GB/s per link
+
+Terms (per step, seconds):
+  compute    = FLOPs / (chips × peak)
+  memory     = bytes / (chips × bw)
+  collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` of an SPMD-partitioned executable reports *per-device*
+numbers, so we use them directly against single-chip peaks (equivalent to
+global/chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    policy: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float                  # 6·N·D (global, analytic)
+    chips: int
+    peak_mem_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global). >1 impossible; <<1 = waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization if the step ran exactly at the dominant
+        roofline term (the score we hillclimb)."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.t_bound) / PEAK_FLOPS
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "policy": self.policy,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops": self.model_flops, "chips": self.chips,
+            "peak_mem_per_device": self.peak_mem_per_device,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def count_params(cfg) -> float:
+    """Total (dense-equivalent) and active parameter counts."""
+    d, f, v, l = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    attn = d * (cfg.n_heads * hd) * 2 + d * (cfg.n_kv_heads * hd) * 2
+    gated = cfg.mlp in ("swiglu", "geglu")
+    if cfg.moe:
+        fe = cfg.moe.d_ff_expert
+        per_expert = d * fe * (3 if gated else 2)
+        mlp_total = cfg.moe.n_experts * per_expert + d * cfg.moe.n_experts
+        mlp_active = cfg.moe.top_k * per_expert + d * cfg.moe.n_experts
+    else:
+        mlp_total = mlp_active = d * f * (3 if gated else 2)
+    if cfg.family == "ssm":
+        di = 2 * d
+        mlp_total = mlp_active = d * 2 * d * (3 if gated else 2)
+        attn = 4 * d * d + 2 * d * di       # lstm projections (approx)
+    if cfg.family == "hybrid":
+        di = cfg.ssm.expand * d
+        attn += 2 * d * di + di * d         # mamba in/out proj
+    emb = v * d
+    total = l * (attn + mlp_total) + emb
+    active = l * (attn + mlp_active) + emb
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for train; 2·N_active·B for one decode token; prefill
+    like train forward (2·N·D)."""
+    total, active = count_params(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * tokens
+    # decode: one token per slot
+    return 2.0 * active * shape.global_batch

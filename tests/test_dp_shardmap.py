@@ -1,0 +1,73 @@
+"""Cross-pod DP via shard_map: replica sync, error feedback, compression.
+
+Needs >1 device, so the actual work runs in a subprocess with forced host
+devices (the same mechanism the dry-run uses)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs import get_smoke_config
+    from repro.configs.base import TrainConfig
+    from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
+    from repro.models import lm
+    from repro.training.dp_shardmap import (DPState, init_dp_state,
+                                            make_dp_train_step)
+
+    cfg = get_smoke_config("llama2-7b")
+    mesh = jax.make_mesh((4,), ("pod",))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8, seed=1)
+    data = SyntheticLM(dcfg)
+
+    def run(tcfg, n=8):
+        # fresh params per run: the step donates its state buffers
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        state = init_dp_state(params, 4)
+        step = make_dp_train_step(cfg, tcfg, mesh)
+        with jax.sharding.set_mesh(mesh):
+            losses = []
+            for i in range(n):
+                state, m = step(state, jax_batch(data.batch_at(i)))
+                losses.append(float(m["loss"]))
+        return state, losses
+
+    # 1. uncompressed DP trains
+    st, losses = run(TrainConfig(lr=3e-3, warmup_steps=2, total_steps=20,
+                                 grad_compression="none"))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+
+    # 2. compressed DP with error feedback also trains
+    st_c, losses_c = run(TrainConfig(lr=3e-3, warmup_steps=2, total_steps=20,
+                                     grad_compression="topk",
+                                     compression_ratio=0.1))
+    assert losses_c[-1] < losses_c[0], (losses_c[0], losses_c[-1])
+
+    # 3. ratio=1.0 compression == uncompressed (error feedback sends all)
+    st_f, losses_f = run(TrainConfig(lr=3e-3, warmup_steps=2, total_steps=20,
+                                     grad_compression="topk",
+                                     compression_ratio=1.0), n=3)
+    st_n, losses_n = run(TrainConfig(lr=3e-3, warmup_steps=2, total_steps=20,
+                                     grad_compression="none"), n=3)
+    np.testing.assert_allclose(losses_f, losses_n, rtol=1e-4)
+
+    # 4. error-feedback residuals are nonzero under real compression
+    err_norm = sum(float(jnp.abs(e).sum())
+                   for e in jax.tree.leaves(st_c.err))
+    assert err_norm > 0
+    print("DP_SHARDMAP_OK")
+""")
+
+
+def test_dp_shardmap_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=540)
+    assert "DP_SHARDMAP_OK" in r.stdout, r.stdout + "\n" + r.stderr

@@ -1,0 +1,169 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles.
+
+Kernels run with interpret=True (Python execution of the kernel body on CPU);
+on TPU hardware the identical pallas_call compiles through Mosaic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.approx_scores import block_max_scores
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gather_attention import block_sparse_attention
+from repro.kernels.ops import loki_decode_attention
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,s,dim,bs,d", [
+    (4, 256, 64, 32, 16),
+    (2, 512, 128, 128, 32),
+    (1, 128, 128, 64, 64),
+    (3, 384, 256, 128, 32),     # gemma head_dim, non-pow2 BH
+    (8, 256, 64, 64, 8),
+])
+def test_block_max_scores(bh, s, dim, bs, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (bh, dim), dtype)
+    k = _rand(ks[1], (bh, s, dim), dtype)
+    cur = jax.random.randint(ks[2], (bh,), 1, s + 1)
+    got = block_max_scores(q, k, cur, d=d, block_size=bs, interpret=True)
+    want = ref.block_max_scores_ref(q, k, cur, d=d, block_size=bs)
+    np.testing.assert_allclose(got, want, rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,s,dim,bs,nsel", [
+    (4, 256, 64, 32, 4),
+    (2, 512, 128, 128, 2),
+    (3, 384, 256, 128, 3),
+    (1, 1024, 128, 128, 8),
+])
+def test_block_sparse_attention(bh, s, dim, bs, nsel, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q = _rand(ks[0], (bh, dim), dtype)
+    k = _rand(ks[1], (bh, s, dim), dtype)
+    v = _rand(ks[2], (bh, s, dim), dtype)
+    cur = jax.random.randint(ks[3], (bh,), bs, s + 1)
+    nb = s // bs
+    # random *distinct* block selection per row
+    bidx = jnp.stack([
+        jax.random.permutation(jax.random.fold_in(ks[4], i), nb)[:nsel]
+        for i in range(bh)])
+    got = block_sparse_attention(q, k, v, bidx, cur, block_size=bs,
+                                 interpret=True)
+    want = ref.block_sparse_attention_ref(q, k, v, bidx, cur, block_size=bs)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=5e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("bh,sq,sk,dim,bq,bk", [
+    (2, 128, 128, 64, 32, 32),
+    (1, 256, 256, 128, 128, 64),
+    (3, 128, 128, 256, 64, 128),
+])
+def test_flash_attention(bh, sq, sk, dim, bq, bk, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (bh, sq, dim), dtype)
+    k = _rand(ks[1], (bh, sk, dim), dtype)
+    v = _rand(ks[2], (bh, sk, dim), dtype)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk, causal=causal,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 2e-5,
+        atol=3e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+def test_full_pipeline_selects_all_blocks_equals_dense():
+    """k_blocks = all blocks -> block-sparse flash == dense attention."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    bh, s, dim, bs = 2, 256, 64, 32
+    q = _rand(ks[0], (bh, dim), jnp.float32)
+    k = _rand(ks[1], (bh, s, dim), jnp.float32)
+    v = _rand(ks[2], (bh, s, dim), jnp.float32)
+    cur = jnp.array([s, s // 2])
+    out = loki_decode_attention(q, k, v, cur, d=dim, k_blocks=s // bs,
+                                block_size=bs, interpret=True)
+    # dense reference
+    sc = jnp.einsum("bd,bsd->bs", q, k) * dim ** -0.5
+    sc = jnp.where(jnp.arange(s)[None] < cur[:, None], sc, -1e30)
+    want = jnp.einsum("bs,bsd->bd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_pipeline_matches_jnp_block_oracle():
+    """Kernel pipeline == core.loki.loki_decode_block for a single head."""
+    from repro.configs.base import LokiConfig
+    from repro.core.loki import loki_decode_block
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    b, s, dim, bs = 2, 256, 64, 32
+    q = _rand(ks[0], (b, 1, dim), jnp.float32)       # 1 head
+    k = _rand(ks[1], (b, s, 1, dim), jnp.float32)
+    v = _rand(ks[2], (b, s, 1, dim), jnp.float32)
+    cur = jnp.array([s, s])
+    cfg = LokiConfig(enabled=True, d_f=0.25, k_f=0.25, block_size=bs,
+                     local_window=0)
+    proj = jnp.eye(dim)[None]
+    want = loki_decode_block(q[:, 0][:, None, :].reshape(b, 1, dim),
+                             k, v, cur, proj, cfg)
+    got = loki_decode_attention(
+        q.reshape(b, dim), k.reshape(b, s, dim), v.reshape(b, s, dim),
+        cur, d=16, k_blocks=max(int(0.25 * (s // bs)), 1),
+        block_size=bs, interpret=True)
+    np.testing.assert_allclose(got, want.reshape(b, dim), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------- feature-major variant
+
+@pytest.mark.parametrize("bh,s,dim,bs,d", [
+    (4, 256, 64, 64, 16), (2, 512, 128, 128, 32), (8, 256, 128, 64, 64),
+    (1, 384, 64, 128, 8),
+])
+def test_block_max_scores_feature_major(bh, s, dim, bs, d):
+    """The (D,S) sublane-slice kernel computes identical block maxima to the
+    token-major kernel and the jnp oracle."""
+    from repro.kernels.approx_scores_fm import block_max_scores_fm
+    ks = jax.random.split(jax.random.PRNGKey(bh * s), 3)
+    q = jax.random.normal(ks[0], (bh, dim), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, s, dim), jnp.float32)
+    cur = jax.random.randint(ks[2], (bh,), s // 2, s + 1)
+    scale = dim ** -0.5
+    want = ref.block_max_scores_ref(q, k, cur, d=d, block_size=bs,
+                                    scale=scale)
+    got = block_max_scores_fm(q, jnp.swapaxes(k, 1, 2), cur, d=d,
+                              block_size=bs, scale=scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_feature_major_pipeline_matches_token_major():
+    from repro.kernels.ops import (loki_decode_attention,
+                                   loki_decode_attention_fm)
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    bh, s, dim, bs = 4, 512, 64, 128
+    q = jax.random.normal(ks[0], (bh, dim), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, s, dim), jnp.float32)
+    v = jax.random.normal(ks[2], (bh, s, dim), jnp.float32)
+    cur = jnp.full((bh,), s, jnp.int32)
+    tm = loki_decode_attention(q, k, v, cur, d=16, k_blocks=2,
+                               block_size=bs, interpret=True)
+    fm = loki_decode_attention_fm(q, jnp.swapaxes(k, 1, 2), v, cur, d=16,
+                                  k_blocks=2, block_size=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(tm), np.asarray(fm),
+                               rtol=1e-5, atol=1e-5)

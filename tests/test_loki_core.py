@@ -1,0 +1,195 @@
+"""Core Loki invariants (paper Lemmas 4.1/4.2 + algorithm behaviour) and
+property-based tests with hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LokiConfig
+from repro.core import pca as PCA
+from repro.core.attention import decode_full
+from repro.core.baselines import exact_topk_decode, h2o_decode, h2o_init, H2OState
+from repro.core.loki import loki_decode, loki_decode_block, loki_decode_chunked
+
+
+def _setup(b=2, hkv=2, g=2, s=64, d=32, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    h = hkv * g
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    return q, k, v
+
+
+def _orthogonal(hkv, d, seed=0):
+    rng = np.random.RandomState(seed)
+    mats = [np.linalg.qr(rng.randn(d, d))[0] for _ in range(hkv)]
+    return jnp.asarray(np.stack(mats), jnp.float32)
+
+
+class TestLemma41:
+    """Attention in any orthogonal basis is exact (k_f = d_f = 1)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_exact_in_rotated_basis(self, seed):
+        q, k, v = _setup(seed=seed)
+        b, s, hkv, d = k.shape
+        proj = _orthogonal(hkv, d, seed)
+        k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+        cur = jnp.array([s, s // 2])
+        cfg = LokiConfig(d_f=1.0, k_f=1.0, local_window=0, min_k=1)
+        got = loki_decode(q, k_hat, v, cur, proj, cfg)
+        want = decode_full(q, k, v, cur)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_chunked_exact_at_full_budget(self):
+        q, k, v = _setup(s=64)
+        b, s, hkv, d = k.shape
+        proj = _orthogonal(hkv, d)
+        k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+        cur = jnp.array([s, s])
+        cfg = LokiConfig(d_f=1.0, k_f=1.0, local_window=0, min_k=1,
+                         n_chunks=4)
+        got = loki_decode_chunked(q, k_hat, v, cur, proj, cfg)
+        want = decode_full(q, k, v, cur)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestLemma42:
+    """PCA leading-d scores approximate true scores better than random-d."""
+
+    def test_pca_beats_random_projection(self):
+        rng = np.random.RandomState(0)
+        d, n = 64, 4096
+        # low-rank-ish keys: 8 strong directions + noise
+        basis = rng.randn(8, d)
+        keys = rng.randn(n, 8) @ basis + 0.1 * rng.randn(n, d)
+        cov = np.cov(keys.T)
+        proj, eig = PCA.eig_projections(cov[None, None])
+        p = proj[0, 0]                         # (d, d)
+        q = rng.randn(d)
+        true = keys @ q
+        d_red = 16
+        approx_pca = (keys @ p)[:, :d_red] @ (q @ p)[:d_red]
+        r = np.linalg.qr(rng.randn(d, d))[0]
+        approx_rand = (keys @ r)[:, :d_red] @ (q @ r)[:d_red]
+        assert (np.linalg.norm(true - approx_pca)
+                < 0.5 * np.linalg.norm(true - approx_rand))
+
+    def test_rank_at_recovers_low_rank(self):
+        rng = np.random.RandomState(1)
+        d, n, true_rank = 64, 8192, 8
+        keys = rng.randn(n, true_rank) @ rng.randn(true_rank, d)
+        keys += 1e-3 * rng.randn(n, d)
+        cov = np.cov(keys.T)
+        _, eig = PCA.eig_projections(cov[None, None])
+        r90 = PCA.rank_at(eig, 0.90)[0, 0]
+        assert r90 <= true_rank + 1
+
+
+class TestSelection:
+    def test_loki_selects_planted_token(self):
+        """A key identical to the query direction must be selected."""
+        q, k, v = _setup(s=64)
+        b, s, hkv, d = k.shape
+        # plant: key 17 = 10x the query of head (0,0)
+        k = k.at[:, 17, 0, :].set(10.0 * q[:, 0, :d])
+        proj = jnp.stack([jnp.eye(d)] * hkv)
+        cur = jnp.array([s, s])
+        cfg = LokiConfig(d_f=0.5, k_f=0.25, local_window=0, min_k=4)
+        out = loki_decode(q, k, v, cur, proj, cfg)
+        # attention output for head 0 should be dominated by v[17]
+        np.testing.assert_allclose(out[:, 0], v[:, 17, 0], rtol=0.2,
+                                   atol=0.2)
+
+    def test_exact_topk_upper_bound_consistency(self):
+        q, k, v = _setup()
+        b, s, hkv, d = k.shape
+        cur = jnp.array([s, s])
+        cfg = LokiConfig(k_f=1.0, min_k=1, local_window=0)
+        got = exact_topk_decode(q, k, v, cur, cfg)
+        want = decode_full(q, k, v, cur)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestH2O:
+    def test_budget_respected_and_finite(self):
+        b, hkv, g, d = 2, 2, 2, 16
+        budget = 8
+        st_ = h2o_init(b, budget, hkv, d, jnp.float32)
+        key = jax.random.PRNGKey(0)
+        for step in range(20):
+            ks = jax.random.split(jax.random.fold_in(key, step), 3)
+            q = jax.random.normal(ks[0], (b, hkv * g, d))
+            kn = jax.random.normal(ks[1], (b, hkv, d))
+            vn = jax.random.normal(ks[2], (b, hkv, d))
+            out, st_ = h2o_decode(q, kn, vn, st_, jnp.full((b,), step))
+            assert bool(jnp.isfinite(out).all())
+        assert st_.k.shape[1] == budget
+        assert int(st_.fill.max()) <= budget
+        # all slots live after 20 > 8 steps
+        assert bool((st_.pos >= 0).all())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([32, 64, 128]),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([16, 32]),
+    kf=st.sampled_from([0.25, 0.5, 1.0]),
+    df=st.sampled_from([0.25, 0.5, 1.0]),
+    seed=st.integers(0, 10_000),
+)
+def test_property_loki_output_is_convex_combination(s, hkv, g, d, kf, df,
+                                                    seed):
+    """Loki's output per head lies in the convex hull of the values (modulo
+    fp error): ||out|| <= max_s ||v_s|| and output is finite."""
+    q, k, v = _setup(b=1, hkv=hkv, g=g, s=s, d=d, seed=seed % 64)
+    proj = _orthogonal(hkv, d, seed % 17)
+    k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+    cur = jnp.array([s])
+    cfg = LokiConfig(d_f=df, k_f=kf, local_window=0, min_k=1)
+    out = loki_decode(q, k_hat, v, cur, proj, cfg)
+    assert bool(jnp.isfinite(out).all())
+    vmax = float(jnp.abs(v).max())
+    assert float(jnp.abs(out).max()) <= vmax + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nc=st.sampled_from([2, 4, 8]),
+    s=st.sampled_from([64, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_property_chunked_equals_global_at_full_k(nc, s, seed):
+    q, k, v = _setup(b=1, s=s, seed=seed % 32)
+    b, _, hkv, d = k.shape
+    proj = _orthogonal(hkv, d, seed % 7)
+    k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+    cur = jnp.array([s])
+    cfg = LokiConfig(d_f=1.0, k_f=1.0, local_window=0, min_k=1, n_chunks=nc)
+    got = loki_decode_chunked(q, k_hat, v, cur, proj, cfg)
+    want = decode_full(q, k, v, cur)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_pca_calibration_end_to_end():
+    """Streaming covariance + eigh recovers orthogonal projections, and
+    identity calibration matches the identity transform."""
+    st_ = PCA.KeyStats.create(2, 2, 16)
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        st_.update(rng.randn(2, 2, 8, 2, 16))
+    cov = st_.covariance()
+    proj, eig = PCA.eig_projections(cov)
+    # columns orthonormal
+    for l in range(2):
+        for h in range(2):
+            p = proj[l, h]
+            np.testing.assert_allclose(p.T @ p, np.eye(16), atol=1e-4)
+    assert eig.shape == (2, 2, 16)
+    np.testing.assert_allclose(eig.sum(-1), 1.0, atol=1e-5)
+    # descending
+    assert (np.diff(eig) <= 1e-7).all()

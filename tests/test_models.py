@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates a reduced config, runs one forward + one train step on CPU,
+asserts output shapes and no NaNs; plus decode-policy consistency and
+prefill/decode agreement with the teacher-forced forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED_ARCHS, get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
+from repro.models import lm
+from repro.optim import adamw
+from repro.training.step import TrainState, make_train_step
+
+
+def _inputs(cfg, b=2, s=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["frames"] = jax.random.normal(key, (b, cfg.enc_seq, cfg.d_model))
+    if cfg.vision_tokens:
+        kw["patches"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.d_model))
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    toks, kw = _inputs(cfg)
+    logits, aux = lm.forward(params, toks, cfg, **kw)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=10, z_loss=1e-4)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    state = TrainState(params, adamw.init_state(params))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    toks, kw = _inputs(cfg)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1), **kw}
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), state.params, params)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    toks, kw = _inputs(cfg)
+    logits, cache, pos = lm.prefill(params, cfg, toks, smax=32, **kw)
+    assert logits.shape == (2, cfg.vocab)
+    lg, cache = lm.decode_step(params, cfg, cache, jnp.array([1, 2]), pos)
+    assert lg.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(lg).all())
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "qwen2.5-14b", "mixtral-8x22b",
+                                  "hymba-1.5b", "whisper-small"])
+def test_prefill_decode_matches_forward(arch):
+    """Greedy continuation from prefill+decode must equal the teacher-forced
+    forward logits at the same positions (full attention, fp32 cache)."""
+    cfg = get_smoke_config(arch)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    toks, kw = _inputs(cfg, b=2, s=12)
+    full_logits, _ = lm.forward(params, toks, cfg, **kw)
+    lg, cache, pos = lm.prefill(params, cfg, toks[:, :8], smax=16,
+                                cache_dtype=jnp.float32, **kw)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full_logits[:, 7]), rtol=2e-3, atol=2e-3)
+    # decode token 8 with the cache == forward logits at position 8
+    lg2, cache = lm.decode_step(params, cfg, cache, toks[:, 8], pos)
+    np.testing.assert_allclose(
+        np.asarray(lg2), np.asarray(full_logits[:, 8]), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("policy", ["loki", "loki_block", "exact_topk",
+                                    "pcaattn", "h2o"])
+def test_policies_decode_all_archs_dense(policy):
+    cfg = get_smoke_config("qwen2.5-3b").with_policy(
+        policy, d_f=0.5, k_f=0.5, block_size=8, local_window=0)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    toks, kw = _inputs(cfg, s=24)
+    lg, cache, pos = lm.prefill(params, cfg, toks, smax=32)
+    for i in range(3):
+        lg, cache = lm.decode_step(params, cfg, cache,
+                                   jnp.array([i + 1, i + 2]), pos + i)
+        assert bool(jnp.isfinite(lg).all()), f"{policy} step {i}"
+
+
+def test_loki_close_to_full_on_trained_signal():
+    """On structured data with a briefly trained model, Loki (k=0.5,d=0.5)
+    logits stay close to full-attention logits — the paper's quality claim
+    in miniature."""
+    cfg = get_smoke_config("llama2-7b")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=7)
+    data = SyntheticLM(dcfg)
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    state = TrainState(params, adamw.init_state(params))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    for i in range(30):
+        state, m = step(state, jax_batch(data.batch_at(i)))
+    batch = jax_batch(data.batch_at(999))
+    toks = batch["tokens"][:, :24]
+
+    def decode_logits(c):
+        lg, cache, pos = lm.prefill(state.params, c, toks, smax=32,
+                                    cache_dtype=jnp.float32)
+        return np.asarray(lg)
+
+    full = decode_logits(cfg)
+    loki = decode_logits(cfg.with_policy("loki", d_f=0.5, k_f=0.5,
+                                         local_window=4))
+    # same prefill path -> prefill logits identical; compare decode step
+    lgf, cf, pf = lm.prefill(state.params, cfg, toks, smax=40,
+                             cache_dtype=jnp.float32)
+    cl = cfg.with_policy("loki", d_f=0.5, k_f=0.5, local_window=4)
+    lgl, cl_cache, pl = lm.prefill(state.params, cl, toks, smax=40,
+                                   cache_dtype=jnp.float32)
+    nxt = jnp.argmax(lgf, -1)
+    of, _ = lm.decode_step(state.params, cfg, cf, nxt, pf)
+    ol, _ = lm.decode_step(state.params, cl, cl_cache, nxt, pl)
+    top1_full = np.asarray(jnp.argmax(of, -1))
+    top1_loki = np.asarray(jnp.argmax(ol, -1))
+    assert (top1_full == top1_loki).mean() >= 0.5

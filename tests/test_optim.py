@@ -1,0 +1,94 @@
+"""Optimizer + gradient-compression tests (unit + property)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.optim import adamw
+from repro.optim.compression import (error_feedback_compress, int8_compress,
+                                     int8_decompress, topk_compress,
+                                     topk_decompress)
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    state = adamw.init_state(params)
+    tcfg = TrainConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                       weight_decay=0.0)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, tcfg)
+    assert float(loss(params)) < 0.5
+
+
+def test_adamw_freezes_pca():
+    params = {"attn": {"wq": jnp.ones((2, 2)), "pca": jnp.eye(2)}}
+    state = adamw.init_state(params)
+    tcfg = TrainConfig(lr=0.1, warmup_steps=1, total_steps=10)
+    g = jax.tree.map(jnp.ones_like, params)
+    new, state, _ = adamw.apply_updates(params, g, state, tcfg)
+    np.testing.assert_array_equal(np.asarray(new["attn"]["pca"]), np.eye(2))
+    assert float(jnp.abs(new["attn"]["wq"] - 1.0).max()) > 0
+
+
+def test_cosine_schedule_shape():
+    tcfg = TrainConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lr = adamw.cosine_schedule(tcfg)
+    s = lambda i: float(lr(jnp.int32(i)))
+    assert s(0) < s(9) <= 1.0                        # warmup rises
+    assert s(10) >= s(50) >= s(99)                   # cosine decays
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+# ------------------------------------------------------------ compression
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 2048), seed=st.integers(0, 999),
+       ratio=st.sampled_from([0.01, 0.1, 0.5]))
+def test_property_topk_roundtrip_preserves_topk(n, seed, ratio):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    vals, idx, size = topk_compress(g, ratio)
+    dense = topk_decompress(vals, idx, size)
+    k = max(1, int(n * ratio))
+    top = jnp.argsort(-jnp.abs(g))[:k]
+    np.testing.assert_allclose(np.asarray(dense[top]), np.asarray(g[top]),
+                               rtol=1e-6)
+    # everything else is zero
+    mask = jnp.zeros((n,), bool).at[idx].set(True)
+    assert float(jnp.abs(jnp.where(mask, 0.0, dense)).max()) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=st.sampled_from([(64,), (33,), (8, 77), (256, 3)]),
+       seed=st.integers(0, 999))
+def test_property_int8_error_bound(shape, seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    rec = int8_decompress(*int8_compress(g))
+    assert rec.shape == g.shape
+    # symmetric per-chunk quantization: error <= scale/2 = max|chunk|/254
+    err = float(jnp.abs(rec - g).max())
+    assert err <= float(jnp.abs(g).max()) / 254.0 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    """With error feedback the residual of step t is sent eventually: over
+    two steps the sum of wire values approximates the gradient better than
+    two independent truncations."""
+    g = jnp.array([1.0, 0.9, 0.01, 0.02, 0.015, 0.005, 0.0, 0.0])
+    err = jnp.zeros_like(g)
+    sent_total = jnp.zeros_like(g)
+    for _ in range(8):
+        vals, idx, err = error_feedback_compress(g, err, ratio=0.25)
+        sent_total = sent_total + topk_decompress(vals, idx, g.size)
+    # after 8 rounds of k=2, everything nonzero has been transmitted
+    np.testing.assert_allclose(np.asarray(sent_total / 8),
+                               np.asarray(g), atol=0.15)

@@ -1,0 +1,78 @@
+"""Calibration wiring + model-level Lemma 4.1: with a calibrated orthogonal
+basis installed and a full budget (k_f=d_f=1), Loki decode equals full
+attention decode exactly (up to fp tolerance) — the end-to-end statement of
+the paper's exactness lemma."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import pca as PCA
+from repro.models import lm
+
+
+def _calibrated_model():
+    cfg = get_smoke_config("llama2-7b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    batches = [jax.random.randint(jax.random.PRNGKey(i), (2, 24),
+                                  0, cfg.vocab) for i in range(2)]
+    calib = PCA.calibrate_model(params, cfg, batches)
+    return params, cfg, calib
+
+
+def test_install_replaces_only_pca():
+    params, cfg, calib = _calibrated_model()
+    new = PCA.install_projections(params, calib, "pre")
+    assert new["layers"]["attn"]["pca"].shape == (
+        cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim,
+        cfg.resolved_head_dim)
+    # projections orthogonal per (layer, head)
+    p = np.asarray(new["layers"]["attn"]["pca"])
+    for l in range(cfg.n_layers):
+        for h in range(cfg.n_kv_heads):
+            np.testing.assert_allclose(p[l, h].T @ p[l, h],
+                                       np.eye(p.shape[-1]), atol=1e-3)
+    # everything else untouched (same objects)
+    assert new["embed"] is params["embed"]
+    np.testing.assert_array_equal(
+        np.asarray(new["layers"]["attn"]["wq"]),
+        np.asarray(params["layers"]["attn"]["wq"]))
+
+
+def test_lemma41_full_budget_loki_equals_full():
+    params, cfg, calib = _calibrated_model()
+    loki_params = PCA.install_projections(params, calib, "post")
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 16), 0, cfg.vocab)
+
+    lg_f, cache_f, pos_f = lm.prefill(params, cfg, toks, smax=24,
+                                      cache_dtype=jnp.float32)
+    c_loki = cfg.with_policy("loki", k_f=1.0, d_f=1.0, min_k=1,
+                             local_window=0)
+    lg_l, cache_l, pos_l = lm.prefill(loki_params, c_loki, toks, smax=24,
+                                      cache_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_l),
+                               rtol=2e-3, atol=2e-3)
+    nxt = jnp.argmax(lg_f, -1)
+    of, _ = lm.decode_step(params, cfg, cache_f, nxt, pos_f)
+    ol, _ = lm.decode_step(loki_params, c_loki, cache_l, nxt, pos_l)
+    np.testing.assert_allclose(np.asarray(of), np.asarray(ol),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_chunked_lemma41_through_model():
+    """n_chunks>0 (the distributed selection path) at full budget also
+    matches full attention through the whole model."""
+    params, cfg, calib = _calibrated_model()
+    loki_params = PCA.install_projections(params, calib, "pre")
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, cfg.vocab)
+    lg_f, cache_f, pos_f = lm.prefill(params, cfg, toks, smax=32,
+                                      cache_dtype=jnp.float32)
+    c_loki = cfg.with_policy("loki", k_f=1.0, d_f=1.0, min_k=1,
+                             local_window=0, n_chunks=4)
+    lg_l, cache_l, pos_l = lm.prefill(loki_params, c_loki, toks, smax=32,
+                                      cache_dtype=jnp.float32)
+    nxt = jnp.argmax(lg_f, -1)
+    of, _ = lm.decode_step(params, cfg, cache_f, nxt, pos_f)
+    ol, _ = lm.decode_step(loki_params, c_loki, cache_l, nxt, pos_l)
+    np.testing.assert_allclose(np.asarray(of), np.asarray(ol),
+                               rtol=3e-3, atol=3e-3)

@@ -1,0 +1,91 @@
+"""Serving engine: continuous batching, slot reuse, policy parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+
+
+def _model():
+    cfg = get_smoke_config("qwen2.5-3b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def test_requests_complete_and_slots_recycle():
+    params, cfg = _model()
+    eng = ServingEngine(params, cfg, n_slots=2, smax=64)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i) % cfg.vocab, max_new=5)
+            for i in range(5)]            # 5 requests > 2 slots
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=500)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 5 for r in reqs)
+    assert not eng.live.any()
+
+
+def test_engine_matches_direct_decode():
+    """A single request through the engine produces the same greedy tokens
+    as manual prefill+decode."""
+    params, cfg = _model()
+    prompt = (np.arange(8) * 3 + 1) % cfg.vocab
+    eng = ServingEngine(params, cfg, n_slots=1, smax=64)
+    req = Request(rid=0, prompt=prompt, max_new=6)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=100)
+
+    toks = jnp.asarray(prompt[None].astype(np.int32))
+    lg, cache, pos = lm.prefill(params, cfg, toks, smax=64,
+                                cache_dtype=jnp.float32)
+    out = []
+    tok = jnp.argmax(lg, -1)
+    for _ in range(6):
+        out.append(int(tok[0]))
+        lg, cache = lm.decode_step(params, cfg, cache, tok, pos)
+        pos = pos + 1
+        tok = jnp.argmax(lg, -1)
+    assert req.out == out
+
+
+def test_eos_stops_early():
+    params, cfg = _model()
+    # find the greedy first token and use it as eos
+    prompt = np.arange(6) % cfg.vocab
+    probe = ServingEngine(params, cfg, n_slots=1, smax=64)
+    r0 = Request(rid=0, prompt=prompt.copy(), max_new=1)
+    probe.submit(r0)
+    probe.run_until_done(100)
+    eos = r0.out[0]
+    eng = ServingEngine(params, cfg, n_slots=1, smax=64, eos_id=eos)
+    req = Request(rid=1, prompt=prompt.copy(), max_new=50)
+    eng.submit(req)
+    eng.run_until_done(200)
+    assert req.done and len(req.out) == 1 and req.out[0] == eos
+
+
+def test_ragged_batch_isolation():
+    """Two concurrent requests with different prompts produce the same
+    outputs as when served alone (per-slot positions keep them exact)."""
+    params, cfg = _model()
+    p1 = (np.arange(5) * 7 + 2) % cfg.vocab
+    p2 = (np.arange(9) * 5 + 3) % cfg.vocab
+
+    def alone(prompt):
+        eng = ServingEngine(params, cfg, n_slots=1, smax=64)
+        r = Request(rid=0, prompt=prompt.copy(), max_new=4)
+        eng.submit(r)
+        eng.run_until_done(100)
+        return r.out
+
+    solo1, solo2 = alone(p1), alone(p2)
+    eng = ServingEngine(params, cfg, n_slots=2, smax=64)
+    r1 = Request(rid=1, prompt=p1.copy(), max_new=4)
+    r2 = Request(rid=2, prompt=p2.copy(), max_new=4)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.run_until_done(200)
+    assert r1.out == solo1
+    assert r2.out == solo2

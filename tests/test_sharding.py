@@ -1,0 +1,96 @@
+"""Sharding rule engine: divisibility, padding pass, dedup, mesh filtering."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import axes as AX
+from repro.sharding.rules import DEFAULT_RULES, spec_for
+
+
+class FakeMesh:
+    """Minimal stand-in exposing .axis_names / .shape like jax Mesh."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_mapping():
+    sp = spec_for(("batch", "seq", "heads", None), (256, 128, 32, 64), MESH)
+    assert sp == P("data", None, "model")
+
+
+def test_divisible_fallback_replicates():
+    # kv_heads=2 cannot take a 16-way axis
+    sp = spec_for(("batch", "kv_seq", "kv_heads", None),
+                  (128, 4096, 2, 128), MESH)
+    assert sp == P("data", "model")
+
+
+def test_padded_only_when_allowed():
+    # 24 heads on 16: replicate for inputs, padded-shard for constraints
+    sp_in = spec_for(("batch", "seq", "heads", None), (32, 64, 24, 64), MESH)
+    assert sp_in == P("data")
+    sp_c = spec_for(("batch", "seq", "heads", None), (32, 64, 24, 64), MESH,
+                    allow_padded=True)
+    assert sp_c == P("data", None, "model")
+
+
+def test_padded_rejects_high_waste():
+    # kv_heads=2 on 16-way: 8x padding waste — reject even when allowed
+    sp = spec_for(("batch", None, "kv_heads", None), (32, 4, 2, 64), MESH,
+                  allow_padded=True)
+    assert sp == P("data")
+
+
+def test_axis_dedup_first_divisible_wins():
+    # expert=40 can't take model; expert_capacity=64 can
+    sp = spec_for(("moe_group", "expert", "expert_capacity", None),
+                  (256, 40, 64, 1536), MESH)
+    assert sp == P("data", None, "model")
+    # expert=8... on an 8-way model mesh it wins and capacity is deduped
+    mesh8 = FakeMesh({"data": 2, "model": 8})
+    sp2 = spec_for(("moe_group", "expert", "expert_capacity", None),
+                   (256, 8, 64, 1536), mesh8)
+    assert sp2 == P("data", "model")
+
+
+def test_missing_mesh_axis_dropped():
+    sp = spec_for(("batch",), (32,), MESH)           # 'pod' not in mesh
+    assert sp == P("data")
+    sp_mp = spec_for(("batch",), (32,), MESH_MP)
+    assert sp_mp == P(("pod", "data"))
+
+
+def test_logical_axes_longer_than_shape():
+    # decode-path tensors reuse train constraints on squeezed shapes:
+    # out-of-range logical axes must not shard (or crash on) anything
+    sp = spec_for(("batch", "seq", "mlp"), (32, 256), MESH)
+    assert sp == P("data")
+    sp2 = spec_for(("batch", "seq", "mlp"), (8, 256), MESH)
+    assert sp2 == P()                    # 8 % 16 != 0 -> replicated too
+
+
+def test_param_axes_tree_matches_rank():
+    import jax
+    import jax.numpy as jnp
+    shapes = {"layers": {"attn": {
+        "wq": jax.ShapeDtypeStruct((4, 128, 256), jnp.float32),  # stacked
+        "pca": jax.ShapeDtypeStruct((4, 2, 64, 64), jnp.float32),
+    }}}
+    axes = AX.param_axes_tree(shapes)
+    assert axes["layers"]["attn"]["wq"] == (None, "embed", "qkv")
+    assert axes["layers"]["attn"]["pca"] == (None, "kv_heads", None, None)
+
+
+def test_cache_axes():
+    import jax
+    import jax.numpy as jnp
+    shapes = {"layers": {"attn": {
+        "k": jax.ShapeDtypeStruct((8, 1024, 4, 64), jnp.float32)}}}
+    axes = AX.cache_axes_tree(shapes)
+    assert axes["layers"]["attn"]["k"] == ("batch", "kv_seq", "kv_heads",
+                                           None)
