@@ -1,9 +1,12 @@
-"""Paper Appendix C: kernel benchmark (ours vs SparQ-style vs dense).
+"""Paper Appendix C: kernel benchmark (ours vs SparQ-style vs dense), plus
+the fused-decode comparison (fused vs two-pass vs jnp).
 
 The container is CPU-only, so Pallas kernels run in interpret mode — their
 *correctness* is asserted against the pure-jnp oracle across a shape sweep,
 and the performance comparison is made on the hardware-determining quantity:
-HBM bytes each kernel design must move per decode step.
+HBM bytes each kernel design must move per decode step. Wall-clock rows are
+also emitted (flagged ``interpret`` when the kernel ran in the Python
+interpreter — meaningful only relative to other interpret rows).
 
 Designs modeled:
   dense      — full-D, full-S reads of K̂ and V (vanilla attention)
@@ -14,16 +17,47 @@ Designs modeled:
   loki(ours) — contiguous leading-d slice (PCA ordering) => exactly d/D of
                the score-pass bytes, single K̂ copy; block-gathered exact
                pass moves k/S of K̂,V.
+
+Fused-decode designs (DESIGN.md §4, ``--backend pallas``):
+  jnp        — XLA reference: approx scores + block maxima materialize in
+               HBM, per-head top_k + gather
+  two_pass   — seed kernel pair, per query head: block-max kernel writes
+               (BH, S/bs) maxima to HBM, host top_k, sparse-attention kernel
+  two_kernel — GQA-batched fallback: fused score+select (scores stay in
+               VMEM, only (B,Hkv,kb) indices cross HBM) + grouped attention
+  fused      — single-pass kernel: nothing intermediate touches HBM, every
+               cache byte read once per *group*
+
+Results are written to ``BENCH_kernels.json`` at the repo root (the perf
+trajectory future PRs regress against) and to experiments/bench/.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):                     # `python benchmarks/...py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (_root, os.path.join(_root, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.kernels.ops import loki_decode_attention
+from repro.configs.base import LokiConfig
+from repro.core.loki import loki_decode_block
+from repro.kernels.ops import (loki_decode_attention, loki_decode_fused,
+                               loki_decode_two_kernel)
 from repro.kernels import ref
+
+ROOT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernels.json")
 
 
 def correctness_sweep() -> list:
@@ -84,11 +118,109 @@ def vmem_tile_efficiency(dim=128, d=32, lane=128, sublane=8) -> list:
     }]
 
 
-def run() -> list:
+# ---------------------------------------------- fused decode comparison
+
+def fused_bytes_model(s, dim, g, bs, d_f=0.25, k_f=0.25, itemsize=2) -> dict:
+    """HBM bytes one decode step must move per KV group, by design."""
+    d = max(int(d_f * dim), 8)
+    nb = s // bs
+    kb = max(int(k_f * nb), 1)
+    score_read = s * d * itemsize                 # leading-d slice of K̂
+    attn_read = 2 * kb * bs * dim * itemsize      # selected K̂ + V blocks
+    q_bytes = g * dim * itemsize
+    idx_bytes = kb * 4
+    blkmax_bytes = nb * 4
+    # jnp/XLA: full fp32 score row + block maxima round-trip HBM, per head
+    jnp_bytes = (g * (score_read + attn_read + 2 * q_bytes)
+                 + g * (s * 4 + blkmax_bytes) * 2 + g * idx_bytes * 2)
+    # seed two-pass kernels: per query head; block maxima + indices via HBM
+    two_pass = (g * (score_read + attn_read + 2 * q_bytes)
+                + g * blkmax_bytes * 2 + g * idx_bytes * 2)
+    # grouped two-kernel fallback: one score stream per group; only the tiny
+    # index row crosses HBM between the kernels
+    two_kernel = score_read + attn_read + 2 * q_bytes + idx_bytes * 2
+    # fused single-pass: cache bytes once per group, nothing intermediate
+    fused = score_read + attn_read + q_bytes
+    return {"jnp_bytes": jnp_bytes, "two_pass_bytes": two_pass,
+            "two_kernel_bytes": two_kernel, "fused_bytes": fused,
+            "fused_vs_two_pass": two_pass / fused,
+            "fused_vs_jnp": jnp_bytes / fused}
+
+
+def fused_decode_sweep(backend: str = "pallas") -> list:
+    """fused vs two-pass vs jnp: parity, tokens/s and bytes-moved."""
+    rows = []
+    shapes = [                                  # (b, hkv, g, s, dim, bs)
+        (2, 2, 1, 1024, 64, 128),
+        (2, 2, 4, 1024, 64, 128),
+        (1, 2, 8, 2048, 128, 128),
+    ]
+    interpret = jax.default_backend() != "tpu"
+    for b, hkv, g, s, dim, bs in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(s + g), 3)
+        q = jax.random.normal(ks[0], (b, hkv * g, dim), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hkv, dim), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hkv, dim), jnp.float32)
+        cur = jnp.full((b,), s, jnp.int32)
+        proj = jnp.broadcast_to(jnp.eye(dim), (hkv, dim, dim))
+        cfg = LokiConfig(enabled=True, d_f=0.25, k_f=0.25, block_size=bs,
+                         local_window=0)
+        d = max(int(cfg.d_f * dim), 8)
+        kb = max(int(cfg.k_f * (s // bs)), 1)
+        q_hat = q.reshape(b, hkv, g, dim)
+
+        # jit over real arguments: a nullary closure would constant-fold
+        # the whole computation and time only dispatch overhead
+        oracle = jax.jit(lambda q_, k_, v_, c_: loki_decode_block(
+            q_, k_, v_, c_, proj, cfg, group_select=True))
+        want = np.asarray(oracle(q, k, v, cur)).reshape(b, hkv, g, dim)
+        t_jnp = common.time_fn(
+            lambda: jax.block_until_ready(oracle(q, k, v, cur)), repeats=5)
+        row = {"bench": "kernels",
+               "case": f"fused_b{b}_h{hkv}g{g}_s{s}_d{dim}_bs{bs}",
+               "backend": backend, "interpret": interpret,
+               "jnp_tok_s": b / t_jnp,
+               **fused_bytes_model(s, dim, g, bs, itemsize=2)}
+        if backend == "pallas":
+            kw = dict(d=d, k_blocks=kb, block_size=bs, interpret=interpret)
+            fused = loki_decode_fused(q_hat, k, v, cur, **kw)
+            two = loki_decode_two_kernel(q_hat, k, v, cur, **kw)
+            row["fused_max_err"] = float(
+                jnp.abs(fused - want).max())
+            row["two_kernel_max_err"] = float(jnp.abs(two - want).max())
+            row["pass"] = (row["fused_max_err"] < 1e-4
+                           and row["two_kernel_max_err"] < 1e-4)
+            row["fused_tok_s"] = b / common.time_fn(
+                lambda: jax.block_until_ready(
+                    loki_decode_fused(q_hat, k, v, cur, **kw)),
+                repeats=3, warmup=1)
+            row["two_kernel_tok_s"] = b / common.time_fn(
+                lambda: jax.block_until_ready(
+                    loki_decode_two_kernel(q_hat, k, v, cur, **kw)),
+                repeats=3, warmup=1)
+        rows.append(row)
+    return rows
+
+
+def run(backend: str = "pallas") -> list:
     rows = (correctness_sweep() + bytes_model() + bytes_model(s=32768)
-            + vmem_tile_efficiency(d=16) + vmem_tile_efficiency(d=32))
+            + vmem_tile_efficiency(d=16) + vmem_tile_efficiency(d=32)
+            + fused_decode_sweep(backend))
+    if backend == "pallas":
+        # the regression baseline carries kernel measurements; don't let a
+        # bytes-model-only xla run clobber the last measured artifact
+        with open(ROOT_JSON, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"[bench_kernels] wrote {ROOT_JSON}")
     return common.emit(rows, "kernels")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["pallas", "xla"], default="pallas",
+                    help="pallas: run + time the fused kernels "
+                         "(interpret mode off-TPU); xla: bytes model only")
+    out_rows = run(ap.parse_args().backend)
+    # gate CI on kernel-vs-oracle parity, not just on having produced rows
+    if not all(r.get("pass", True) for r in out_rows):
+        sys.exit("[bench_kernels] parity FAILED (see pass=False rows)")

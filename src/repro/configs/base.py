@@ -45,6 +45,11 @@ class LokiConfig:
     # TPU-native adaptation of the paper's token top-k (DESIGN.md §3).
     # 0 = global top-k (paper-faithful; GSPMD-hostile at scale).
     n_chunks: int = 0
+    # decode-kernel backend for the block-granular path (DESIGN.md §5):
+    #   "auto"   — Pallas on TPU, jnp/XLA elsewhere
+    #   "pallas" — force the fused kernels (interpret-mode off-TPU)
+    #   "xla"    — force the pure-jnp reference path
+    backend: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

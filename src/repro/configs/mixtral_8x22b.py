@@ -15,4 +15,9 @@ def smoke_config() -> ModelConfig:
         arch="mixtral-8x22b-smoke", family="moe", n_layers=2, d_model=128,
         n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
         mlp="swiglu", sliding_window=64, dtype="float32",
-        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=256))
+        # capacity_factor = n_experts makes smoke routing drop-free, so the
+        # capacity-batched train/prefill path and the per-token gather decode
+        # path agree exactly (prefill/decode parity tests rely on this; the
+        # full config keeps the published 1.25)
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=256,
+                      capacity_factor=4.0))

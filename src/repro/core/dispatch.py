@@ -1,0 +1,93 @@
+"""Backend selection for the Loki decode hot path (DESIGN.md §5).
+
+One chokepoint decides, per decode step, which implementation of block-
+granular Loki runs:
+
+  backend="xla"    — the pure-jnp reference (``loki.loki_decode_block``),
+                     paper-faithful per-head selection; lowers everywhere.
+  backend="pallas" — the fused GQA-batched kernels (group-shared selection,
+                     DESIGN.md §4), with ``kernels/tuning.py`` picking the
+                     single-pass vs two-kernel variant and block size. Off
+                     TPU the kernels run in interpret mode (how CI validates
+                     them); on TPU they compile through Mosaic.
+  backend="auto"   — "pallas" on TPU, "xla" elsewhere.
+
+Shapes no kernel plan covers fall back to jnp *with the kernel's group-
+shared selection semantics*, so a given backend choice is numerically
+consistent across shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LokiConfig
+from repro.core import loki
+from repro.kernels import ops, tuning
+
+BACKENDS = ("auto", "pallas", "xla")
+
+
+def resolve_backend(backend: str, platform: Optional[str] = None) -> str:
+    """'auto' | 'pallas' | 'xla' -> the concrete backend for this host."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown loki backend {backend!r}; have {BACKENDS}")
+    if backend == "auto":
+        platform = platform or jax.default_backend()
+        return "pallas" if platform == "tpu" else "xla"
+    return backend
+
+
+def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
+                      cfg: LokiConfig, *, logit_scale=None,
+                      interpret: Optional[bool] = None):
+    """Block-granular Loki decode through the configured backend.
+
+    q_rope (B,H,D); k_hat_cache/v_cache (B,Smax,Hkv,D); cur_len (B,) or
+    scalar; proj (Hkv,D,D). Returns (B,H,D)."""
+    backend = resolve_backend(cfg.backend)
+    b, smax, n_kv, dim = k_hat_cache.shape
+    h = q_rope.shape[1]
+    g = h // n_kv
+    d = min(max(int(cfg.d_f * dim), 8), dim)
+    plan = tuning.plan_decode(smax, dim, g, d, cfg.block_size,
+                              itemsize=jnp.dtype(k_hat_cache.dtype).itemsize)
+
+    if backend == "xla":
+        if smax % cfg.block_size:
+            # short caches (smax < block_size etc.): adopt the planner's
+            # dividing block size rather than tripping the reference assert
+            if plan is None:
+                return loki.loki_decode(q_rope, k_hat_cache, v_cache,
+                                        cur_len, proj, cfg,
+                                        logit_scale=logit_scale)
+            cfg = dataclasses.replace(cfg, block_size=plan.block_size)
+        return loki.loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len,
+                                      proj, cfg, logit_scale=logit_scale)
+    if plan is None:
+        # no viable tiling: jnp fallback, keeping the kernel's group-shared
+        # selection when the block decomposition exists at all
+        if smax % cfg.block_size == 0:
+            return loki.loki_decode_block(q_rope, k_hat_cache, v_cache,
+                                          cur_len, proj, cfg,
+                                          logit_scale=logit_scale,
+                                          group_select=True)
+        return loki.loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
+                                cfg, logit_scale=logit_scale)
+
+    nb = smax // plan.block_size
+    k_blocks = max(int(cfg.k_f * nb), 1)
+    qg = q_rope.reshape(b, n_kv, g, dim)
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = (ops.loki_decode_fused if plan.variant == "fused"
+          else ops.loki_decode_two_kernel)
+    out = fn(q_hat, k_hat_cache, v_cache, cur, d=d, k_blocks=k_blocks,
+             block_size=plan.block_size, scale=logit_scale,
+             interpret=interpret)
+    return out.reshape(b, h, dim)

@@ -211,12 +211,20 @@ def loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
 
 
 def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
-                      cfg: LokiConfig, *, logit_scale=None):
+                      cfg: LokiConfig, *, logit_scale=None,
+                      group_select: bool = False):
     """Block-granular Loki (the TPU-native formulation; jnp reference).
 
     Selection happens over per-block maxima of the approximate scores, and
     exact attention runs over the union of selected blocks. This is the
-    oracle for kernels/gather_attention.py."""
+    oracle for kernels/gather_attention.py.
+
+    ``group_select``: share one block selection across the GQA group (top-k
+    of the per-block maxima reduced over the group's query heads). This is
+    the semantics of the fused GQA-batched kernel — each selected K̂/V block
+    streams from HBM once per *group* instead of once per head (DESIGN.md
+    §4) — and the oracle for kernels/fused_decode.py. Identical to per-head
+    selection when G == 1."""
     b, h, dim = q_rope.shape
     smax = k_hat_cache.shape[1]
     bs = cfg.block_size
@@ -235,9 +243,16 @@ def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
     blk = approx.reshape(*approx.shape[:-1], n_blocks, bs).max(-1)
 
     k_blocks = max(int(cfg.k_f * n_blocks), 1)
-    _, bidx = jax.lax.top_k(blk, k_blocks)              # (B,Hkv,G,kb)
-    taken = jnp.take_along_axis(blk, bidx, axis=-1)
-    bvalid = taken > NEG_INF / 2
+    if group_select:
+        blk_g = blk.max(axis=2, keepdims=True)          # (B,Hkv,1,nb)
+        _, bidx = jax.lax.top_k(blk_g, k_blocks)        # (B,Hkv,1,kb)
+        bidx = jnp.broadcast_to(bidx, (*blk.shape[:-1], k_blocks))
+        taken = jnp.take_along_axis(blk_g, bidx[:, :, :1], axis=-1)
+        bvalid = jnp.broadcast_to(taken > NEG_INF / 2, bidx.shape)
+    else:
+        _, bidx = jax.lax.top_k(blk, k_blocks)          # (B,Hkv,G,kb)
+        taken = jnp.take_along_axis(blk, bidx, axis=-1)
+        bvalid = taken > NEG_INF / 2
 
     # expand block indices -> token indices (kb*bs,)
     tok = bidx[..., None] * bs + jnp.arange(bs)

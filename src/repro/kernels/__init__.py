@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas-TPU kernel layer for the compute hot-spots the paper itself
+# optimizes (Loki's approx-score + sparse-attention decode pipeline).
+#
+#   approx_scores[_fm]  — block maxima of the leading-d approximate scores
+#   gather_attention    — block-sparse online-softmax attention (+ GQA-batched)
+#   fused_decode        — single-pass score→select→attend decode kernel
+#   flash_attention     — dense flash attention (train/prefill)
+#   tuning              — tile/variant selection table for decode shapes
+#   ops                 — jit'd public wrappers; ref — pure-jnp oracles

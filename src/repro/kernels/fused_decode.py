@@ -1,0 +1,258 @@
+"""Pallas-TPU kernel: fused GQA-batched Loki decode (DESIGN.md §4).
+
+One grid step per (batch, kv-head) pair runs the *entire* Loki decode for
+that KV group — approximate scoring, block top-k selection and exact sparse
+attention — without any intermediate tensor ever returning to HBM:
+
+  1. score stream: the leading-``d`` feature slice of each K̂ block is
+     double-buffer DMA'd from HBM and hit with a (G, d) @ (d, bs) MXU tile —
+     all G query heads of the GQA group score the block at once. Only the
+     per-group block maximum survives, in a VMEM scratch row.
+  2. selection: ``k_blocks`` iterations of argmax-and-suppress over that
+     VMEM row (equivalent to ``lax.top_k`` incl. lower-index tie-breaking);
+     winners land in SMEM. The (B·Hkv, S)-sized score tensor and the block
+     maxima that the two-pass path materializes in HBM never exist here.
+  3. exact pass: each winning K̂/V block is DMA'd once *per group* (not per
+     head) and folded into a (G,)-wide online softmax; the (G, bs) @ (bs, D)
+     value product again batches the group onto the MXU.
+
+Inputs are the model-native layouts — no transposes or flattening copies:
+
+  q_hat    (B, Hkv, G, D)   PCA-basis post-RoPE queries, grouped
+  k_hat    (B, S, Hkv, D)   key cache in PCA basis (full D, Lemma 4.1)
+  v        (B, S, Hkv, D)
+  cur_len  (B,)             valid prefix length per slot (scalar-prefetched)
+Output:
+  out      (B, Hkv, G, D)
+
+``select_blocks`` exposes phases 1-2 as a standalone kernel (scores still
+never leave VMEM; only the tiny index rows do) for the two-kernel fallback
+that feeds ``gather_attention.block_sparse_attention_grouped``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tuning import pad_lanes
+
+NEG_INF = -1e30
+
+
+def _score_and_select(b, h, ln, q_hat, k_ref, kd_buf, scores, sem_kd,
+                      write_sel, *, d: int, bs: int, nb: int, nb_pad: int,
+                      k_blocks: int, scale: float):
+    """Phases 1-2: stream d-slices, keep block maxima in VMEM, emit top-k.
+
+    ``write_sel(t, idx)`` receives the t-th winning block index (descending
+    score, ties to the lower index — lax.top_k order), or ``-1`` once the
+    finite maxima are exhausted (fewer live blocks than k_blocks): argmax
+    over an all-NEG_INF row would otherwise re-emit index 0 and double-count
+    a live block in the attention pass."""
+    qd = q_hat[:, :d] * scale                              # (G, d) f32
+
+    def kd_copy(j, slot):
+        return pltpu.make_async_copy(
+            k_ref.at[b, pl.ds(j * bs, bs), h, pl.ds(0, d)],
+            kd_buf.at[slot], sem_kd.at[slot])
+
+    kd_copy(0, 0).start()
+    scores[...] = jnp.full((1, nb_pad), NEG_INF, jnp.float32)
+
+    def score_blk(j, carry):
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < nb)
+        def _prefetch():
+            kd_copy(j + 1, 1 - slot).start()
+
+        kd_copy(j, slot).wait()
+        kd = kd_buf[slot].astype(jnp.float32)              # (bs, d)
+        s = jax.lax.dot_general(qd, kd, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(pos < ln, s, NEG_INF)                # (G, bs)
+        scores[0, j] = jnp.max(s)
+        return carry
+
+    jax.lax.fori_loop(0, nb, score_blk, 0)
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, nb_pad), 1)
+    for t in range(k_blocks):
+        row = scores[...]                                  # (1, nb_pad)
+        idx = jnp.argmax(row, axis=1)[0].astype(jnp.int32)
+        valid = jnp.max(row) > NEG_INF / 2
+        write_sel(t, jnp.where(valid, idx, -1))
+        scores[...] = jnp.where(lanes == idx, NEG_INF, row)
+
+
+def _fused_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                  kd_buf, kbuf, vbuf, scores, sel, sem_kd, sem_kv, *,
+                  d: int, bs: int, nb: int, nb_pad: int, k_blocks: int,
+                  scale: float, g: int, dim: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ln = len_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+
+    def write_sel(t, idx):
+        sel[t] = idx
+
+    _score_and_select(b, h, ln, q, k_ref, kd_buf, scores, sem_kd, write_sel,
+                      d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
+                      scale=scale)
+
+    qs = q * scale                                         # (G, D)
+
+    def att_blk(t, carry):
+        m_prev, l_prev, acc = carry
+        blk = sel[t]
+        start = jnp.maximum(blk, 0) * bs
+
+        @pl.when(blk >= 0)
+        def _fetch():
+            # -1 sentinel (exhausted selection): skip the DMA; the stale
+            # buffer contents are fully masked below
+            ck = pltpu.make_async_copy(
+                k_ref.at[b, pl.ds(start, bs), h, pl.ds(0, dim)],
+                kbuf, sem_kv.at[0])
+            cv = pltpu.make_async_copy(
+                v_ref.at[b, pl.ds(start, bs), h, pl.ds(0, dim)],
+                vbuf, sem_kv.at[1])
+            ck.start()
+            cv.start()
+            ck.wait()
+            cv.wait()
+
+        kb = kbuf[...].astype(jnp.float32)                 # (bs, D)
+        s = jax.lax.dot_general(qs, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        live = (pos < ln) & (blk >= 0)                     # (1, bs)
+        s = jnp.where(live, s, NEG_INF)                    # (G, bs)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        # guard: selected-but-dead block with an empty accumulator
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0)) \
+            * (m_prev > NEG_INF / 2)
+        p = jnp.exp(s - m_safe[:, None]) * live            # (G, bs)
+        vb = vbuf[...].astype(jnp.float32)                 # (bs, D)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, vb, preferred_element_type=jnp.float32)
+        return m_new, l_prev * alpha + jnp.sum(p, axis=1), acc
+
+    m0 = jnp.full((g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    a0 = jnp.zeros((g, dim), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, k_blocks, att_blk, (m0, l0, a0))
+    out_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(
+        out_ref.dtype)
+
+
+def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
+                      block_size: int = 128, scale=None,
+                      interpret: bool = False):
+    """Single-pass Loki decode. (B,Hkv,G,D),(B,S,Hkv,D),(B,S,Hkv,D),(B,)
+    -> (B,Hkv,G,D). Requires cur_len >= 1 per row (the decode invariant:
+    the new token is already in the cache)."""
+    b, n_kv, g, dim = q_hat.shape
+    s_len = k_hat.shape[1]
+    bs = block_size
+    assert s_len % bs == 0, "cache length must be a multiple of block_size"
+    nb = s_len // bs
+    nb_pad = pad_lanes(nb)
+    k_blocks = min(k_blocks, nb)
+    scale = float(scale if scale is not None else dim ** -0.5)
+
+    kernel = functools.partial(
+        _fused_kernel, d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
+        scale=scale, g=g, dim=dim)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, n_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dim), lambda i, j, ln: (i, j, 0, 0)),
+                # the caches stay in HBM; the kernel DMAs d-slices and the
+                # winning blocks itself
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, dim),
+                                   lambda i, j, ln: (i, j, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((2, bs, d), k_hat.dtype),    # score-stream buffers
+                pltpu.VMEM((bs, dim), k_hat.dtype),     # winner K̂ block
+                pltpu.VMEM((bs, dim), v.dtype),         # winner V block
+                pltpu.VMEM((1, nb_pad), jnp.float32),   # block maxima
+                pltpu.SMEM((k_blocks,), jnp.int32),     # selected blocks
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
+        interpret=interpret,
+    )(cur_len.astype(jnp.int32), q_hat, k_hat, v)
+    return out
+
+
+def _select_kernel(len_ref, q_ref, k_ref, out_ref, kd_buf, scores, sem_kd, *,
+                   d: int, bs: int, nb: int, nb_pad: int, k_blocks: int,
+                   scale: float):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ln = len_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+
+    def write_sel(t, idx):
+        out_ref[0, 0, t] = idx
+
+    _score_and_select(b, h, ln, q, k_ref, kd_buf, scores, sem_kd, write_sel,
+                      d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
+                      scale=scale)
+
+
+def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
+                  block_size: int = 128, scale=None,
+                  interpret: bool = False):
+    """Fused score+select: (B,Hkv,G,D),(B,S,Hkv,D),(B,) -> (B,Hkv,kb) int32
+    block indices, group-shared; ``-1`` marks exhausted entries (fewer live
+    blocks than kb). Scores live only in VMEM scratch."""
+    b, n_kv, g, dim = q_hat.shape
+    s_len = k_hat.shape[1]
+    bs = block_size
+    assert s_len % bs == 0, "cache length must be a multiple of block_size"
+    nb = s_len // bs
+    nb_pad = pad_lanes(nb)
+    k_blocks = min(k_blocks, nb)
+    scale = float(scale if scale is not None else dim ** -0.5)
+
+    kernel = functools.partial(
+        _select_kernel, d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
+        scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, n_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dim), lambda i, j, ln: (i, j, 0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec((1, 1, k_blocks),
+                                   lambda i, j, ln: (i, j, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((2, bs, d), k_hat.dtype),
+                pltpu.VMEM((1, nb_pad), jnp.float32),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, k_blocks), jnp.int32),
+        interpret=interpret,
+    )(cur_len.astype(jnp.int32), q_hat, k_hat)
+    return out

@@ -105,3 +105,105 @@ def block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len, *,
         interpret=interpret,
     )(blk_idx.astype(jnp.int32), cur_len.astype(jnp.int32), q_hat, k_hat, v)
     return out
+
+
+# ------------------------------------------------- GQA-batched variant
+
+def _gkernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
+             m_ref, l_ref, acc_ref, *, bs: int, scale: float, n_sel: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (bs, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+
+    blk = blk_idx_ref[b, h, j]
+    pos = jnp.maximum(blk, 0) * bs + jax.lax.broadcasted_iota(
+        jnp.int32, (1, bs), 1)
+    # blk == -1: selection exhausted (fewer live blocks than n_sel) — the
+    # staged block is a clamped re-read and must contribute nothing
+    live = (pos < len_ref[b]) & (blk >= 0)                 # (1, bs)
+    s = jnp.where(live, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (G,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0)) * (m_prev > NEG_INF / 2)
+    p = jnp.exp(s - m_safe[:, None]) * live                # (G, bs)
+    v_blk = v_ref[0, :, 0].astype(jnp.float32)             # (bs, D)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v_blk, preferred_element_type=jnp.float32)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_sel - 1)
+    def _fini():
+        out_ref[0, 0] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            out_ref.dtype)
+
+
+def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
+                                   block_size: int = 128, scale=None,
+                                   interpret: bool = False):
+    """GQA-batched sparse attention over a *group-shared* block selection.
+
+    All G query heads of a KV group ride one grid row, so each selected
+    K̂/V block is streamed from HBM once per group and the score/value
+    products are (G, D) @ (D, bs) / (G, bs) @ (bs, D) MXU tiles instead of
+    G matrix-vector products (DESIGN.md §4). Operates on the model-native
+    cache layout — no transpose copies.
+
+      q_hat    (B, Hkv, G, D)    PCA-basis grouped queries
+      k_hat    (B, S, Hkv, D)    PCA-basis key cache
+      v        (B, S, Hkv, D)
+      blk_idx  (B, Hkv, n_sel)   group-shared selected blocks (prefetched)
+      cur_len  (B,)
+    Output:    (B, Hkv, G, D)
+    """
+    b, n_kv, g, dim = q_hat.shape
+    s_len = k_hat.shape[1]
+    bs = block_size
+    n_sel = blk_idx.shape[-1]
+    assert s_len % bs == 0
+    scale = float(scale if scale is not None else dim ** -0.5)
+
+    kernel = functools.partial(_gkernel, bs=bs, scale=scale, n_sel=n_sel)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, n_kv, n_sel),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dim),
+                             lambda i, h, j, bi, ln: (i, h, 0, 0)),
+                # clamp the -1 "exhausted" sentinel to a safe block address;
+                # the kernel masks its contribution to zero
+                pl.BlockSpec((1, bs, 1, dim),
+                             lambda i, h, j, bi, ln:
+                             (i, jnp.maximum(bi[i, h, j], 0), h, 0)),
+                pl.BlockSpec((1, bs, 1, dim),
+                             lambda i, h, j, bi, ln:
+                             (i, jnp.maximum(bi[i, h, j], 0), h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, dim),
+                                   lambda i, h, j, bi, ln: (i, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g,), jnp.float32),       # running max per head
+                pltpu.VMEM((g,), jnp.float32),       # running denom per head
+                pltpu.VMEM((g, dim), jnp.float32),   # accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
+        interpret=interpret,
+    )(blk_idx.astype(jnp.int32), cur_len.astype(jnp.int32), q_hat, k_hat, v)
+    return out

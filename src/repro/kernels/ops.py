@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from repro.kernels.approx_scores import block_max_scores
 from repro.kernels.approx_scores_fm import block_max_scores_fm
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gather_attention import block_sparse_attention
+from repro.kernels.fused_decode import fused_loki_decode, select_blocks
+from repro.kernels.gather_attention import (block_sparse_attention,
+                                            block_sparse_attention_grouped)
 
 
 @functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
@@ -73,3 +75,36 @@ def flash(q, k, v, *, causal=True, block_q=128, block_k=128,
           interpret=False):
     return flash_attention(q, k, v, causal=causal, block_q=block_q,
                            block_k=block_k, interpret=interpret)
+
+
+# ------------------------------------------------ GQA-batched decode paths
+
+@functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
+                                             "scale", "interpret"))
+def loki_decode_fused(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
+                      block_size: int = 128, scale=None,
+                      interpret: bool = False):
+    """Single-pass fused decode (DESIGN.md §4): score, select and attend in
+    one kernel; no score/selection tensor ever reaches HBM.
+
+    q_hat (B,Hkv,G,D) grouped PCA-basis queries; k_hat/v (B,S,Hkv,D) model-
+    native caches; cur_len (B,). Returns (B,Hkv,G,D)."""
+    return fused_loki_decode(q_hat, k_hat, v, cur_len, d=d,
+                             k_blocks=k_blocks, block_size=block_size,
+                             scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
+                                             "scale", "interpret"))
+def loki_decode_two_kernel(q_hat, k_hat, v, cur_len, *, d: int,
+                           k_blocks: int, block_size: int = 128, scale=None,
+                           interpret: bool = False):
+    """Two-kernel fallback for shapes the single-pass kernel can't tile:
+    fused score+select (scores stay in VMEM, only the (B,Hkv,kb) index rows
+    cross HBM) feeding the GQA-batched sparse-attention kernel."""
+    blk_idx = select_blocks(q_hat, k_hat, cur_len, d=d, k_blocks=k_blocks,
+                            block_size=block_size, scale=scale,
+                            interpret=interpret)
+    return block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len,
+                                          block_size=block_size, scale=scale,
+                                          interpret=interpret)

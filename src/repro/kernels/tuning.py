@@ -1,0 +1,77 @@
+"""Tile selection for the fused Loki decode kernels (DESIGN.md §6).
+
+``plan_decode`` maps a decode shape ``(S, D, G, bs_hint)`` to a concrete
+kernel plan: which variant to run (single-pass ``fused`` vs the two-kernel
+``two_pass`` fallback) and at what block size. Known-good decode shapes are
+pinned in ``TUNED`` (measured on v5e; the table is tiny because the decode
+problem is one-dimensional in S once D is fixed); everything else goes
+through a VMEM-budget heuristic. ``None`` means no Pallas tiling works —
+the dispatcher falls back to the jnp path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    variant: str          # "fused" | "two_kernel"
+    block_size: int
+
+
+# Per-core VMEM is ~16 MB; leave headroom for Mosaic's own pipeline buffers.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+# (S, D, G, block_size hint) -> (variant, block_size). The ShapeConfig decode
+# cells plus the bench shapes; extend as new cells are measured.
+TUNED = {
+    (32_768, 128, 1, 128): ("fused", 128),
+    (32_768, 128, 4, 128): ("fused", 128),
+    (32_768, 128, 8, 128): ("fused", 128),
+    (524_288, 128, 1, 128): ("fused", 256),
+    (524_288, 128, 8, 128): ("fused", 256),
+    (4_096, 128, 4, 128): ("fused", 128),
+    (4_096, 64, 4, 128): ("fused", 128),
+}
+
+_BS_CANDIDATES = (128, 64, 32, 16, 8)
+
+
+def pad_lanes(n: int) -> int:
+    """Round up to the 128-lane granule (shared with fused_decode's scratch
+    shapes — the planner's budget must match what the kernel allocates)."""
+    return -(-n // 128) * 128
+
+
+def plan_decode(smax: int, dim: int, g: int, d: int, block_size: int,
+                itemsize: int = 4) -> Optional[KernelPlan]:
+    """Pick (variant, block_size) for one decode step, or None for no-kernel.
+
+    ``d`` is the approximate-score feature width, ``block_size`` the config
+    hint, ``itemsize`` the cache dtype width in bytes."""
+    key = (smax, dim, g, block_size)
+    if key in TUNED:
+        variant, bs = TUNED[key]
+        if smax % bs == 0:
+            return KernelPlan(variant, bs)
+
+    bs = 0
+    for cand in dict.fromkeys((block_size,) + _BS_CANDIDATES):
+        if cand > 0 and smax % cand == 0 and smax >= cand:
+            bs = cand
+            break
+    if not bs:
+        return None
+
+    nb = smax // bs
+    score_bytes = pad_lanes(nb) * 4
+    select_bytes = 2 * bs * d * itemsize + score_bytes
+    if select_bytes > VMEM_BUDGET:
+        return None                       # selection itself can't live on-chip
+    # the single-pass kernel additionally holds both winner blocks and the
+    # (G, D) accumulator set; if that working set doesn't fit, split into
+    # select + pipelined gather-attention (which streams via BlockSpecs)
+    fused_bytes = select_bytes + 2 * bs * dim * itemsize + 4 * g * dim * 4
+    variant = "fused" if fused_bytes <= VMEM_BUDGET else "two_kernel"
+    return KernelPlan(variant, bs)

@@ -25,7 +25,7 @@ from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.sharding import axes as AX
-from repro.sharding.rules import spec_for, tree_specs
+from repro.sharding.rules import spec_for, tree_specs, use_mesh
 from repro.training.step import TrainState, make_train_step
 from repro.utils.hlo import collective_bytes
 from repro.utils.roofline import Roofline, model_flops
@@ -135,7 +135,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         b_axes = AX.batch_axes(b_shapes)
         b_sh = _shardings(b_axes, b_shapes, mesh)
         step = make_train_step(cfg, tcfg)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
                              out_shardings=(st_sh, None), donate_argnums=(0,))
             lowered = jitted.lower(st_shapes, b_shapes)
@@ -160,7 +160,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 kwargs["patches"] = next(it)
             return lm.prefill(params, cfg, tokens, shape.seq_len, **kwargs)
 
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             jitted = jax.jit(prefill_fn,
                              in_shardings=(p_sh, tok_sh, *extra_sh),
                              out_shardings=None)
@@ -179,7 +179,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         def decode_fn(params, cache, token, pos_len):
             return lm.decode_step(params, cfg, cache, token, pos_len)
 
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             jitted = jax.jit(decode_fn,
                              in_shardings=(p_sh, c_sh, tok_sh, tok_sh),
                              out_shardings=(None, c_sh),

@@ -36,6 +36,10 @@ def main():
                              "h2o", "pcaattn"])
     ap.add_argument("--k-f", type=float, default=0.25)
     ap.add_argument("--d-f", type=float, default=0.25)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="decode kernel backend for loki_block "
+                         "(core/dispatch.py; auto = Pallas on TPU)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--n-slots", type=int, default=4)
@@ -73,7 +77,8 @@ def main():
     if args.policy != "full":
         cfg = cfg.with_policy(args.policy, k_f=args.k_f, d_f=args.d_f)
 
-    eng = ServingEngine(params, cfg, n_slots=args.n_slots, smax=args.smax)
+    eng = ServingEngine(params, cfg, n_slots=args.n_slots, smax=args.smax,
+                        backend=args.backend)
     reqs = [Request(rid=i,
                     prompt=data.batch_at(4000 + i)["tokens"][0, :24 + 4 * i],
                     max_new=args.max_new)

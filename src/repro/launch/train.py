@@ -52,7 +52,7 @@ def main():
     from repro.models import lm
     from repro.optim import adamw
     from repro.sharding import axes as AX
-    from repro.sharding.rules import spec_for
+    from repro.sharding.rules import spec_for, use_mesh
     from repro.training.step import TrainState, make_train_step
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -71,7 +71,7 @@ def main():
                       n_states=32, temperature=0.22)
     data = SyntheticLM(dcfg)
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         params = lm.init(jax.random.PRNGKey(tcfg.seed), cfg)
         state = TrainState(params, adamw.init_state(params))
         # shard the state onto the mesh per the logical axis rules

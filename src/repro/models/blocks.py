@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import attention as A
-from repro.core import baselines, loki
+from repro.core import baselines, dispatch, loki
 from repro.models import layers as L
 from repro.sharding.rules import constrain
 
@@ -202,8 +202,10 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig):
                                    cfg.loki,
                                    sliding_window=cfg.sliding_window)
     elif policy == "loki_block":
-        out = loki.loki_decode_block(q, cache["k"], cache["v"], cur_len,
-                                     proj, cfg.loki)
+        # backend-dispatched: fused Pallas kernels on TPU (or when forced),
+        # the jnp reference otherwise (core/dispatch.py)
+        out = dispatch.loki_block_decode(q, cache["k"], cache["v"], cur_len,
+                                         proj, cfg.loki)
     elif policy == "pcaattn":
         out = baselines.pcaattn_decode(q, cache["k"], cache["v"], cur_len,
                                        proj, cfg.loki)

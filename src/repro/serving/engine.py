@@ -35,7 +35,12 @@ class Request:
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  smax: int = 512, eos_id: Optional[int] = None,
-                 greedy: bool = True):
+                 greedy: bool = True, backend: Optional[str] = None):
+        if backend is not None:
+            # route the decode hot path through the chosen kernel backend
+            # (core/dispatch.py): "pallas" | "xla" | "auto"
+            cfg = cfg.replace(
+                loki=dataclasses.replace(cfg.loki, backend=backend))
         self.params, self.cfg = params, cfg
         self.n_slots, self.smax = n_slots, smax
         self.eos_id, self.greedy = eos_id, greedy
@@ -46,6 +51,11 @@ class ServingEngine:
         self.last_tok = jnp.zeros((n_slots,), jnp.int32)
         self._decode = jax.jit(
             lambda p, c, t, pl: lm.decode_step(p, cfg, c, t, pl))
+        # admission-path prefill, compiled; jit's cache retraces only per
+        # distinct prompt length
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, cfg, t, smax,
+                                    cache_dtype=jnp.float32))
         self._queue: List[Request] = []
         self.ticks = 0
 
@@ -62,17 +72,27 @@ class ServingEngine:
             self._prefill_slot(slot, req)
 
     def _prefill_slot(self, slot: int, req: Request) -> None:
-        """Single-request prefill into one slot (token-by-token decode fill;
-        production would batch-prefill — adequate for tests/benchmarks)."""
+        """Single-request batched prefill into one slot.
+
+        One causal-attention pass over the whole prompt, scattered into the
+        slot's cache rows only — live slots are untouched. (The previous
+        token-by-token fill ran a full batched decode step per prompt token,
+        rewriting every live slot's cache at its current position.)"""
         toks = req.prompt.astype(np.int32)
-        # reset slot state by zeroing pos; cache rows are overwritten
+        if len(toks) > self.smax:
+            # cache can hold smax rows; keep the most recent context rather
+            # than crashing the batched step mid-service
+            toks = toks[-self.smax:]
         self.pos = self.pos.at[slot].set(0)
-        for t in toks[:-1]:
-            tok_vec = self.last_tok.at[slot].set(int(t))
-            mask_pos = self.pos
-            logits, self.cache = self._decode(
-                self.params, self.cache, tok_vec, mask_pos)
-            self.pos = self.pos.at[slot].add(1)
+        if len(toks) > 1:
+            _, filled, _ = self._prefill(self.params,
+                                         jnp.asarray(toks[None, :-1]))
+            axis = 1 if lm.uses_scan(self.cfg) else 0  # skip the layer axis
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=axis),
+                self.cache, filled)
+            self.pos = self.pos.at[slot].set(len(toks) - 1)
         self.last_tok = self.last_tok.at[slot].set(int(toks[-1]))
         self.slot_req[slot] = req
         self.live[slot] = True

@@ -160,10 +160,30 @@ def tree_shardings(logical_tree, shapes_tree, mesh: Mesh, rules=None):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def _current_mesh():
+    """The active mesh, across jax versions: ``get_abstract_mesh`` where it
+    exists (>= 0.5), else the thread-local physical mesh (0.4.x)."""
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        return get_am()
+    from jax._src.mesh import thread_resources
+    return thread_resources.env.physical_mesh
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for sharding constraints, across
+    jax versions: ``jax.sharding.set_mesh`` where it exists (>= 0.5), else
+    the Mesh object itself (a context manager in 0.4.x)."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def constrain(x, logical_axes: Sequence[Optional[str]], rules=None):
     """with_sharding_constraint that is a no-op outside a mesh context."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = _current_mesh()
         if mesh is None or mesh.empty:  # pragma: no cover - env dependent
             return x
         if len(logical_axes) != x.ndim:
@@ -175,5 +195,5 @@ def constrain(x, logical_axes: Sequence[Optional[str]], rules=None):
         spec = spec_for(logical_axes, x.shape, mesh, rules,
                         allow_padded=True)
         return jax.lax.with_sharding_constraint(x, spec)
-    except (ValueError, RuntimeError):
+    except (AttributeError, ValueError, RuntimeError):
         return x

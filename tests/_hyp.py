@@ -1,0 +1,71 @@
+"""hypothesis shim for minimal environments.
+
+Re-exports the real ``given``/``settings``/``st`` when hypothesis is
+installed (the pinned test extra in pyproject.toml). When it is not — e.g.
+the offline reproduction container — provides a deterministic fallback:
+``@given`` runs the test body over a small fixed grid drawn from each
+strategy's boundary/representative values, so the property tests still
+execute meaningful cases instead of erroring at collection.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import itertools
+
+    HAVE_HYPOTHESIS = False
+    _MAX_COMBOS = 16
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            mid = (lo + hi) // 2
+            return _Strategy(dict.fromkeys([lo, mid, hi]))
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(xs)
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    st = _St()
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**strats):
+        names = list(strats)
+        pools = [strats[n].examples for n in names]
+        n_product = 1
+        for p in pools:
+            n_product *= len(p)
+        if n_product <= _MAX_COMBOS:
+            combos = list(itertools.product(*pools))
+        else:
+            # too many combos for the full product: zip-cycle the pools so
+            # every declared value (incl. boundaries) still runs at least
+            # once, instead of truncating the product's tail axes away
+            rounds = max(len(p) for p in pools)
+            combos = [tuple(p[(i + j) % len(p)]
+                            for j, p in enumerate(pools))
+                      for i in range(rounds)]
+
+        def deco(fn):
+            # NOT functools.wraps: copying __wrapped__/signature would make
+            # pytest look for fixtures named after the strategy params
+            def wrapper():
+                for combo in combos:
+                    fn(**dict(zip(names, combo)))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

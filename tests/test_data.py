@@ -1,7 +1,7 @@
 """Synthetic data pipeline: determinism, host sharding, resume."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.data.synthetic import DataConfig, SyntheticLM
 

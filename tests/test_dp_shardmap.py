@@ -18,6 +18,7 @@ SCRIPT = textwrap.dedent("""
     from repro.configs.base import TrainConfig
     from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
     from repro.models import lm
+    from repro.sharding.rules import use_mesh
     from repro.training.dp_shardmap import (DPState, init_dp_state,
                                             make_dp_train_step)
 
@@ -31,7 +32,7 @@ SCRIPT = textwrap.dedent("""
         params = lm.init(jax.random.PRNGKey(0), cfg)
         state = init_dp_state(params, 4)
         step = make_dp_train_step(cfg, tcfg, mesh)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             losses = []
             for i in range(n):
                 state, m = step(state, jax_batch(data.batch_at(i)))

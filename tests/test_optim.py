@@ -2,8 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.configs.base import TrainConfig
 from repro.optim import adamw

@@ -89,3 +89,40 @@ def test_ragged_batch_isolation():
     eng.run_until_done(200)
     assert r1.out == solo1
     assert r2.out == solo2
+
+
+def test_late_admission_does_not_disturb_live_slot():
+    """Prefilling a newly admitted request writes only its own slot: a
+    request admitted mid-generation leaves the live slot's continuation
+    bit-identical to serving it alone."""
+    params, cfg = _model()
+    p1 = (np.arange(6) * 7 + 2) % cfg.vocab
+    p2 = (np.arange(11) * 5 + 3) % cfg.vocab
+
+    eng_solo = ServingEngine(params, cfg, n_slots=1, smax=64)
+    solo = Request(rid=0, prompt=p1.copy(), max_new=8)
+    eng_solo.submit(solo)
+    eng_solo.run_until_done(100)
+
+    eng = ServingEngine(params, cfg, n_slots=2, smax=64)
+    r1 = Request(rid=1, prompt=p1.copy(), max_new=8)
+    eng.submit(r1)
+    for _ in range(3):                 # r1 generates alone for a few ticks
+        eng.tick()
+    r2 = Request(rid=2, prompt=p2.copy(), max_new=4)
+    eng.submit(r2)                     # admission prefills into slot 1 only
+    eng.run_until_done(200)
+    assert r1.out == solo.out
+    assert r2.done
+
+
+def test_overlong_prompt_truncates_instead_of_crashing():
+    """A prompt longer than smax keeps the most recent smax tokens and still
+    serves, instead of aborting the batched step with a shape error."""
+    params, cfg = _model()
+    eng = ServingEngine(params, cfg, n_slots=1, smax=16)
+    req = Request(rid=0, prompt=(np.arange(25) * 3 + 1) % cfg.vocab,
+                  max_new=2)
+    eng.submit(req)
+    eng.run_until_done(50)
+    assert req.done and len(req.out) >= 1
