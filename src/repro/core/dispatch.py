@@ -41,42 +41,75 @@ def resolve_backend(backend: str, platform: Optional[str] = None) -> str:
     return backend
 
 
+def _token_fallback(q_rope, k_hat_cache, v_cache, cur_len, proj, cfg,
+                    *, sliding_window, logit_scale, page_table, page_size):
+    """Token-granular jnp path; gathers the logical view first when paged."""
+    if page_table is not None:
+        from repro.serving.paged_cache import gather_logical
+        k_hat_cache = gather_logical(k_hat_cache, page_table, page_size)
+        v_cache = gather_logical(v_cache, page_table, page_size)
+    return loki.loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
+                            cfg, sliding_window=sliding_window,
+                            logit_scale=logit_scale)
+
+
 def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
-                      cfg: LokiConfig, *, logit_scale=None,
+                      cfg: LokiConfig, *, sliding_window: int = 0,
+                      logit_scale=None, page_table=None, page_size: int = 0,
                       interpret: Optional[bool] = None):
     """Block-granular Loki decode through the configured backend.
 
     q_rope (B,H,D); k_hat_cache/v_cache (B,Smax,Hkv,D); cur_len (B,) or
-    scalar; proj (Hkv,D,D). Returns (B,H,D)."""
+    scalar; proj (Hkv,D,D). Returns (B,H,D).
+
+    ``sliding_window`` and ``cfg.local_window`` are honored identically on
+    every backend (the token path's semantics). With ``page_table``/
+    ``page_size`` the caches are the serving engine's shared page pools
+    (R,Hkv,D): the Pallas kernels index their block DMAs through the table,
+    the jnp paths gather the logical view through the same table."""
     backend = resolve_backend(cfg.backend)
-    b, smax, n_kv, dim = k_hat_cache.shape
-    h = q_rope.shape[1]
+    paged = page_table is not None
+    b, h = q_rope.shape[0], q_rope.shape[1]
+    if paged:
+        n_kv, dim = k_hat_cache.shape[-2], k_hat_cache.shape[-1]
+        smax = page_table.shape[1] * page_size
+    else:
+        _, smax, n_kv, dim = k_hat_cache.shape
     g = h // n_kv
     d = min(max(int(cfg.d_f * dim), 8), dim)
     plan = tuning.plan_decode(smax, dim, g, d, cfg.block_size,
                               itemsize=jnp.dtype(k_hat_cache.dtype).itemsize)
+    if paged and plan is not None and page_size % plan.block_size:
+        # kernel DMA blocks must tile pages exactly; otherwise a block could
+        # straddle two (non-adjacent) physical pages
+        plan = None
+    pargs = dict(page_table=page_table, page_size=page_size)
+    fb_args = dict(sliding_window=sliding_window, logit_scale=logit_scale,
+                   page_table=page_table, page_size=page_size)
 
     if backend == "xla":
         if smax % cfg.block_size:
             # short caches (smax < block_size etc.): adopt the planner's
             # dividing block size rather than tripping the reference assert
             if plan is None:
-                return loki.loki_decode(q_rope, k_hat_cache, v_cache,
-                                        cur_len, proj, cfg,
-                                        logit_scale=logit_scale)
+                return _token_fallback(q_rope, k_hat_cache, v_cache,
+                                       cur_len, proj, cfg, **fb_args)
             cfg = dataclasses.replace(cfg, block_size=plan.block_size)
         return loki.loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len,
-                                      proj, cfg, logit_scale=logit_scale)
+                                      proj, cfg, logit_scale=logit_scale,
+                                      sliding_window=sliding_window, **pargs)
     if plan is None:
         # no viable tiling: jnp fallback, keeping the kernel's group-shared
         # selection when the block decomposition exists at all
-        if smax % cfg.block_size == 0:
+        if smax % cfg.block_size == 0 and (
+                not paged or page_size % cfg.block_size == 0):
             return loki.loki_decode_block(q_rope, k_hat_cache, v_cache,
                                           cur_len, proj, cfg,
                                           logit_scale=logit_scale,
-                                          group_select=True)
-        return loki.loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
-                                cfg, logit_scale=logit_scale)
+                                          sliding_window=sliding_window,
+                                          group_select=True, **pargs)
+        return _token_fallback(q_rope, k_hat_cache, v_cache, cur_len, proj,
+                               cfg, **fb_args)
 
     nb = smax // plan.block_size
     k_blocks = max(int(cfg.k_f * nb), 1)
@@ -89,5 +122,6 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
           else ops.loki_decode_two_kernel)
     out = fn(q_hat, k_hat_cache, v_cache, cur, d=d, k_blocks=k_blocks,
              block_size=plan.block_size, scale=logit_scale,
-             interpret=interpret)
+             local_window=cfg.local_window, sliding_window=sliding_window,
+             interpret=interpret, **pargs)
     return out.reshape(b, h, dim)

@@ -211,20 +211,35 @@ def loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
 
 
 def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
-                      cfg: LokiConfig, *, logit_scale=None,
-                      group_select: bool = False):
+                      cfg: LokiConfig, *, sliding_window: int = 0,
+                      logit_scale=None, group_select: bool = False,
+                      page_table=None, page_size: int = 0):
     """Block-granular Loki (the TPU-native formulation; jnp reference).
 
     Selection happens over per-block maxima of the approximate scores, and
     exact attention runs over the union of selected blocks. This is the
     oracle for kernels/gather_attention.py.
 
+    ``sliding_window`` and ``cfg.local_window`` carry the token-granular
+    semantics of ``loki_decode``: the sliding window masks positions out of
+    both selection and the exact pass; the local window inflates recent
+    approximate scores so the recency blocks always win selection.
+
     ``group_select``: share one block selection across the GQA group (top-k
     of the per-block maxima reduced over the group's query heads). This is
     the semantics of the fused GQA-batched kernel — each selected K̂/V block
     streams from HBM once per *group* instead of once per head (DESIGN.md
     §4) — and the oracle for kernels/fused_decode.py. Identical to per-head
-    selection when G == 1."""
+    selection when G == 1.
+
+    With ``page_table (B, max_pages)``/``page_size``, the caches are the
+    serving engine's shared pools (R, Hkv, D); this reference gathers the
+    logical per-slot view through the same table the fused kernel indexes —
+    the jnp oracle for paged decode (DESIGN.md §7)."""
+    if page_table is not None:
+        from repro.serving.paged_cache import gather_logical
+        k_hat_cache = gather_logical(k_hat_cache, page_table, page_size)
+        v_cache = gather_logical(v_cache, page_table, page_size)
     b, h, dim = q_rope.shape
     smax = k_hat_cache.shape[1]
     bs = cfg.block_size
@@ -239,7 +254,15 @@ def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
 
     approx = decode_scores(q_hat, k_hat_cache, d_slice=d,
                            logit_scale=logit_scale)
-    approx = jnp.where(length_mask(smax, cur_len), approx, NEG_INF)
+    m = length_mask(smax, cur_len)
+    if sliding_window:
+        m = m & window_mask(smax, cur_len, sliding_window)
+    if cfg.local_window:
+        # force-include the recency window by inflating its scores, exactly
+        # like the token-granular path (block maxima inherit the boost)
+        recent = window_mask(smax, cur_len, cfg.local_window)
+        approx = jnp.where(recent, jnp.float32(1e4) + approx, approx)
+    approx = jnp.where(m, approx, NEG_INF)
     blk = approx.reshape(*approx.shape[:-1], n_blocks, bs).max(-1)
 
     k_blocks = max(int(cfg.k_f * n_blocks), 1)

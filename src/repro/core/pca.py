@@ -151,7 +151,10 @@ def install_projections(params, calib: "PCACalibration",
             if "attn" in p:
                 p = dict(p)
                 attn = dict(p["attn"])
-                attn["pca"] = proj[i]
+                # same cast as the scan branch below: without it a
+                # non-f32 param tree gets an f32 pca leaf that breaks
+                # dtype-strict consumers (checkpoint layouts, donation)
+                attn["pca"] = proj[i].astype(attn["pca"].dtype)
                 p["attn"] = attn
             out.append(p)
         new["layers"] = out

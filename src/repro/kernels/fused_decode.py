@@ -1,4 +1,4 @@
-"""Pallas-TPU kernel: fused GQA-batched Loki decode (DESIGN.md §4).
+"""Pallas-TPU kernel: fused GQA-batched Loki decode (DESIGN.md §4, §7).
 
 One grid step per (batch, kv-head) pair runs the *entire* Loki decode for
 that KV group — approximate scoring, block top-k selection and exact sparse
@@ -16,6 +16,11 @@ attention — without any intermediate tensor ever returning to HBM:
      head) and folded into a (G,)-wide online softmax; the (G, bs) @ (bs, D)
      value product again batches the group onto the MXU.
 
+Window semantics match the token-granular reference (core/loki.py):
+``local_window`` inflates the recency window's approximate scores by 1e4 so
+those blocks always win selection; ``sliding_window`` masks positions older
+than the window out of both the selection and the exact pass.
+
 Inputs are the model-native layouts — no transposes or flattening copies:
 
   q_hat    (B, Hkv, G, D)   PCA-basis post-RoPE queries, grouped
@@ -24,6 +29,15 @@ Inputs are the model-native layouts — no transposes or flattening copies:
   cur_len  (B,)             valid prefix length per slot (scalar-prefetched)
 Output:
   out      (B, Hkv, G, D)
+
+**Paged mode** (DESIGN.md §7): pass ``page_table (B, max_pages)`` and
+``page_size``; the caches are then the serving engine's shared pools
+``(n_pages * page_size, Hkv, D)`` with no batch dim, and every block DMA
+resolves its HBM address through the scalar-prefetched table —
+``row = table[b, tok // page_size] * page_size + tok % page_size``. Pages
+are a whole number of kernel blocks (``page_size % block_size == 0``), so
+a block never straddles two pages and the kernel math is untouched: paged
+decode is pure index indirection on the DMA source.
 
 ``select_blocks`` exposes phases 1-2 as a standalone kernel (scores still
 never leave VMEM; only the tiny index rows do) for the two-kernel fallback
@@ -43,22 +57,25 @@ from repro.kernels.tuning import pad_lanes
 NEG_INF = -1e30
 
 
-def _score_and_select(b, h, ln, q_hat, k_ref, kd_buf, scores, sem_kd,
+def _score_and_select(ln, q_hat, kd_src, kd_buf, scores, sem_kd,
                       write_sel, *, d: int, bs: int, nb: int, nb_pad: int,
-                      k_blocks: int, scale: float):
+                      k_blocks: int, scale: float, local_window: int = 0,
+                      sliding_window: int = 0):
     """Phases 1-2: stream d-slices, keep block maxima in VMEM, emit top-k.
 
-    ``write_sel(t, idx)`` receives the t-th winning block index (descending
-    score, ties to the lower index — lax.top_k order), or ``-1`` once the
-    finite maxima are exhausted (fewer live blocks than k_blocks): argmax
-    over an all-NEG_INF row would otherwise re-emit index 0 and double-count
-    a live block in the attention pass."""
+    ``kd_src(j)`` returns the HBM ref slice holding block j's leading-d
+    feature columns (contiguous caches address it directly; paged caches
+    resolve it through the page table). ``write_sel(t, idx)`` receives the
+    t-th winning block index (descending score, ties to the lower index —
+    lax.top_k order), or ``-1`` once the finite maxima are exhausted (fewer
+    live blocks than k_blocks): argmax over an all-NEG_INF row would
+    otherwise re-emit index 0 and double-count a live block in the
+    attention pass."""
     qd = q_hat[:, :d] * scale                              # (G, d) f32
 
     def kd_copy(j, slot):
-        return pltpu.make_async_copy(
-            k_ref.at[b, pl.ds(j * bs, bs), h, pl.ds(0, d)],
-            kd_buf.at[slot], sem_kd.at[slot])
+        return pltpu.make_async_copy(kd_src(j), kd_buf.at[slot],
+                                     sem_kd.at[slot])
 
     kd_copy(0, 0).start()
     scores[...] = jnp.full((1, nb_pad), NEG_INF, jnp.float32)
@@ -75,7 +92,14 @@ def _score_and_select(b, h, ln, q_hat, k_ref, kd_buf, scores, sem_kd,
         s = jax.lax.dot_general(qd, kd, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-        s = jnp.where(pos < ln, s, NEG_INF)                # (G, bs)
+        live = pos < ln
+        if sliding_window:
+            live &= pos >= ln - sliding_window
+        s = jnp.where(live, s, NEG_INF)                    # (G, bs)
+        if local_window:
+            # recency inflation: force the local window into the selection
+            recent = live & (pos >= ln - local_window)
+            s = jnp.where(recent, s + jnp.float32(1e4), s)
         scores[0, j] = jnp.max(s)
         return carry
 
@@ -90,39 +114,54 @@ def _score_and_select(b, h, ln, q_hat, k_ref, kd_buf, scores, sem_kd,
         scores[...] = jnp.where(lanes == idx, NEG_INF, row)
 
 
-def _fused_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
-                  kd_buf, kbuf, vbuf, scores, sel, sem_kd, sem_kv, *,
-                  d: int, bs: int, nb: int, nb_pad: int, k_blocks: int,
-                  scale: float, g: int, dim: int):
+def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
+                  nb_pad: int, k_blocks: int, scale: float, g: int,
+                  dim: int, local_window: int, sliding_window: int):
+    if paged:
+        (len_ref, pt_ref, q_ref, k_ref, v_ref, out_ref,
+         kd_buf, kbuf, vbuf, scores, sel, sem_kd, sem_kv) = args
+    else:
+        (len_ref, q_ref, k_ref, v_ref, out_ref,
+         kd_buf, kbuf, vbuf, scores, sel, sem_kd, sem_kv) = args
     b = pl.program_id(0)
     h = pl.program_id(1)
     ln = len_ref[b]
     q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
 
+    def k_slice(ref, blk, width):
+        """HBM source for (logical) block ``blk``: direct for contiguous
+        caches, through the page table for pooled ones (the paged
+        index-indirection — blocks tile pages exactly)."""
+        tok = blk * bs
+        if paged:
+            row = pt_ref[b, tok // ps] * ps + tok % ps
+            return ref.at[pl.ds(row, bs), h, pl.ds(0, width)]
+        return ref.at[b, pl.ds(tok, bs), h, pl.ds(0, width)]
+
     def write_sel(t, idx):
         sel[t] = idx
 
-    _score_and_select(b, h, ln, q, k_ref, kd_buf, scores, sem_kd, write_sel,
-                      d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
-                      scale=scale)
+    _score_and_select(ln, q, lambda j: k_slice(k_ref, j, d), kd_buf, scores,
+                      sem_kd, write_sel, d=d, bs=bs, nb=nb, nb_pad=nb_pad,
+                      k_blocks=k_blocks, scale=scale,
+                      local_window=local_window,
+                      sliding_window=sliding_window)
 
     qs = q * scale                                         # (G, D)
 
     def att_blk(t, carry):
         m_prev, l_prev, acc = carry
         blk = sel[t]
-        start = jnp.maximum(blk, 0) * bs
+        safe = jnp.maximum(blk, 0)
 
         @pl.when(blk >= 0)
         def _fetch():
             # -1 sentinel (exhausted selection): skip the DMA; the stale
             # buffer contents are fully masked below
-            ck = pltpu.make_async_copy(
-                k_ref.at[b, pl.ds(start, bs), h, pl.ds(0, dim)],
-                kbuf, sem_kv.at[0])
-            cv = pltpu.make_async_copy(
-                v_ref.at[b, pl.ds(start, bs), h, pl.ds(0, dim)],
-                vbuf, sem_kv.at[1])
+            ck = pltpu.make_async_copy(k_slice(k_ref, safe, dim), kbuf,
+                                       sem_kv.at[0])
+            cv = pltpu.make_async_copy(k_slice(v_ref, safe, dim), vbuf,
+                                       sem_kv.at[1])
             ck.start()
             cv.start()
             ck.wait()
@@ -131,8 +170,10 @@ def _fused_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
         kb = kbuf[...].astype(jnp.float32)                 # (bs, D)
         s = jax.lax.dot_general(qs, kb, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        pos = safe * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
         live = (pos < ln) & (blk >= 0)                     # (1, bs)
+        if sliding_window:
+            live &= pos >= ln - sliding_window
         s = jnp.where(live, s, NEG_INF)                    # (G, bs)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         # guard: selected-but-dead block with an empty accumulator
@@ -153,15 +194,36 @@ def _fused_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
         out_ref.dtype)
 
 
+def _paged_args(q_hat, k_hat, cur_len, page_table, page_size, block_size):
+    """Validate/resolve the (paged?, logical length) of a kernel call."""
+    paged = page_table is not None
+    if paged:
+        assert page_size > 0 and page_size % block_size == 0, \
+            "kernel blocks must tile pages exactly (page_size % bs == 0)"
+        assert k_hat.ndim == 3, "paged caches are pooled (R, Hkv, D)"
+        s_len = page_table.shape[1] * page_size
+        prefetch = (cur_len.astype(jnp.int32),
+                    page_table.astype(jnp.int32))
+    else:
+        s_len = k_hat.shape[1]
+        prefetch = (cur_len.astype(jnp.int32),)
+    return paged, s_len, prefetch
+
+
 def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
                       block_size: int = 128, scale=None,
+                      local_window: int = 0, sliding_window: int = 0,
+                      page_table=None, page_size: int = 0,
                       interpret: bool = False):
     """Single-pass Loki decode. (B,Hkv,G,D),(B,S,Hkv,D),(B,S,Hkv,D),(B,)
     -> (B,Hkv,G,D). Requires cur_len >= 1 per row (the decode invariant:
-    the new token is already in the cache)."""
+    the new token is already in the cache). With ``page_table``/``page_size``
+    the caches are pooled (R,Hkv,D) and block DMAs resolve through the
+    table."""
     b, n_kv, g, dim = q_hat.shape
-    s_len = k_hat.shape[1]
     bs = block_size
+    paged, s_len, prefetch = _paged_args(q_hat, k_hat, cur_len, page_table,
+                                         page_size, bs)
     assert s_len % bs == 0, "cache length must be a multiple of block_size"
     nb = s_len // bs
     nb_pad = pad_lanes(nb)
@@ -169,22 +231,26 @@ def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
     scale = float(scale if scale is not None else dim ** -0.5)
 
     kernel = functools.partial(
-        _fused_kernel, d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
-        scale=scale, g=g, dim=dim)
+        _fused_kernel, paged=paged, ps=page_size, d=d, bs=bs, nb=nb,
+        nb_pad=nb_pad, k_blocks=k_blocks, scale=scale, g=g, dim=dim,
+        local_window=local_window, sliding_window=sliding_window)
+    if paged:
+        io_map = lambda i, j, ln, pt: (i, j, 0, 0)
+    else:
+        io_map = lambda i, j, ln: (i, j, 0, 0)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, n_kv),
             in_specs=[
-                pl.BlockSpec((1, 1, g, dim), lambda i, j, ln: (i, j, 0, 0)),
+                pl.BlockSpec((1, 1, g, dim), io_map),
                 # the caches stay in HBM; the kernel DMAs d-slices and the
                 # winning blocks itself
                 pl.BlockSpec(memory_space=pltpu.ANY),
                 pl.BlockSpec(memory_space=pltpu.ANY),
             ],
-            out_specs=pl.BlockSpec((1, 1, g, dim),
-                                   lambda i, j, ln: (i, j, 0, 0)),
+            out_specs=pl.BlockSpec((1, 1, g, dim), io_map),
             scratch_shapes=[
                 pltpu.VMEM((2, bs, d), k_hat.dtype),    # score-stream buffers
                 pltpu.VMEM((bs, dim), k_hat.dtype),     # winner K̂ block
@@ -197,35 +263,51 @@ def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
         interpret=interpret,
-    )(cur_len.astype(jnp.int32), q_hat, k_hat, v)
+    )(*prefetch, q_hat, k_hat, v)
     return out
 
 
-def _select_kernel(len_ref, q_ref, k_ref, out_ref, kd_buf, scores, sem_kd, *,
-                   d: int, bs: int, nb: int, nb_pad: int, k_blocks: int,
-                   scale: float):
+def _select_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
+                   nb_pad: int, k_blocks: int, scale: float,
+                   local_window: int, sliding_window: int):
+    if paged:
+        (len_ref, pt_ref, q_ref, k_ref, out_ref,
+         kd_buf, scores, sem_kd) = args
+    else:
+        len_ref, q_ref, k_ref, out_ref, kd_buf, scores, sem_kd = args
     b = pl.program_id(0)
     h = pl.program_id(1)
     ln = len_ref[b]
     q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
 
+    def kd_src(j):
+        tok = j * bs
+        if paged:
+            row = pt_ref[b, tok // ps] * ps + tok % ps
+            return k_ref.at[pl.ds(row, bs), h, pl.ds(0, d)]
+        return k_ref.at[b, pl.ds(tok, bs), h, pl.ds(0, d)]
+
     def write_sel(t, idx):
         out_ref[0, 0, t] = idx
 
-    _score_and_select(b, h, ln, q, k_ref, kd_buf, scores, sem_kd, write_sel,
+    _score_and_select(ln, q, kd_src, kd_buf, scores, sem_kd, write_sel,
                       d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
-                      scale=scale)
+                      scale=scale, local_window=local_window,
+                      sliding_window=sliding_window)
 
 
 def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
-                  block_size: int = 128, scale=None,
-                  interpret: bool = False):
+                  block_size: int = 128, scale=None, local_window: int = 0,
+                  sliding_window: int = 0, page_table=None,
+                  page_size: int = 0, interpret: bool = False):
     """Fused score+select: (B,Hkv,G,D),(B,S,Hkv,D),(B,) -> (B,Hkv,kb) int32
     block indices, group-shared; ``-1`` marks exhausted entries (fewer live
-    blocks than kb). Scores live only in VMEM scratch."""
+    blocks than kb). Scores live only in VMEM scratch. Paged caches resolve
+    block reads through ``page_table`` exactly like ``fused_loki_decode``."""
     b, n_kv, g, dim = q_hat.shape
-    s_len = k_hat.shape[1]
     bs = block_size
+    paged, s_len, prefetch = _paged_args(q_hat, k_hat, cur_len, page_table,
+                                         page_size, bs)
     assert s_len % bs == 0, "cache length must be a multiple of block_size"
     nb = s_len // bs
     nb_pad = pad_lanes(nb)
@@ -233,19 +315,25 @@ def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
     scale = float(scale if scale is not None else dim ** -0.5)
 
     kernel = functools.partial(
-        _select_kernel, d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
-        scale=scale)
+        _select_kernel, paged=paged, ps=page_size, d=d, bs=bs, nb=nb,
+        nb_pad=nb_pad, k_blocks=k_blocks, scale=scale,
+        local_window=local_window, sliding_window=sliding_window)
+    if paged:
+        q_map = lambda i, j, ln, pt: (i, j, 0, 0)
+        o_map = lambda i, j, ln, pt: (i, j, 0)
+    else:
+        q_map = lambda i, j, ln: (i, j, 0, 0)
+        o_map = lambda i, j, ln: (i, j, 0)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, n_kv),
             in_specs=[
-                pl.BlockSpec((1, 1, g, dim), lambda i, j, ln: (i, j, 0, 0)),
+                pl.BlockSpec((1, 1, g, dim), q_map),
                 pl.BlockSpec(memory_space=pltpu.ANY),
             ],
-            out_specs=pl.BlockSpec((1, 1, k_blocks),
-                                   lambda i, j, ln: (i, j, 0)),
+            out_specs=pl.BlockSpec((1, 1, k_blocks), o_map),
             scratch_shapes=[
                 pltpu.VMEM((2, bs, d), k_hat.dtype),
                 pltpu.VMEM((1, nb_pad), jnp.float32),
@@ -254,5 +342,5 @@ def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_kv, k_blocks), jnp.int32),
         interpret=interpret,
-    )(cur_len.astype(jnp.int32), q_hat, k_hat)
+    )(*prefetch, q_hat, k_hat)
     return out

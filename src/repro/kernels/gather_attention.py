@@ -109,8 +109,14 @@ def block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len, *,
 
 # ------------------------------------------------- GQA-batched variant
 
-def _gkernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
-             m_ref, l_ref, acc_ref, *, bs: int, scale: float, n_sel: int):
+def _gkernel(*args, paged: bool, bs: int, scale: float, n_sel: int,
+             sliding_window: int):
+    if paged:
+        (blk_idx_ref, len_ref, pt_ref, q_ref, k_ref, v_ref, out_ref,
+         m_ref, l_ref, acc_ref) = args
+    else:
+        (blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
+         m_ref, l_ref, acc_ref) = args
     b = pl.program_id(0)
     h = pl.program_id(1)
     j = pl.program_id(2)
@@ -122,7 +128,8 @@ def _gkernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)                 # (bs, D)
+    # paged pools have no batch dim: the k/v block arrives as (bs, 1, D)
+    k = (k_ref[:, 0] if paged else k_ref[0, :, 0]).astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, bs)
 
@@ -132,6 +139,8 @@ def _gkernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
     # blk == -1: selection exhausted (fewer live blocks than n_sel) — the
     # staged block is a clamped re-read and must contribute nothing
     live = (pos < len_ref[b]) & (blk >= 0)                 # (1, bs)
+    if sliding_window:
+        live &= pos >= len_ref[b] - sliding_window
     s = jnp.where(live, s, NEG_INF)
 
     m_prev = m_ref[...]                                    # (G,)
@@ -139,7 +148,7 @@ def _gkernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
     m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
     alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0)) * (m_prev > NEG_INF / 2)
     p = jnp.exp(s - m_safe[:, None]) * live                # (G, bs)
-    v_blk = v_ref[0, :, 0].astype(jnp.float32)             # (bs, D)
+    v_blk = (v_ref[:, 0] if paged else v_ref[0, :, 0]).astype(jnp.float32)
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
         p, v_blk, preferred_element_type=jnp.float32)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
@@ -154,6 +163,8 @@ def _gkernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
 
 def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
                                    block_size: int = 128, scale=None,
+                                   sliding_window: int = 0,
+                                   page_table=None, page_size: int = 0,
                                    interpret: bool = False):
     """GQA-batched sparse attention over a *group-shared* block selection.
 
@@ -169,34 +180,64 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
       blk_idx  (B, Hkv, n_sel)   group-shared selected blocks (prefetched)
       cur_len  (B,)
     Output:    (B, Hkv, G, D)
+
+    With ``page_table``/``page_size`` the caches are pooled
+    (n_pages * page_size, Hkv, D) and the selected *logical* block indices
+    resolve to physical blocks inside the BlockSpec index map — the sparse
+    paged read costs exactly one extra SMEM lookup per block (DESIGN.md §7).
     """
     b, n_kv, g, dim = q_hat.shape
-    s_len = k_hat.shape[1]
     bs = block_size
     n_sel = blk_idx.shape[-1]
-    assert s_len % bs == 0
+    paged = page_table is not None
+    if paged:
+        assert page_size > 0 and page_size % bs == 0, \
+            "kernel blocks must tile pages exactly"
+        assert k_hat.ndim == 3, "paged caches are pooled (R, Hkv, D)"
+        bpp = page_size // bs                 # blocks per page
+        assert (page_table.shape[1] * page_size) % bs == 0
+    else:
+        assert k_hat.shape[1] % bs == 0
     scale = float(scale if scale is not None else dim ** -0.5)
 
-    kernel = functools.partial(_gkernel, bs=bs, scale=scale, n_sel=n_sel)
+    kernel = functools.partial(_gkernel, paged=paged, bs=bs, scale=scale,
+                               n_sel=n_sel, sliding_window=sliding_window)
+    if paged:
+        def kv_map(i, h, j, bi, ln, pt):
+            # clamp the -1 "exhausted" sentinel, then translate the logical
+            # block to its physical home: page_table picks the page, the
+            # block's offset inside the page is preserved
+            blk = jnp.maximum(bi[i, h, j], 0)
+            return (pt[i, blk // bpp] * bpp + blk % bpp, h, 0)
+        in_specs = [
+            pl.BlockSpec((1, 1, g, dim),
+                         lambda i, h, j, bi, ln, pt: (i, h, 0, 0)),
+            pl.BlockSpec((bs, 1, dim), kv_map),
+            pl.BlockSpec((bs, 1, dim), kv_map),
+        ]
+        o_map = lambda i, h, j, bi, ln, pt: (i, h, 0, 0)
+        prefetch = (blk_idx.astype(jnp.int32), cur_len.astype(jnp.int32),
+                    page_table.astype(jnp.int32))
+    else:
+        def kv_map(i, h, j, bi, ln):
+            # clamp the -1 "exhausted" sentinel to a safe block address;
+            # the kernel masks its contribution to zero
+            return (i, jnp.maximum(bi[i, h, j], 0), h, 0)
+        in_specs = [
+            pl.BlockSpec((1, 1, g, dim),
+                         lambda i, h, j, bi, ln: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dim), kv_map),
+            pl.BlockSpec((1, bs, 1, dim), kv_map),
+        ]
+        o_map = lambda i, h, j, bi, ln: (i, h, 0, 0)
+        prefetch = (blk_idx.astype(jnp.int32), cur_len.astype(jnp.int32))
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, n_kv, n_sel),
-            in_specs=[
-                pl.BlockSpec((1, 1, g, dim),
-                             lambda i, h, j, bi, ln: (i, h, 0, 0)),
-                # clamp the -1 "exhausted" sentinel to a safe block address;
-                # the kernel masks its contribution to zero
-                pl.BlockSpec((1, bs, 1, dim),
-                             lambda i, h, j, bi, ln:
-                             (i, jnp.maximum(bi[i, h, j], 0), h, 0)),
-                pl.BlockSpec((1, bs, 1, dim),
-                             lambda i, h, j, bi, ln:
-                             (i, jnp.maximum(bi[i, h, j], 0), h, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, 1, g, dim),
-                                   lambda i, h, j, bi, ln: (i, h, 0, 0)),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, g, dim), o_map),
             scratch_shapes=[
                 pltpu.VMEM((g,), jnp.float32),       # running max per head
                 pltpu.VMEM((g,), jnp.float32),       # running denom per head
@@ -205,5 +246,5 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
         interpret=interpret,
-    )(blk_idx.astype(jnp.int32), cur_len.astype(jnp.int32), q_hat, k_hat, v)
+    )(*prefetch, q_hat, k_hat, v)
     return out

@@ -80,31 +80,49 @@ def flash(q, k, v, *, causal=True, block_q=128, block_k=128,
 # ------------------------------------------------ GQA-batched decode paths
 
 @functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
-                                             "scale", "interpret"))
+                                             "scale", "local_window",
+                                             "sliding_window", "page_size",
+                                             "interpret"))
 def loki_decode_fused(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
                       block_size: int = 128, scale=None,
+                      local_window: int = 0, sliding_window: int = 0,
+                      page_table=None, page_size: int = 0,
                       interpret: bool = False):
     """Single-pass fused decode (DESIGN.md §4): score, select and attend in
     one kernel; no score/selection tensor ever reaches HBM.
 
     q_hat (B,Hkv,G,D) grouped PCA-basis queries; k_hat/v (B,S,Hkv,D) model-
-    native caches; cur_len (B,). Returns (B,Hkv,G,D)."""
+    native caches (or pooled (R,Hkv,D) with ``page_table``); cur_len (B,).
+    Returns (B,Hkv,G,D)."""
     return fused_loki_decode(q_hat, k_hat, v, cur_len, d=d,
                              k_blocks=k_blocks, block_size=block_size,
-                             scale=scale, interpret=interpret)
+                             scale=scale, local_window=local_window,
+                             sliding_window=sliding_window,
+                             page_table=page_table, page_size=page_size,
+                             interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
-                                             "scale", "interpret"))
+                                             "scale", "local_window",
+                                             "sliding_window", "page_size",
+                                             "interpret"))
 def loki_decode_two_kernel(q_hat, k_hat, v, cur_len, *, d: int,
                            k_blocks: int, block_size: int = 128, scale=None,
+                           local_window: int = 0, sliding_window: int = 0,
+                           page_table=None, page_size: int = 0,
                            interpret: bool = False):
     """Two-kernel fallback for shapes the single-pass kernel can't tile:
     fused score+select (scores stay in VMEM, only the (B,Hkv,kb) index rows
     cross HBM) feeding the GQA-batched sparse-attention kernel."""
     blk_idx = select_blocks(q_hat, k_hat, cur_len, d=d, k_blocks=k_blocks,
                             block_size=block_size, scale=scale,
+                            local_window=local_window,
+                            sliding_window=sliding_window,
+                            page_table=page_table, page_size=page_size,
                             interpret=interpret)
     return block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len,
                                           block_size=block_size, scale=scale,
+                                          sliding_window=sliding_window,
+                                          page_table=page_table,
+                                          page_size=page_size,
                                           interpret=interpret)

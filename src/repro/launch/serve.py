@@ -3,10 +3,17 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --policy loki --requests 6 --max-new 16
 
-Builds the slot-based batched engine with the selected attention policy
+Builds the serving engine with the selected attention policy
 (full | loki | loki_block | exact_topk | h2o | pcaattn), calibrates PCA
 transforms on the fly for Loki policies, and reports per-tick latency and
 throughput over a synthetic request stream.
+
+``--engine paged`` (default) serves from the paged KV-cache with the
+chunked-prefill scheduler (serving/scheduler.py): memory scales with live
+tokens, queues longer than the pool drain via continuous batching, and
+long prompts are absorbed ``--prefill-chunk`` tokens per tick. Policies or
+families without a paged cache (h2o, pcaattn, ssm) fall back to the dense
+slot engine.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
 from repro.models import lm
 from repro.optim import adamw
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import PAGED_POLICIES, PagedServingEngine
 from repro.training.step import TrainState, make_train_step
 
 
@@ -44,6 +52,16 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--smax", type=int, default=128)
+    ap.add_argument("--engine", default="paged", choices=["paged", "dense"],
+                    help="paged = page-pool cache + chunked-prefill "
+                         "scheduler (serving/scheduler.py); dense = the "
+                         "preallocated slot cache")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page (0 = loki block_size)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page pool size (0 = fit all slots at smax)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefetched per tick (paged engine)")
     ap.add_argument("--warm-steps", type=int, default=60,
                     help="brief training so generation has signal")
     args = ap.parse_args()
@@ -77,8 +95,23 @@ def main():
     if args.policy != "full":
         cfg = cfg.with_policy(args.policy, k_f=args.k_f, d_f=args.d_f)
 
-    eng = ServingEngine(params, cfg, n_slots=args.n_slots, smax=args.smax,
-                        backend=args.backend)
+    paged = (args.engine == "paged" and cfg.family in ("dense", "moe")
+             and cfg.attn_policy() in PAGED_POLICIES)
+    if args.engine == "paged" and not paged:
+        print(f"note: policy {cfg.attn_policy()!r} / family {cfg.family!r} "
+              "needs the dense engine; falling back")
+    if paged:
+        eng = PagedServingEngine(
+            params, cfg, n_slots=args.n_slots, smax=args.smax,
+            page_size=args.page_size or None,
+            n_pages=args.n_pages or None,
+            prefill_chunk=args.prefill_chunk, backend=args.backend)
+        print(f"paged engine: page_size={eng.page_size} "
+              f"pool={eng.pool.n_pages} pages "
+              f"(max {eng.max_pages}/request)")
+    else:
+        eng = ServingEngine(params, cfg, n_slots=args.n_slots,
+                            smax=args.smax, backend=args.backend)
     reqs = [Request(rid=i,
                     prompt=data.batch_at(4000 + i)["tokens"][0, :24 + 4 * i],
                     max_new=args.max_new)

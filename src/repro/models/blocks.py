@@ -147,10 +147,17 @@ def _write_cache(cache_arr, new, pos_len):
     return jax.lax.bitcast_convert_type(out, dt) if uint else out
 
 
-def attn_decode(p, cache, x, pos_len, cfg: ModelConfig):
+def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
+                page_table=None, page_size: int = 0):
     """One-token decode with the configured attention policy.
 
-    x (B,E); pos_len (B,) tokens already cached. Returns (y (B,E), cache)."""
+    x (B,E); pos_len (B,) tokens already cached. Returns (y (B,E), cache).
+
+    With ``page_table (B, max_pages)``/``page_size`` the cache arrays are
+    the serving engine's shared page pools (R,Hkv,D): the new token's K/V
+    scatter through the table to their physical rows, and reads either
+    gather the logical per-slot view (jnp policies) or hand the pool plus
+    table straight to the paged Pallas kernels (loki_block)."""
     hd = cfg.resolved_head_dim
     b = x.shape[0]
     q, k, v = _qkv(p, x[:, None, :], cfg)
@@ -165,8 +172,12 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig):
     policy = cfg.attn_policy()
     proj = p["pca"]
     cur_len = positions + 1                       # cache incl. new token
+    paged = page_table is not None
 
     if policy == "h2o":
+        if paged:
+            raise ValueError("h2o keeps its own budgeted cache; "
+                             "serve it through the dense engine")
         st = baselines.H2OState(cache["k"], cache["v"], cache["pos"],
                                 cache["acc"], cache["fill"])
         out, st = baselines.h2o_decode(q, k, v, st, positions)
@@ -183,32 +194,50 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig):
         k_store = jnp.einsum("bhd,hde->bhe", k, proj[..., :d].astype(k.dtype))
     else:
         k_store = k
-    cache = {"k": _write_cache(cache["k"], k_store, pos_len),
-             "v": _write_cache(cache["v"], v, pos_len)}
+    if paged:
+        from repro.serving import paged_cache as PC
+        cache = {"k": PC.write_token_rows(cache["k"], k_store, page_table,
+                                          positions, page_size),
+                 "v": PC.write_token_rows(cache["v"], v, page_table,
+                                          positions, page_size)}
+
+        def view(arr):
+            return PC.gather_logical(arr, page_table, page_size)
+    else:
+        cache = {"k": _write_cache(cache["k"], k_store, pos_len),
+                 "v": _write_cache(cache["v"], v, pos_len)}
+
+        def view(arr):
+            return arr
 
     if policy == "full":
-        out = A.decode_full(q, cache["k"], cache["v"], cur_len,
+        out = A.decode_full(q, view(cache["k"]), view(cache["v"]), cur_len,
                             sliding_window=cfg.sliding_window)
     elif policy == "exact_topk":
-        out = baselines.exact_topk_decode(q, cache["k"], cache["v"],
-                                          cur_len, cfg.loki)
+        out = baselines.exact_topk_decode(q, view(cache["k"]),
+                                          view(cache["v"]), cur_len,
+                                          cfg.loki)
     elif policy == "loki":
         if cfg.loki.n_chunks:
             out = loki.loki_decode_chunked(
-                q, cache["k"], cache["v"], cur_len, proj, cfg.loki,
-                sliding_window=cfg.sliding_window)
+                q, view(cache["k"]), view(cache["v"]), cur_len, proj,
+                cfg.loki, sliding_window=cfg.sliding_window)
         else:
-            out = loki.loki_decode(q, cache["k"], cache["v"], cur_len, proj,
-                                   cfg.loki,
+            out = loki.loki_decode(q, view(cache["k"]), view(cache["v"]),
+                                   cur_len, proj, cfg.loki,
                                    sliding_window=cfg.sliding_window)
     elif policy == "loki_block":
         # backend-dispatched: fused Pallas kernels on TPU (or when forced),
-        # the jnp reference otherwise (core/dispatch.py)
+        # the jnp reference otherwise (core/dispatch.py). Paged caches pass
+        # through untouched — the kernels index the pool via the table.
         out = dispatch.loki_block_decode(q, cache["k"], cache["v"], cur_len,
-                                         proj, cfg.loki)
+                                         proj, cfg.loki,
+                                         sliding_window=cfg.sliding_window,
+                                         page_table=page_table,
+                                         page_size=page_size)
     elif policy == "pcaattn":
-        out = baselines.pcaattn_decode(q, cache["k"], cache["v"], cur_len,
-                                       proj, cfg.loki)
+        out = baselines.pcaattn_decode(q, view(cache["k"]), view(cache["v"]),
+                                       cur_len, proj, cfg.loki)
     else:
         raise ValueError(f"unknown attention policy {policy!r}")
     y = L.dot(out.reshape(b, cfg.q_dim), p["wo"].astype(x.dtype))
@@ -264,6 +293,84 @@ def attn_prefill(p, cache, x, positions, cfg: ModelConfig):
         "v": jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
     }
+    return y, cache
+
+
+def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
+                       table_row, page_size: int):
+    """One chunk of a paged, chunked prefill for a single request.
+
+    x (1,C,E) holds the chunk's token embeddings at logical positions
+    ``pos_start .. pos_start+C-1``; only the first ``n_valid`` are real
+    (the scheduler zero-pads the final chunk to keep the jit signature
+    fixed). The chunk's K/V scatter through ``table_row (max_pages,)``
+    into the shared pool (pad rows go to the trash page), then the chunk
+    attends causally over [0, pos_start+C) via the logical view.
+
+    Exactness across chunks: the cached prefix holds keys in the policy's
+    storage basis, so prefix scores are taken in that basis — for Loki
+    policies that is q̂·k̂ which equals q·k exactly for orthogonal P
+    (Lemma 4.1). The chunk's own columns use the fresh original-basis
+    keys, so a single-chunk prefill reproduces the one-shot prefill's
+    score matrix term for term."""
+    from repro.serving import paged_cache as PC
+    b, c = x.shape[:2]
+    q, k, v = _qkv(p, x, cfg)
+    positions = pos_start + jnp.arange(c)[None]            # (1, C)
+    if cfg.rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    policy = cfg.attn_policy()
+    proj = p["pca"]
+    if policy in ("loki", "loki_block"):
+        k_store = jnp.einsum("bshd,hde->bshe", k, proj.astype(k.dtype))
+    elif policy in ("full", "exact_topk"):
+        k_store = k
+    else:
+        raise ValueError(f"policy {policy!r} cannot reconstruct exact "
+                         "prefix attention from its cache; use the dense "
+                         "engine's one-shot prefill")
+    cache = {"k": PC.write_chunk_rows(cache["k"], k_store[0], table_row,
+                                      pos_start, page_size,
+                                      n_valid=n_valid),
+             "v": PC.write_chunk_rows(cache["v"], v[0], table_row,
+                                      pos_start, page_size,
+                                      n_valid=n_valid)}
+
+    klog = PC.gather_logical(cache["k"], table_row[None], page_size)
+    vlog = PC.gather_logical(cache["v"], table_row[None], page_size)
+    sl = klog.shape[1]
+    n_kv = cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    qg = A._group(q, n_kv)                                 # (1,C,Hkv,G,D)
+    if policy in ("loki", "loki_block"):
+        q_pref = jnp.einsum("bchgd,hde->bchge", qg, proj.astype(q.dtype))
+    else:
+        q_pref = qg
+    # prefix scores against the cached (storage-basis) keys ...
+    scores = jnp.einsum("bchgd,bshd->bhgcs", q_pref * scale, klog,
+                        preferred_element_type=jnp.float32)
+    # ... the chunk's own columns overwritten with fresh original-basis
+    # scores (bit-parity with the one-shot prefill for these terms).
+    # Scatter, not dynamic_update_slice: when the padded chunk overhangs
+    # the logical length (pos_start + C > Sl, pad columns only) a DUS
+    # would clamp the start and land the whole block at shifted columns;
+    # drop-mode scatter discards exactly the overhanging pads instead.
+    s_chunk = jnp.einsum("bchgd,bshd->bhgcs", qg * scale, k,
+                         preferred_element_type=jnp.float32)
+    chunk_cols = pos_start + jnp.arange(c)
+    scores = scores.at[:, :, :, :, chunk_cols].set(s_chunk, mode="drop")
+
+    kv_pos = jnp.arange(sl)
+    mask = kv_pos[None, :] <= positions[0][:, None]        # causal (C, Sl)
+    if cfg.sliding_window:
+        mask &= positions[0][:, None] - kv_pos[None, :] < cfg.sliding_window
+    scores = jnp.where(mask[None, None, None], scores, A.NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(vlog.dtype)
+    o = jnp.einsum("bhgcs,bshd->bchgd", w, vlog)
+    y = L.dot(o.reshape(b, c, cfg.q_dim), p["wo"].astype(x.dtype))
     return y, cache
 
 

@@ -290,12 +290,41 @@ def init_cache(cfg: ModelConfig, batch: int, smax: int,
     return {"layers": [one(layer_kind(cfg, i)) for i in range(cfg.n_layers)]}
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32) -> Dict[str, Any]:
+    """Stacked (L, ...) *pooled* decode cache: attention K/V live in one
+    shared page pool of (n_pages * page_size) rows with no batch dim —
+    requests map logical positions to pool rows through per-slot page
+    tables (serving/paged_cache.py). Total memory scales with the page
+    budget, not n_slots × smax."""
+    if not uses_scan(cfg) or cfg.family not in ("dense", "moe"):
+        raise ValueError("paged caches support scan attention families "
+                         f"(dense/moe); {cfg.family!r} has per-slot "
+                         "recurrent state — use the dense engine")
+    if cfg.attn_policy() in ("h2o", "pcaattn"):
+        # h2o keeps its own budgeted cache structure; pcaattn stores lossy
+        # d-dim keys, which cannot rebuild the exact prefix attention that
+        # chunked prefill needs — both serve through the dense engine
+        raise ValueError(f"{cfg.attn_policy()!r} cannot serve from a paged "
+                         "cache; use the dense engine")
+    hd = cfg.resolved_head_dim
+    r = n_pages * page_size
+    layer = {"attn": {"k": jnp.zeros((r, cfg.n_kv_heads, hd), dtype),
+                      "v": jnp.zeros((r, cfg.n_kv_heads, hd), dtype)}}
+    return {"layers": jax.tree.map(
+        lambda a: jnp.broadcast_to(
+            a, (cfg.n_layers,) + a.shape).copy(), layer)}
+
+
 # --------------------------------------------------------------- decode
 
-def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str):
+def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
+                  page_table=None, page_size: int = 0):
     if kind in ("dense", "moe", "hybrid", "dec"):
         h = L.norm_apply(p["ln1"], x)
-        a, new_attn = B.attn_decode(p["attn"], c["attn"], h, pos_len, cfg)
+        a, new_attn = B.attn_decode(p["attn"], c["attn"], h, pos_len, cfg,
+                                    page_table=page_table,
+                                    page_size=page_size)
         c = dict(c)
         c["attn"] = new_attn
         if kind == "hybrid":
@@ -351,10 +380,13 @@ def _cache_unbits(tree, dtypes):
         if a.dtype != dt else a, tree, dtypes)
 
 
-def decode_step(params, cfg: ModelConfig, cache, token, pos_len):
+def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
+                page_table=None, page_size: int = 0):
     """One generation step. token (B,) int32; pos_len (B,) tokens cached.
 
-    Returns (logits (B,V), new_cache)."""
+    Returns (logits (B,V), new_cache). With ``page_table (B, max_pages)``/
+    ``page_size`` the cache is the pooled layout of ``init_paged_cache``
+    and every layer's attention reads/writes resolve through the table."""
     x = L.embed_apply(params["embed"], token[:, None], cfg)[:, 0]
     if not cfg.rope and cfg.family != "ssm":
         # sinusoidal decoders: add position encoding for the current slot
@@ -368,7 +400,8 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len):
         def body(x, pc):
             p, cbits = pc
             c = _cache_unbits(cbits, dtypes)
-            x, c = _layer_decode(p, c, x, pos_len, cfg, kind)
+            x, c = _layer_decode(p, c, x, pos_len, cfg, kind,
+                                 page_table=page_table, page_size=page_size)
             return x, _cache_bits(c)
 
         x, new_bits = jax.lax.scan(
@@ -379,7 +412,9 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len):
         x_cur = x
         for i in range(cfg.n_layers):
             x_cur, c = _layer_decode(params["layers"][i], cache["layers"][i],
-                                     x_cur, pos_len, cfg, layer_kind(cfg, i))
+                                     x_cur, pos_len, cfg, layer_kind(cfg, i),
+                                     page_table=page_table,
+                                     page_size=page_size)
             new_list.append(c)
         x = x_cur
         new_cache = {"layers": new_list}
@@ -472,6 +507,58 @@ def prefill(params, cfg: ModelConfig, tokens, smax: int, *, frames=None,
     logits = L.unembed_apply(params["embed"], x, cfg)[:, 0]
     pos_len = jnp.full((b,), s, jnp.int32)
     return logits, cache, pos_len
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
+                  n_valid, page_table, page_size: int):
+    """One step of a paged, chunked prefill for a single request.
+
+    tokens (1, C) — a fixed-size chunk whose first ``n_valid`` entries are
+    real prompt tokens at logical positions ``pos_start .. pos_start+C-1``
+    (the rest is zero padding, written to the trash page). The chunk's K/V
+    are scattered through ``page_table`` ((1, max_pages) or (max_pages,))
+    into the shared pool ``cache``; attention runs causally over the
+    cached prefix plus the chunk, so running consecutive chunks over a
+    prompt reproduces the one-shot ``prefill`` (tested logit parity in
+    tests/test_serving.py).
+
+    Returns (logits (1, V) for token ``n_valid - 1`` of the chunk,
+    new_cache). ``pos_start``/``n_valid`` are traced scalars — one trace
+    serves every chunk of every request."""
+    if not uses_scan(cfg) or cfg.family not in ("dense", "moe"):
+        raise ValueError("chunked prefill supports scan attention families "
+                         "(dense/moe)")
+    kind = layer_kind(cfg, 0)
+    table_row = page_table[0] if page_table.ndim == 2 else page_table
+    b, c = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    positions = pos_start + jnp.arange(c)
+    if not cfg.rope:
+        x = x + _sinusoidal_at(positions, cfg.d_model)[None].astype(x.dtype)
+
+    def body(x, pc):
+        p, cc = pc
+        h = L.norm_apply(p["ln1"], x)
+        a, new_attn = B.attn_prefill_chunk(p["attn"], cc["attn"], h,
+                                           pos_start, n_valid, cfg,
+                                           table_row=table_row,
+                                           page_size=page_size)
+        cc = dict(cc)
+        cc["attn"] = new_attn
+        x = x + a
+        h = L.norm_apply(p["ln2"], x)
+        if kind == "moe":
+            y, _ = B.moe_apply(p["moe"], h, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], h, cfg)
+        return x + y, cc
+
+    x, new_layers = jax.lax.scan(body, x, (params["layers"],
+                                           cache["layers"]))
+    x_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    x_last = L.norm_apply(params["final_norm"], x_last)
+    logits = L.unembed_apply(params["embed"], x_last, cfg)[:, 0]
+    return logits, {"layers": new_layers}
 
 
 def _mamba_prefill(p, x, cfg):

@@ -13,6 +13,7 @@ slot. Per-slot positions make ragged batches exact.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -30,6 +31,27 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0         # set by submit(); for latency reporting
+    t_done: float = 0.0           # set when the request finishes
+
+
+def context_cap(smax: int, gen_tokens: int) -> int:
+    """Prompt rows a fresh admission may occupy: reserve headroom for the
+    generation, capped at half the context so an outsized max_new degrades
+    to a capacity-capped run instead of eating the whole prompt (full
+    max_new is guaranteed for max_new <= smax//2). Shared by both engines
+    so their admitted context — and therefore greedy outputs — agree."""
+    return max(smax - min(gen_tokens, smax // 2), 1)
+
+
+def sample_next(logits, *, greedy: bool, rng, ticks: int):
+    """Shared next-token rule for both engines: greedy argmax, or
+    categorical with the caller's key (falling back to PRNGKey(tick) —
+    thread a real rng via run_until_done for independent draws)."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    rng = rng if rng is not None else jax.random.PRNGKey(ticks)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)
 
 
 class ServingEngine:
@@ -62,6 +84,7 @@ class ServingEngine:
     # ------------------------------------------------------------ admin
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.time()
         self._queue.append(req)
 
     def _admit(self) -> None:
@@ -79,10 +102,13 @@ class ServingEngine:
         token-by-token fill ran a full batched decode step per prompt token,
         rewriting every live slot's cache at its current position.)"""
         toks = req.prompt.astype(np.int32)
-        if len(toks) > self.smax:
-            # cache can hold smax rows; keep the most recent context rather
-            # than crashing the batched step mid-service
-            toks = toks[-self.smax:]
+        # cache can hold smax rows; keep the most recent context AND leave
+        # generation headroom — truncating to smax itself left pos at
+        # smax-1, so the finish guard ended the request after a single
+        # generated token
+        cap = context_cap(self.smax, req.max_new)
+        if len(toks) > cap:
+            toks = toks[-cap:]
         self.pos = self.pos.at[slot].set(0)
         if len(toks) > 1:
             _, filled, _ = self._prefill(self.params,
@@ -106,12 +132,11 @@ class ServingEngine:
         logits, self.cache = self._decode(
             self.params, self.cache, self.last_tok, self.pos)
         self.pos = self.pos + jnp.asarray(self.live, jnp.int32)
-        if self.greedy:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            rng = rng if rng is not None else jax.random.PRNGKey(self.ticks)
-            nxt = jax.random.categorical(rng, logits).astype(jnp.int32)
-        nxt_np = np.asarray(nxt)
+        nxt_np = np.asarray(sample_next(logits, greedy=self.greedy,
+                                        rng=rng, ticks=self.ticks))
+        # one device->host sync for all slots (a per-slot int(self.pos[slot])
+        # in the loop below serialized a transfer per live slot per tick)
+        pos_np = np.asarray(self.pos)
         for slot in range(self.n_slots):
             req = self.slot_req[slot]
             if req is None or not self.live[slot]:
@@ -120,17 +145,26 @@ class ServingEngine:
             req.out.append(tok)
             finished = (len(req.out) >= req.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
-                        or int(self.pos[slot]) >= self.smax - 1)
+                        or int(pos_np[slot]) >= self.smax - 1)
             if finished:
                 req.done = True
+                req.t_done = time.time()
                 self.live[slot] = False
                 self.slot_req[slot] = None
             else:
                 self.last_tok = self.last_tok.at[slot].set(tok)
         self.ticks += 1
 
-    def run_until_done(self, max_ticks: int = 10_000) -> None:
+    def run_until_done(self, max_ticks: int = 10_000,
+                       rng: Optional[jax.Array] = None) -> None:
+        """Drive ticks to completion. ``rng`` (non-greedy sampling): split a
+        fresh subkey per tick — without it every run re-derives
+        PRNGKey(tick) and two engines sampling the same tick draw identical
+        tokens."""
         for _ in range(max_ticks):
             if not self._queue and not self.live.any():
                 return
-            self.tick()
+            sub = None
+            if rng is not None:
+                rng, sub = jax.random.split(rng)
+            self.tick(sub)

@@ -1,0 +1,150 @@
+"""Paged KV-cache: block-granular cache storage for the serving engine.
+
+The dense engine preallocates one ``(n_slots, Smax, Hkv, D)`` cache per
+layer, so total context is hard-capped at ``n_slots * smax`` and every slot
+pays for its worst case. Here the cache is a shared **page pool**:
+
+  pool      (n_pages * page_size, Hkv, D)   per layer, no batch dim
+  page table(n_slots, max_pages) int32      logical page -> physical page
+
+A request's logical position ``p`` lives at pool row
+``table[slot, p // page_size] * page_size + p % page_size``. Pages are
+handed out on demand as a request's context grows and returned to the free
+list the moment it finishes (or is preempted), so memory scales with the
+*live* token count, not with ``n_slots * smax``.
+
+``page_size`` defaults to ``LokiConfig.block_size``: the fused Loki decode
+kernel already treats the cache as fixed-size blocks, so a page is exactly
+the kernel's DMA unit and paged decode is pure index indirection
+(DESIGN.md §7).
+
+Physical page 0 is reserved as a trash page: freed slots point their whole
+table at it, so the batched decode step's unconditional cache write lands
+in the trash instead of corrupting pages that have been reallocated to
+other requests.
+
+This module is deliberately two-layered:
+  * pure-jnp array helpers (``gather_logical``, ``write_token_rows``,
+    ``write_chunk_rows``) used inside jit by models/ and core/,
+  * the host-side ``PagePool`` allocator driven by the scheduler.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+TRASH_PAGE = 0
+
+_UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+# ------------------------------------------------------------ jnp helpers
+
+def logical_rows(page_table, page_size: int):
+    """(B, max_pages) int32 -> (B, max_pages * page_size) pool row ids."""
+    b, n = page_table.shape
+    rows = page_table[:, :, None] * page_size + jnp.arange(page_size)
+    return rows.reshape(b, n * page_size)
+
+
+def gather_logical(pool, page_table, page_size: int):
+    """Materialize the logical per-slot view of a pooled cache.
+
+    pool (R, Hkv, D); page_table (B, max_pages)
+    -> (B, max_pages * page_size, Hkv, D).
+
+    This is the jnp-oracle read path: every dense-cache decode/attention
+    routine runs unchanged on the gathered view (rows past ``cur_len`` are
+    garbage from unallocated/trash pages and are masked by the caller's
+    length mask exactly like the dense cache's unwritten rows)."""
+    return pool[logical_rows(page_table, page_size)]
+
+
+def _scatter_rows(pool, rows, new):
+    """pool (R, ...) <- new (N, ...) at row ids (N,), bitcast to uint so
+    low-precision scatters stay in-place on every backend (§Perf L3)."""
+    dt = pool.dtype
+    uint = _UINT_OF.get(jnp.dtype(dt).itemsize) if jnp.issubdtype(
+        dt, jnp.floating) else None
+    p_view = jax.lax.bitcast_convert_type(pool, uint) if uint else pool
+    n_view = jax.lax.bitcast_convert_type(new.astype(dt), uint) if uint \
+        else new.astype(dt)
+    out = p_view.at[rows].set(n_view, mode="drop")
+    return jax.lax.bitcast_convert_type(out, dt) if uint else out
+
+
+def token_rows(page_table, pos, page_size: int):
+    """Pool rows for one token per slot. page_table (B, max_pages),
+    pos (B,) logical positions -> (B,) physical rows."""
+    page = (pos // page_size).astype(jnp.int32)
+    pid = jnp.take_along_axis(page_table, page[:, None], axis=1)[:, 0]
+    return pid * page_size + (pos % page_size).astype(jnp.int32)
+
+
+def write_token_rows(pool, new, page_table, pos, page_size: int):
+    """Decode-step write: new (B, Hkv, D) at logical positions pos (B,)."""
+    return _scatter_rows(pool, token_rows(page_table, pos, page_size), new)
+
+
+def write_chunk_rows(pool, new, table_row, pos_start, page_size: int, *,
+                     n_valid=None):
+    """Chunked-prefill write: new (C, Hkv, D) at logical positions
+    ``pos_start + [0, C)`` of a single request. table_row (max_pages,).
+
+    ``n_valid``: rows at or past it (the zero-padding of a fixed-size final
+    chunk) are diverted to the trash page so a padded chunk never needs
+    pages beyond the real tokens and never clobbers live rows."""
+    c = new.shape[0]
+    pos = pos_start + jnp.arange(c)
+    page = (pos // page_size).astype(jnp.int32)
+    rows = table_row[page] * page_size + (pos % page_size).astype(jnp.int32)
+    if n_valid is not None:
+        rows = jnp.where(jnp.arange(c) < n_valid, rows,
+                         TRASH_PAGE * page_size)
+    return _scatter_rows(pool, rows, new)
+
+
+# --------------------------------------------------------- host allocator
+
+class PagePool:
+    """Host-side free-list allocator over ``n_pages`` physical pages.
+
+    Page 0 is reserved (trash page for freed slots' writes), so the usable
+    capacity is ``n_pages - 1`` pages. Finished/preempted requests free
+    their pages immediately — the eviction policy is "free on finish";
+    under pressure the scheduler additionally preempts (see scheduler.py).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(1, n_pages))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Grab n pages, or None (and no allocation) if the pool can't."""
+        if n > len(self._free):
+            return None
+        taken, self._free = self._free[:n], self._free[n:]
+        return taken
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p != TRASH_PAGE and p not in self._free
+        self._free.extend(pages)
+
+    @staticmethod
+    def pages_for(n_tokens: int, page_size: int) -> int:
+        """Pages needed to hold n_tokens."""
+        return -(-max(n_tokens, 0) // page_size)

@@ -1,0 +1,310 @@
+"""Paged serving engine: admission + continuous batching over a page pool.
+
+Replaces the dense engine's ``(n_slots, Smax, ...)`` preallocation with the
+shared page pool of serving/paged_cache.py and a scheduler that interleaves
+
+  * **chunked prefill** — each tick advances at most one waiting prompt by
+    ``prefill_chunk`` tokens, so a long prompt neither monopolizes a tick
+    nor gets truncated to the cache length, and
+  * **batched decode** — one ``lm.decode_step`` over every live slot, with
+    per-slot positions and page tables keeping ragged batches exact.
+
+Pages are allocated on demand (a request holds ``ceil(len/page_size)``
+pages) and freed the moment a request finishes. Under memory pressure the
+scheduler *preempts* the latest-arriving request (vLLM's recompute
+policy — an older request is never evicted for a younger one): its pages
+are freed and it is requeued at the front with its generated tokens folded
+into the prompt, so greedy decoding reproduces the identical continuation
+after re-admission. ``n_pages - 1 >= max_pages`` is enforced at
+construction, so a lone request can always run to its length cap and
+preemption cannot livelock.
+
+Decode numerics are the dense engine's: the jnp policies read the gathered
+logical view (bit-compatible with a dense cache of the same logical
+length), the ``loki_block`` Pallas path indexes the pool directly through
+the page table (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serving.engine import Request, context_cap, sample_next
+from repro.serving.paged_cache import PagePool
+
+PAGED_POLICIES = ("full", "exact_topk", "loki", "loki_block")
+
+
+class PagedServingEngine:
+    """Continuous-batching engine over a paged KV-cache.
+
+    n_slots        decode batch width (concurrent *running* requests)
+    smax           logical context cap per request (rounded up to pages)
+    page_size      tokens per page; defaults to ``cfg.loki.block_size`` so
+                   pages coincide with the fused kernel's DMA blocks
+    n_pages        physical pool size incl. the reserved trash page;
+                   defaults to fitting every slot at full length (pass less
+                   to exercise allocation pressure / preemption)
+    prefill_chunk  prompt tokens processed per tick (fixed-size, padded)
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 smax: int = 512, page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None, prefill_chunk: int = 32,
+                 eos_id: Optional[int] = None, greedy: bool = True,
+                 backend: Optional[str] = None):
+        if backend is not None:
+            cfg = cfg.replace(
+                loki=dataclasses.replace(cfg.loki, backend=backend))
+        if cfg.attn_policy() not in PAGED_POLICIES:
+            raise ValueError(
+                f"policy {cfg.attn_policy()!r} cannot serve from a paged "
+                f"cache (supported: {PAGED_POLICIES}); use ServingEngine")
+        self.params, self.cfg = params, cfg
+        self.page_size = page_size or cfg.loki.block_size
+        self.max_pages = -(-smax // self.page_size)
+        self.smax = self.max_pages * self.page_size      # logical cap
+        if n_pages is None:
+            n_pages = 1 + n_slots * self.max_pages       # +1: trash page
+        if n_pages - 1 < self.max_pages:
+            raise ValueError(
+                f"pool of {n_pages} pages cannot hold one full request "
+                f"({self.max_pages} pages); raise n_pages or lower smax")
+        self.n_slots = n_slots
+        self.prefill_chunk = prefill_chunk
+        self.eos_id, self.greedy = eos_id, greedy
+
+        self.pool = PagePool(n_pages, self.page_size)
+        self.cache = lm.init_paged_cache(cfg, n_pages, self.page_size,
+                                         jnp.float32)
+        self.page_table = jnp.zeros((n_slots, self.max_pages), jnp.int32)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.last_tok = jnp.zeros((n_slots,), jnp.int32)
+        self.live = np.zeros((n_slots,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        # slots mid-prefill: slot -> index of the next prompt token to feed
+        self._prefill_at: Dict[int, int] = {}
+        # admission order, oldest first — preemption victims come from the
+        # tail so head-of-line requests always finish
+        self._admit_order: List[int] = []
+        self._queue: Deque[Request] = collections.deque()
+        # generated tokens already folded back into req.prompt by earlier
+        # preemptions (keyed by object id; a second preemption must only
+        # fold the tokens generated since the last one)
+        self._folded: Dict[int, int] = {}
+        # original submission order (survives preemption/re-admission):
+        # preemption only ever evicts later arrivals, so head-of-line
+        # requests always finish
+        self._arrival: Dict[int, int] = {}
+        self._arrival_seq = 0
+        self.ticks = 0
+        self.n_preempted = 0
+
+        ps = self.page_size
+        self._decode = jax.jit(
+            lambda p, c, t, pl, pt: lm.decode_step(
+                p, cfg, c, t, pl, page_table=pt, page_size=ps))
+        self._chunk = jax.jit(
+            lambda p, c, toks, start, nv, row: lm.prefill_chunk(
+                p, cfg, c, toks, start, nv, row, ps))
+
+    # ------------------------------------------------------------ admin
+
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.time()
+        self._arrival[id(req)] = self._arrival_seq
+        self._arrival_seq += 1
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if not self._queue:
+                return
+            if self.slot_req[slot] is not None:
+                continue
+            req = self._queue.popleft()
+            toks = req.prompt.astype(np.int32)
+            if not req.out:
+                cap = context_cap(self.smax, req.max_new)
+                if len(toks) > cap:
+                    toks = toks[-cap:]
+            # else: re-admission after a mid-decode preemption. Everything
+            # in the folded prompt was legitimately cached at preemption
+            # (pos_after < smax-1, so len <= smax-1): re-truncating here
+            # would drop context the unpreempted run kept and make greedy
+            # output depend on preemption timing.
+            req.prompt = toks
+            self.slot_req[slot] = req
+            self.slot_pages[slot] = []
+            self._admit_order.append(slot)
+            self.pos = self.pos.at[slot].set(0)
+            if len(toks) > 1:
+                self._prefill_at[slot] = 0
+            else:
+                self._ready(slot)
+
+    def _ready(self, slot: int) -> None:
+        """Prefill finished: the slot joins the decode batch."""
+        toks = self.slot_req[slot].prompt
+        self._prefill_at.pop(slot, None)
+        self.pos = self.pos.at[slot].set(len(toks) - 1)
+        self.last_tok = self.last_tok.at[slot].set(int(toks[-1]))
+        self.live[slot] = True
+
+    def _release(self, slot: int, *, done: bool) -> None:
+        req = self.slot_req[slot]
+        if done:
+            req.done = True
+            req.t_done = time.time()
+            self._folded.pop(id(req), None)
+            self._arrival.pop(id(req), None)
+        self.pool.free(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        # retarget the freed slot at the trash page so the batched decode
+        # step's unconditional write cannot touch reallocated pages
+        self.page_table = self.page_table.at[slot].set(0)
+        self.pos = self.pos.at[slot].set(0)
+        self.live[slot] = False
+        self.slot_req[slot] = None
+        self._prefill_at.pop(slot, None)
+        self._admit_order.remove(slot)
+
+    def _preempt(self, slot: int) -> None:
+        """Recompute-preemption: fold generated tokens into the prompt and
+        requeue at the front; greedy decoding reproduces the rest."""
+        req = self.slot_req[slot]
+        folded = self._folded.get(id(req), 0)
+        fresh = req.out[folded:]
+        if fresh:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(fresh, np.int32)])
+            self._folded[id(req)] = len(req.out)
+        self._release(slot, done=False)
+        self._queue.appendleft(req)
+        self.n_preempted += 1
+
+    def _make_room(self, need: int, protect: int) -> bool:
+        """Free pages by preempting requests that *arrived after* the
+        protected slot's request, newest arrival first — an older request
+        is never evicted for a younger one, so head-of-line requests
+        always finish even though re-admission rejoins the slot list.
+        Only slots actually holding pages are victims (a just-admitted
+        slot with none would be churned for nothing). True iff ``need``
+        pages are now available."""
+        while self.pool.free_pages < need:
+            mine = self._arrival[id(self.slot_req[protect])]
+            victims = [s for s in self._admit_order
+                       if s != protect and self.slot_pages[s]
+                       and self._arrival[id(self.slot_req[s])] > mine]
+            if not victims:
+                return False
+            self._preempt(max(
+                victims, key=lambda s: self._arrival[id(self.slot_req[s])]))
+        return True
+
+    def _grow_to(self, slot: int, n_tokens: int) -> bool:
+        """Ensure the slot's table covers logical positions [0, n_tokens)."""
+        need = PagePool.pages_for(n_tokens, self.page_size) \
+            - len(self.slot_pages[slot])
+        if need <= 0:
+            return True
+        if not self._make_room(need, protect=slot):
+            return False
+        pages = self.pool.alloc(need)
+        base = len(self.slot_pages[slot])
+        self.page_table = self.page_table.at[
+            slot, base:base + need].set(jnp.asarray(pages, jnp.int32))
+        self.slot_pages[slot].extend(pages)
+        return True
+
+    # ------------------------------------------------------------- tick
+
+    def _prefill_step(self) -> bool:
+        """Advance the oldest mid-prefill request by one fixed-size chunk."""
+        slot = next((s for s in self._admit_order
+                     if s in self._prefill_at), None)
+        if slot is None:
+            return False
+        req = self.slot_req[slot]
+        toks = req.prompt
+        n_pre = len(toks) - 1              # last token goes through decode
+        start = self._prefill_at[slot]
+        c = self.prefill_chunk
+        n_valid = min(c, n_pre - start)
+        if not self._grow_to(slot, start + n_valid):
+            return False                   # pool contended; retry next tick
+        chunk = np.zeros((1, c), np.int32)
+        chunk[0, :n_valid] = toks[start:start + n_valid]
+        _, self.cache = self._chunk(
+            self.params, self.cache, jnp.asarray(chunk),
+            jnp.int32(start), jnp.int32(n_valid), self.page_table[slot])
+        self._prefill_at[slot] = start + n_valid
+        if start + n_valid >= n_pre:
+            self._ready(slot)
+        return True
+
+    def _decode_tick(self, rng: Optional[jax.Array]) -> bool:
+        if not self.live.any():
+            return False
+        pos_np = np.asarray(self.pos)
+        # every live slot writes its new token this step: make sure the
+        # target page exists (preempting youngest-first under pressure)
+        for slot in np.flatnonzero(self.live):
+            slot = int(slot)
+            if not self.live[slot]:
+                continue                   # preempted by an earlier grow
+            if not self._grow_to(slot, int(pos_np[slot]) + 1):
+                # this slot's request is the newest arrival under memory
+                # pressure: vLLM's recompute policy preempts the requester
+                # itself rather than evicting an older request
+                self._preempt(slot)
+        if not self.live.any():
+            return False
+        # the batched step writes a token for *every* slot; non-live slots
+        # (idle, or mid-prefill with pages already mapped) must land in the
+        # trash page, not at position 0 of their freshly prefilled pages
+        pt = self.page_table * jnp.asarray(self.live, jnp.int32)[:, None]
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.last_tok, self.pos, pt)
+        self.pos = self.pos + jnp.asarray(self.live, jnp.int32)
+        nxt_np = np.asarray(sample_next(logits, greedy=self.greedy,
+                                        rng=rng, ticks=self.ticks))
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is None or not self.live[slot]:
+                continue
+            tok = int(nxt_np[slot])
+            req.out.append(tok)
+            finished = (len(req.out) >= req.max_new
+                        or (self.eos_id is not None and tok == self.eos_id)
+                        or int(pos_np[slot]) + 1 >= self.smax - 1)
+            if finished:
+                self._release(slot, done=True)
+            else:
+                self.last_tok = self.last_tok.at[slot].set(tok)
+        return True
+
+    def tick(self, rng: Optional[jax.Array] = None) -> None:
+        self._admit()
+        self._prefill_step()
+        self._decode_tick(rng)
+        self.ticks += 1
+
+    def run_until_done(self, max_ticks: int = 10_000,
+                       rng: Optional[jax.Array] = None) -> None:
+        for _ in range(max_ticks):
+            if not self._queue and not self._admit_order:
+                return
+            sub = None
+            if rng is not None:
+                rng, sub = jax.random.split(rng)
+            self.tick(sub)

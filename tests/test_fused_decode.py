@@ -221,6 +221,141 @@ def test_grouped_gather_matches_per_head_kernel():
                                        atol=2e-5)
 
 
+# ------------------------------------------------- window semantics
+
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("local_window,sliding_window", [
+    (16, 0), (0, 96), (16, 96)])
+def test_window_parity_across_backends(g, local_window, sliding_window):
+    """Regression: the block paths used to silently ignore
+    cfg.local_window and sliding_window that the token path honors. All
+    three implementations (block reference, fused kernel, two-kernel
+    fallback) must now agree with local_window/sliding_window set."""
+    b, hkv, s, dim, bs = 2, 2, 256, 64, 32
+    q, k, v = _setup(b, hkv, g, s, dim, seed=g + local_window)
+    proj = _orthogonal(hkv, dim, seed=g)
+    k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+    cur = jnp.array([s, 130], jnp.int32)
+    cfg = LokiConfig(enabled=True, d_f=0.25, k_f=0.25, block_size=bs,
+                     local_window=local_window)
+    want = loki_decode_block(q, k_hat, v, cur, proj, cfg,
+                             sliding_window=sliding_window,
+                             group_select=True)
+    want = want.reshape(b, hkv, g, dim)
+    nb = s // bs
+    kw = dict(d=max(int(cfg.d_f * dim), 8),
+              k_blocks=max(int(cfg.k_f * nb), 1), block_size=bs,
+              local_window=local_window, sliding_window=sliding_window,
+              interpret=True)
+    q_hat = _grouped_q(q, proj, hkv)
+    fused = fused_loki_decode(q_hat, k_hat, v, cur, **kw)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    two = loki_decode_two_kernel(q_hat, k_hat, v, cur, **kw)
+    np.testing.assert_allclose(np.asarray(two), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_block_full_budget_windows_match_token_path():
+    """At full budget (k_f=1: every block selected) the block path with
+    windows must equal the token-granular loki_decode — the semantic
+    anchor tying the block windows to the paper's formulation."""
+    from repro.core.loki import loki_decode
+    b, hkv, g, s, dim, bs = 2, 2, 2, 128, 64, 32
+    q, k, v = _setup(b, hkv, g, s, dim, seed=77)
+    proj = _orthogonal(hkv, dim, seed=77)
+    k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+    cur = jnp.array([s, 70], jnp.int32)
+    cfg = LokiConfig(enabled=True, d_f=1.0, k_f=1.0, min_k=1,
+                     block_size=bs, local_window=16)
+    want = loki_decode(q, k_hat, v, cur, proj, cfg, sliding_window=48)
+    got = loki_decode_block(q, k_hat, v, cur, proj, cfg, sliding_window=48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------- paged (page-table) mode
+
+def _paged_pool(k_hat, v, bs, ps, seed=0):
+    """Scatter contiguous (B,S,Hkv,D) caches into a shuffled page pool.
+
+    Returns (pool_k, pool_v, page_table) with page 0 left as trash."""
+    b, s, hkv, dim = k_hat.shape
+    mp = s // ps
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(b * mp) + 1              # physical pages, 1-based
+    table = perm.reshape(b, mp).astype(np.int32)
+    n_pages = b * mp + 1
+    pool_k = np.zeros((n_pages * ps, hkv, dim), np.asarray(k_hat).dtype)
+    pool_v = np.zeros_like(pool_k)
+    kn, vn = np.asarray(k_hat), np.asarray(v)
+    for i in range(b):
+        for p in range(mp):
+            rows = slice(table[i, p] * ps, table[i, p] * ps + ps)
+            pool_k[rows] = kn[i, p * ps:(p + 1) * ps]
+            pool_v[rows] = vn[i, p * ps:(p + 1) * ps]
+    return (jnp.asarray(pool_k), jnp.asarray(pool_v),
+            jnp.asarray(table))
+
+
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("bs,ps", [(32, 32), (16, 32), (32, 64)])
+def test_fused_paged_matches_contiguous(g, bs, ps):
+    """The paged kernel (block DMA through the page table) must reproduce
+    the contiguous kernel bit-for-bit on a shuffled pool, including ragged
+    lengths and windows."""
+    b, hkv, s, dim = 2, 2, 256, 64
+    q, k, v = _setup(b, hkv, g, s, dim, seed=g + bs)
+    proj = _orthogonal(hkv, dim, seed=bs)
+    k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+    cur = jnp.array([s, 100], jnp.int32)
+    pool_k, pool_v, table = _paged_pool(k_hat, v, bs, ps, seed=g)
+    q_hat = _grouped_q(q, proj, hkv)
+    kw = dict(d=16, k_blocks=3, block_size=bs, local_window=8,
+              interpret=True)
+    want = fused_loki_decode(q_hat, k_hat, v, cur, **kw)
+    got = fused_loki_decode(q_hat, pool_k, pool_v, cur,
+                            page_table=table, page_size=ps, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    two = loki_decode_two_kernel(q_hat, pool_k, pool_v, cur,
+                                 page_table=table, page_size=ps, **kw)
+    np.testing.assert_allclose(np.asarray(two), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_dispatch_paged_pallas_matches_oracle():
+    """End-to-end dispatch with a page table: backend='pallas' (paged
+    kernels) equals the group-shared jnp oracle gathering through the same
+    table, and backend='xla' through the table equals the dense-cache
+    reference (per-head selection)."""
+    b, hkv, g, s, dim, bs = 2, 2, 4, 256, 64, 32
+    q, k, v = _setup(b, hkv, g, s, dim, seed=91)
+    proj = _orthogonal(hkv, dim, seed=91)
+    k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+    cur = jnp.array([s, 77], jnp.int32)
+    pool_k, pool_v, table = _paged_pool(k_hat, v, bs, bs, seed=3)
+    cfg = LokiConfig(enabled=True, d_f=0.25, k_f=0.25, block_size=bs,
+                     local_window=16)
+    got = dispatch.loki_block_decode(
+        q, pool_k, pool_v, cur, proj,
+        dataclasses.replace(cfg, backend="pallas"),
+        page_table=table, page_size=bs)
+    want = loki_decode_block(q, pool_k, pool_v, cur, proj, cfg,
+                             group_select=True, page_table=table,
+                             page_size=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # xla dispatch through the table == dense-cache reference
+    via_table = dispatch.loki_block_decode(
+        q, pool_k, pool_v, cur, proj,
+        dataclasses.replace(cfg, backend="xla"),
+        page_table=table, page_size=bs)
+    dense = loki_decode_block(q, k_hat, v, cur, proj, cfg)
+    np.testing.assert_allclose(np.asarray(via_table), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ------------------------------------------------------------- dispatch
 
 def test_resolve_backend():

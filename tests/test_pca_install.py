@@ -39,6 +39,38 @@ def test_install_replaces_only_pca():
         np.asarray(params["layers"]["attn"]["wq"]))
 
 
+def test_install_casts_to_param_dtype_in_both_layouts():
+    """Regression: the per-layer (list) branch skipped the astype cast the
+    scan branch applies, so a non-f32 param tree came back with f32 pca
+    leaves. Both layouts must preserve the existing leaf dtype."""
+    params, cfg, calib = _calibrated_model()
+    hd = cfg.resolved_head_dim
+
+    # scan layout, downcast pca leaves
+    scan_params = dict(params)
+    layers = dict(params["layers"])
+    attn = dict(layers["attn"])
+    attn["pca"] = attn["pca"].astype(jnp.bfloat16)
+    layers["attn"] = attn
+    scan_params["layers"] = layers
+    out = PCA.install_projections(scan_params, calib, "pre")
+    assert out["layers"]["attn"]["pca"].dtype == jnp.bfloat16
+
+    # per-layer list layout (xlstm-style param trees)
+    list_params = dict(params)
+    list_params["layers"] = [
+        {"attn": {"pca": jnp.zeros((cfg.n_kv_heads, hd, hd), jnp.bfloat16),
+                  "wq": jnp.zeros((4, 4))}},
+        {"ssm": {"w": jnp.zeros((2, 2))}},        # non-attn layer untouched
+    ]
+    out = PCA.install_projections(list_params, calib, "pre")
+    assert out["layers"][0]["attn"]["pca"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out["layers"][0]["attn"]["pca"], np.float32),
+        np.asarray(calib.proj_pre[0], np.float32), rtol=1e-2, atol=1e-2)
+    assert "pca" not in out["layers"][1].get("attn", {})
+
+
 def test_lemma41_full_budget_loki_equals_full():
     params, cfg, calib = _calibrated_model()
     loki_params = PCA.install_projections(params, calib, "post")

@@ -1,17 +1,33 @@
-"""Serving engine: continuous batching, slot reuse, policy parity."""
+"""Serving engines: continuous batching, slot reuse, policy parity, the
+paged KV-cache + chunked-prefill scheduler, and its edge cases."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import lm
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.paged_cache import PagePool
+from repro.serving.scheduler import PagedServingEngine
 
 
 def _model():
     cfg = get_smoke_config("qwen2.5-3b")
     params = lm.init(jax.random.PRNGKey(0), cfg)
     return params, cfg
+
+
+def _sequential_dense(params, cfg, prompts, max_new, smax):
+    """Ground truth: each prompt served alone by the dense engine."""
+    outs = []
+    for p in prompts:
+        eng = ServingEngine(params, cfg, n_slots=1, smax=smax)
+        r = Request(rid=0, prompt=p.copy(), max_new=max_new)
+        eng.submit(r)
+        eng.run_until_done(500)
+        outs.append(r.out)
+    return outs
 
 
 def test_requests_complete_and_slots_recycle():
@@ -117,7 +133,7 @@ def test_late_admission_does_not_disturb_live_slot():
 
 
 def test_overlong_prompt_truncates_instead_of_crashing():
-    """A prompt longer than smax keeps the most recent smax tokens and still
+    """A prompt longer than smax keeps the most recent context and still
     serves, instead of aborting the batched step with a shape error."""
     params, cfg = _model()
     eng = ServingEngine(params, cfg, n_slots=1, smax=16)
@@ -126,3 +142,227 @@ def test_overlong_prompt_truncates_instead_of_crashing():
     eng.submit(req)
     eng.run_until_done(50)
     assert req.done and len(req.out) >= 1
+
+
+def test_overlong_prompt_still_generates_full_max_new():
+    """Regression: truncation to smax itself left pos at smax-1, so the
+    finish guard ended the request after ONE generated token. The fix
+    reserves max_new rows of headroom (for max_new <= smax//2)."""
+    params, cfg = _model()
+    for n_slots, engine_cls, kw in [
+            (1, ServingEngine, {}),
+            (1, PagedServingEngine, dict(page_size=8, prefill_chunk=4))]:
+        eng = engine_cls(params, cfg, n_slots=n_slots, smax=16, **kw)
+        req = Request(rid=0, prompt=(np.arange(40) * 3 + 1) % cfg.vocab,
+                      max_new=6)
+        eng.submit(req)
+        eng.run_until_done(100)
+        assert req.done, engine_cls.__name__
+        assert len(req.out) == 6, (engine_cls.__name__, req.out)
+
+
+def test_rng_threads_through_run_until_done():
+    """run_until_done(rng=...) must thread a *split* key per tick: the same
+    seed reproduces a sampled stream, different seeds diverge (before the
+    fix, rng was silently dropped and every tick reused PRNGKey(ticks))."""
+    params, cfg = _model()
+    prompt = (np.arange(6) * 5 + 1) % cfg.vocab
+
+    def sampled(seed):
+        eng = ServingEngine(params, cfg, n_slots=1, smax=64, greedy=False)
+        r = Request(rid=0, prompt=prompt.copy(), max_new=8)
+        eng.submit(r)
+        eng.run_until_done(100, rng=jax.random.PRNGKey(seed))
+        return r.out
+
+    assert sampled(0) == sampled(0)          # deterministic given the key
+    outs = {tuple(sampled(s)) for s in range(4)}
+    assert len(outs) > 1                     # keys actually influence draws
+
+
+# ===================================================================
+# Paged engine (serving/scheduler.py + serving/paged_cache.py)
+# ===================================================================
+
+
+def test_paged_matches_sequential_dense_at_2x_concurrency():
+    """Acceptance: 2x more concurrent requests than the dense engine's
+    n_slots, greedy outputs identical to serving each prompt alone."""
+    params, cfg = _model()
+    n_slots = 2
+    prompts = [(np.arange(5 + 3 * i) * 7 + i) % cfg.vocab
+               for i in range(2 * n_slots)]
+    truth = _sequential_dense(params, cfg, prompts, max_new=5, smax=64)
+    eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=64,
+                             page_size=16, prefill_chunk=4)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=5)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(500)
+    for r, t in zip(reqs, truth):
+        assert r.done and r.out == t, (r.rid, r.out, t)
+
+
+def test_paged_more_queued_requests_than_pages():
+    """A queue whose total footprint exceeds the pool drains via page
+    recycling: 8 requests over a pool that fits ~2."""
+    params, cfg = _model()
+    prompts = [(np.arange(6 + i) * 5 + i) % cfg.vocab for i in range(8)]
+    truth = _sequential_dense(params, cfg, prompts, max_new=4, smax=32)
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, n_pages=6)  # 5 usable pages
+    total_pages_needed = sum(
+        PagePool.pages_for(len(p) + 4, 8) for p in prompts)
+    assert total_pages_needed > eng.pool.n_pages - 1
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=4)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(1000)
+    for r, t in zip(reqs, truth):
+        assert r.done and r.out == t, (r.rid, r.out, t)
+
+
+def test_paged_preemption_reproduces_greedy_outputs():
+    """Memory pressure forces recompute-preemption mid-generation; the
+    re-admitted requests must reproduce the identical continuation."""
+    params, cfg = _model()
+    prompts = [(np.arange(9 + i) * 5 + i) % cfg.vocab for i in range(4)]
+    truth = _sequential_dense(params, cfg, prompts, max_new=14, smax=32)
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, n_pages=6)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=14)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(1000)
+    assert eng.n_preempted > 0               # pressure actually materialized
+    for r, t in zip(reqs, truth):
+        assert r.done and r.out == t, (r.rid, r.out, t)
+
+
+def test_paged_preemption_in_capacity_regime_keeps_context():
+    """Regression: re-admission after preemption used to re-truncate the
+    folded prompt when max_new > smax//2, making greedy output depend on
+    preemption timing. The folded context must survive intact."""
+    params, cfg = _model()
+    prompts = [(np.arange(16) * 3 + i) % cfg.vocab for i in range(3)]
+    truth = _sequential_dense(params, cfg, prompts, max_new=100, smax=32)
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=8, n_pages=6)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=100)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(2000)
+    assert eng.n_preempted > 0
+    for r, t in zip(reqs, truth):
+        assert r.done and r.out == t, (r.rid, r.out, t)
+
+
+def test_paged_eos_mid_stream_frees_pages():
+    """EOS mid-generation finishes the request early and returns its pages
+    to the pool."""
+    params, cfg = _model()
+    prompt = np.arange(6) % cfg.vocab
+    probe = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
+                               prefill_chunk=4)
+    r0 = Request(rid=0, prompt=prompt.copy(), max_new=1)
+    probe.submit(r0)
+    probe.run_until_done(100)
+    eos = r0.out[0]
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
+                             prefill_chunk=4, eos_id=eos)
+    req = Request(rid=1, prompt=prompt.copy(), max_new=50)
+    eng.submit(req)
+    eng.run_until_done(300)
+    assert req.done and req.out[-1] == eos and len(req.out) == 1
+    assert eng.pool.free_pages == eng.pool.n_pages - 1   # everything freed
+    assert not eng.live.any()
+
+
+def test_paged_request_outliving_its_pages_finishes_at_cap():
+    """A generation that would outgrow max_pages finishes gracefully at the
+    logical capacity instead of corrupting the pool or hanging."""
+    params, cfg = _model()
+    prompt = (np.arange(5) * 3 + 2) % cfg.vocab
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
+                             prefill_chunk=4)
+    req = Request(rid=0, prompt=prompt.copy(), max_new=1000)
+    eng.submit(req)
+    eng.run_until_done(500)
+    assert req.done
+    # prompt kept intact (reservation caps at smax//2), generation filled
+    # the remaining capacity (pos walks from len(prompt)-1 up to smax-1)
+    assert len(req.out) == 32 - len(prompt)
+    assert eng.pool.free_pages == eng.pool.n_pages - 1
+
+
+def test_chunked_prefill_matches_oneshot_logits():
+    """Driving a prompt through fixed-size prefill chunks reproduces the
+    one-shot prefill's last-token logits (the scheduler's admission path)."""
+    params, cfg = _model()
+    prompt = (np.arange(19) * 7 + 3) % cfg.vocab
+    toks = jnp.asarray(prompt[None].astype(np.int32))
+    lg_ref, _, _ = lm.prefill(params, cfg, toks, smax=32,
+                              cache_dtype=jnp.float32)
+
+    ps, n_pages = 8, 6
+    cache = lm.init_paged_cache(cfg, n_pages, ps, jnp.float32)
+    table = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    c = 4
+    lg = None
+    for start in range(0, len(prompt), c):
+        nv = min(c, len(prompt) - start)
+        chunk = np.zeros((1, c), np.int32)
+        chunk[0, :nv] = prompt[start:start + nv]
+        lg, cache = lm.prefill_chunk(params, cfg, cache,
+                                     jnp.asarray(chunk), jnp.int32(start),
+                                     jnp.int32(nv), table, ps)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_last_chunk_overhangs_logical_length():
+    """Regression: a padded final chunk whose window overhangs smax
+    (pos_start + prefill_chunk > smax) used to clamp the fresh-score
+    overwrite 'chunk' columns early, corrupting the prefix scores. The
+    overhanging pad columns must be dropped instead."""
+    params, cfg = _model()
+    prompt = (np.arange(26) * 3 + 5) % cfg.vocab     # 25 prefill tokens
+    truth = _sequential_dense(params, cfg, [prompt], max_new=4, smax=32)[0]
+    # chunk=12: chunks at 0, 12, 24 -> last window [24, 36) overhangs 32
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
+                             prefill_chunk=12)
+    req = Request(rid=0, prompt=prompt.copy(), max_new=4)
+    eng.submit(req)
+    eng.run_until_done(200)
+    assert req.done and req.out == truth, (req.out, truth)
+
+
+def test_paged_rejects_unpageable_policies():
+    params, cfg = _model()
+    with pytest.raises(ValueError, match="paged"):
+        PagedServingEngine(params, cfg.with_policy("h2o"), n_slots=1,
+                           smax=32)
+    with pytest.raises(ValueError, match="cannot hold"):
+        PagedServingEngine(params, cfg, n_slots=1, smax=64, page_size=8,
+                           n_pages=4)          # pool smaller than 1 request
+
+
+def test_page_pool_alloc_free_cycle():
+    pool = PagePool(6, 8)                      # page 0 reserved
+    assert pool.free_pages == 5
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    assert a is not None and b is not None
+    assert pool.alloc(1) is None               # exhausted, no partial grab
+    assert pool.free_pages == 0
+    pool.free(a)
+    assert pool.free_pages == 3
+    c = pool.alloc(3)
+    assert sorted(c) == sorted(a)              # recycled
+    assert PagePool.pages_for(0, 8) == 0
+    assert PagePool.pages_for(1, 8) == 1
+    assert PagePool.pages_for(17, 8) == 3
