@@ -18,6 +18,12 @@ relative to each other; the structural effects (no truncation, queue >
 n_slots drains, footprint ∝ live tokens) are platform-independent.
 
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke --family all
+
+``--family`` sweeps one tiny config per architecture family (dense, moe,
+hybrid, ssm, encdec, vlm) through the paged engine vs the dense engine —
+the CacheSpec registry's coverage claim as throughput rows (per-family
+``families`` section in the JSON, incl. window-recycled pages for SWA).
 
 Results land in ``BENCH_serving.json`` at the repo root.
 """
@@ -37,16 +43,37 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from benchmarks import common  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models import lm  # noqa: E402
 from repro.serving.engine import Request, ServingEngine  # noqa: E402
 from repro.serving.scheduler import PagedServingEngine  # noqa: E402
 
+# one tiny representative per family (the CacheSpec registry serves all)
+FAMILY_ARCHS = {
+    "dense": "qwen2.5-3b",
+    "moe": "mixtral-8x22b",
+    "hybrid": "hymba-1.5b",
+    "ssm": "xlstm-125m",
+    "encdec": "whisper-small",
+    "vlm": "llava-next-mistral-7b",
+}
 
-def _requests(data, n, max_new, base_len=16, stride=6, vocab=512):
+
+def _frames_for(cfg, i):
+    if not cfg.is_encoder_decoder:
+        return None
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(900 + i),
+                                        (cfg.enc_seq, cfg.d_model)),
+                      np.float32)
+
+
+def _requests(data, n, max_new, base_len=16, stride=6, vocab=512, cfg=None):
     reqs = []
     for i in range(n):
         toks = data.batch_at(4000 + i)["tokens"][0, : base_len + stride * (i % 5)]
-        reqs.append(Request(rid=i, prompt=np.asarray(toks, np.int32),
-                            max_new=max_new))
+        reqs.append(Request(rid=i, prompt=np.asarray(toks, np.int32) % vocab,
+                            max_new=max_new,
+                            frames=_frames_for(cfg, i) if cfg else None))
     return reqs
 
 
@@ -76,6 +103,42 @@ def _cache_bytes(cfg, rows):
     return 2 * cfg.n_layers * rows * cfg.n_kv_heads * hd * 4  # f32 K+V
 
 
+def family_sweep(families, *, n_slots, smax, page_size, chunk, max_new,
+                 n_req):
+    """One tiny config per family through paged + dense; per-family rows."""
+    rows = {}
+    for fam in families:
+        arch = FAMILY_ARCHS[fam]
+        cfg = get_smoke_config(arch)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        data = common.SyntheticLM(common.BENCH_DATA)
+
+        dense = ServingEngine(params, cfg, n_slots=n_slots, smax=smax)
+        r_dense = _drain(dense, _requests(data, n_req, max_new,
+                                          vocab=cfg.vocab, cfg=cfg))
+        paged = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                   page_size=page_size, prefill_chunk=chunk)
+        r_paged = _drain(paged, _requests(data, n_req, max_new,
+                                          vocab=cfg.vocab, cfg=cfg))
+        rows[fam] = {
+            "arch": arch,
+            "paged_tok_per_s": r_paged["tok_per_s"],
+            "dense_tok_per_s": r_dense["tok_per_s"],
+            "ticks": r_paged["ticks"],
+            "pool_pages": paged.pool.n_pages,
+            "page_budget_per_request": paged.req_budget,
+            "peak_slot_pages": paged.peak_slot_pages,
+            "recycled_pages": paged.n_recycled_pages,
+            "recycle_window": paged.window,
+            "preempted": paged.n_preempted,
+        }
+        print(f"[family {fam}] {arch}: paged {r_paged['tok_per_s']} tok/s "
+              f"(dense {r_dense['tok_per_s']}), "
+              f"budget {paged.req_budget} pages/req, "
+              f"recycled {paged.n_recycled_pages}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -86,6 +149,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0)
     ap.add_argument("--max-new", type=int, default=0)
     ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--family", default="",
+                    help="comma list of families (or 'all') to sweep one "
+                         "tiny config each through paged vs dense: "
+                         + ",".join(FAMILY_ARCHS))
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -139,6 +206,16 @@ def main():
         "paged": r_paged,
         "paged_tight_pool": r_tight,
     }
+    if args.family:
+        fams = (list(FAMILY_ARCHS) if args.family == "all"
+                else [f.strip() for f in args.family.split(",")])
+        unknown = [f for f in fams if f not in FAMILY_ARCHS]
+        if unknown:
+            raise SystemExit(f"unknown families {unknown}; "
+                             f"have {list(FAMILY_ARCHS)}")
+        report["families"] = family_sweep(
+            fams, n_slots=n_slots, smax=smax, page_size=page_size,
+            chunk=chunk, max_new=max_new, n_req=n_req)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))

@@ -113,6 +113,13 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
 
     nb = smax // plan.block_size
     k_blocks = max(int(cfg.k_f * nb), 1)
+    if sliding_window:
+        # a sliding window overlaps at most ceil(w/bs)+1 blocks; selection
+        # slots beyond that can only fill with -1 sentinels, so clamping
+        # trims dead attention-pass iterations (the kernel's score stream
+        # already skips blocks older than the window entirely)
+        k_blocks = min(k_blocks,
+                       -(-sliding_window // plan.block_size) + 1)
     qg = q_rope.reshape(b, n_kv, g, dim)
     q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
     cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))

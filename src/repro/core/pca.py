@@ -117,16 +117,17 @@ def calibrate(forward_capture, batches, n_layers: int, n_kv: int,
     return PCACalibration(p_pre, p_post, e_pre, e_post)
 
 
-def calibrate_model(params, cfg, token_batches) -> PCACalibration:
+def calibrate_model(params, cfg, token_batches, frames=None) -> PCACalibration:
     """Calibrate PCA transforms for an LM by capturing its keys over token
     batches (each (B,S) int32). The model-agnostic entry point examples and
-    benchmarks use."""
+    benchmarks use. ``frames``: encoder inputs for encoder-decoder models
+    (whisper), shared across batches."""
     from repro.models import lm
 
     @jax.jit
     def capture(tokens):
         _, _, (pre, post, _q) = lm.forward(params, tokens, cfg,
-                                           capture_keys=True)
+                                           frames=frames, capture_keys=True)
         return pre, post
 
     def fwd(tokens):

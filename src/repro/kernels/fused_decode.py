@@ -77,7 +77,18 @@ def _score_and_select(ln, q_hat, kd_src, kd_buf, scores, sem_kd,
         return pltpu.make_async_copy(kd_src(j), kd_buf.at[slot],
                                      sem_kd.at[slot])
 
-    kd_copy(0, 0).start()
+    if sliding_window:
+        # window decode only streams the live window's blocks: positions
+        # older than ln - sliding_window are masked out of selection anyway
+        # (and under window page recycling their pages point at trash), so
+        # their score DMAs are pure waste — start at the first block that
+        # overlaps the window. Blocks never selected are never DMA'd in the
+        # attention pass either, so a windowed decode touches
+        # ceil(window/bs)+1 blocks of HBM, not smax/bs.
+        lo = jnp.maximum(ln - sliding_window, 0) // bs
+    else:
+        lo = jnp.int32(0)
+    kd_copy(lo, jax.lax.rem(lo, 2)).start()
     scores[...] = jnp.full((1, nb_pad), NEG_INF, jnp.float32)
 
     def score_blk(j, carry):
@@ -103,7 +114,7 @@ def _score_and_select(ln, q_hat, kd_src, kd_buf, scores, sem_kd,
         scores[0, j] = jnp.max(s)
         return carry
 
-    jax.lax.fori_loop(0, nb, score_blk, 0)
+    jax.lax.fori_loop(lo, nb, score_blk, 0)
 
     lanes = jax.lax.broadcasted_iota(jnp.int32, (1, nb_pad), 1)
     for t in range(k_blocks):

@@ -9,11 +9,17 @@ transforms on the fly for Loki policies, and reports per-tick latency and
 throughput over a synthetic request stream.
 
 ``--engine paged`` (default) serves from the paged KV-cache with the
-chunked-prefill scheduler (serving/scheduler.py): memory scales with live
-tokens, queues longer than the pool drain via continuous batching, and
-long prompts are absorbed ``--prefill-chunk`` tokens per tick. Policies or
-families without a paged cache (h2o, pcaattn, ssm) fall back to the dense
-slot engine.
+chunked-prefill scheduler (serving/scheduler.py). The allowed set is
+derived from the per-layer CacheSpec registry (serving/cache_spec.py), so
+*every* family serves paged — hybrid (hymba) and ssm (xlstm) carry their
+recurrent state in per-slot StateSlots, whisper's encoder K/V is written
+once at admission, and mixtral's sliding-window layers recycle pages that
+slide out of the window. Only policies whose caches cannot rebuild exact
+prefix attention (h2o, pcaattn) fall back to the dense slot engine.
+
+``--dryrun`` prints the per-layer CacheSpec table for the chosen arch and
+policy (what state each layer holds, page budgets, recycle window) and
+exits without touching the accelerator.
 """
 from __future__ import annotations
 
@@ -30,9 +36,18 @@ from repro.core import pca as PCA
 from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
 from repro.models import lm
 from repro.optim import adamw
+from repro.serving import cache_spec as CS
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.scheduler import PAGED_POLICIES, PagedServingEngine
 from repro.training.step import TrainState, make_train_step
+
+
+def _frames(cfg, seed: int, batch: int = 1):
+    """Deterministic stand-in encoder frames (offline container: no audio
+    frontend; the conv stem is stubbed, see configs/whisper_small.py)."""
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (batch, cfg.enc_seq, cfg.d_model),
+                             jnp.float32)
 
 
 def main():
@@ -59,20 +74,41 @@ def main():
     ap.add_argument("--page-size", type=int, default=0,
                     help="tokens per KV page (0 = loki block_size)")
     ap.add_argument("--n-pages", type=int, default=0,
-                    help="page pool size (0 = fit all slots at smax)")
+                    help="page pool size (0 = fit all slots at their "
+                         "spec-table page bound)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens prefetched per tick (paged engine)")
     ap.add_argument("--warm-steps", type=int, default=60,
                     help="brief training so generation has signal")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="print the per-layer CacheSpec table and exit")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     if cfg.family == "ssm" and args.policy != "full":
         print(f"note: {args.arch} has no KV cache; policy forced to full")
         args.policy = "full"
+    if args.policy != "full":
+        cfg = cfg.with_policy(args.policy, k_f=args.k_f, d_f=args.d_f)
+
+    if args.dryrun:
+        ps = args.page_size or cfg.loki.block_size
+        print(CS.format_spec_table(cfg, args.smax, ps))
+        ok, why = CS.pageable(cfg)
+        print("engine: paged" if ok else f"engine: dense fallback — {why}")
+        print("paged-servable archs (default policy): "
+              + ", ".join(CS.servable_archs()))
+        return
+
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=96, global_batch=8, seed=7,
                       n_states=32, temperature=0.22)
     data = SyntheticLM(dcfg)
+
+    def batch_with_extras(i):
+        batch = jax_batch(data.batch_at(i))
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _frames(cfg, i, batch["tokens"].shape[0])
+        return batch
 
     params = lm.init(jax.random.PRNGKey(0), cfg)
     if args.warm_steps:
@@ -81,7 +117,7 @@ def main():
         state = TrainState(params, adamw.init_state(params))
         step = jax.jit(make_train_step(cfg, tcfg))
         for i in range(args.warm_steps):
-            state, m = step(state, jax_batch(data.batch_at(i)))
+            state, m = step(state, batch_with_extras(i))
         params = state.params
         print(f"warmed {args.warm_steps} steps, loss "
               f"{float(m['loss']):.3f}")
@@ -89,32 +125,35 @@ def main():
     if args.policy in ("loki", "loki_block", "pcaattn"):
         batches = [jnp.asarray(data.batch_at(1000 + i)["tokens"])
                    for i in range(2)]
-        calib = PCA.calibrate_model(params, cfg, batches)
+        frames = (_frames(cfg, 0, batches[0].shape[0])
+                  if cfg.is_encoder_decoder else None)
+        calib = PCA.calibrate_model(params, cfg, batches, frames=frames)
         params = PCA.install_projections(params, calib, "pre")
         print("PCA calibration installed")
-    if args.policy != "full":
-        cfg = cfg.with_policy(args.policy, k_f=args.k_f, d_f=args.d_f)
 
-    paged = (args.engine == "paged" and cfg.family in ("dense", "moe")
-             and cfg.attn_policy() in PAGED_POLICIES)
+    # allowed set from the CacheSpec registry, not a family allowlist
+    pageable, why = CS.pageable(cfg)
+    paged = args.engine == "paged" and pageable
     if args.engine == "paged" and not paged:
-        print(f"note: policy {cfg.attn_policy()!r} / family {cfg.family!r} "
-              "needs the dense engine; falling back")
+        print(f"note: {why}; falling back to the dense engine")
     if paged:
         eng = PagedServingEngine(
             params, cfg, n_slots=args.n_slots, smax=args.smax,
             page_size=args.page_size or None,
             n_pages=args.n_pages or None,
             prefill_chunk=args.prefill_chunk, backend=args.backend)
+        extra = (f" window={eng.window} (recycling)" if eng.window else "")
         print(f"paged engine: page_size={eng.page_size} "
               f"pool={eng.pool.n_pages} pages "
-              f"(max {eng.max_pages}/request)")
+              f"(budget {eng.req_budget}/request){extra}")
     else:
         eng = ServingEngine(params, cfg, n_slots=args.n_slots,
                             smax=args.smax, backend=args.backend)
     reqs = [Request(rid=i,
                     prompt=data.batch_at(4000 + i)["tokens"][0, :24 + 4 * i],
-                    max_new=args.max_new)
+                    max_new=args.max_new,
+                    frames=(np.asarray(_frames(cfg, 4000 + i)[0])
+                            if cfg.is_encoder_decoder else None))
             for i in range(args.requests)]
     for r in reqs:
         eng.submit(r)

@@ -531,18 +531,34 @@ def init_mamba(key, cfg: ModelConfig):
     }
 
 
-def _mamba_scan(p, xz, conv_state, ssm_state, cfg: ModelConfig):
+def _mamba_scan(p, xz, conv_state, ssm_state, cfg: ModelConfig,
+                n_valid=None):
     """Shared S6 recurrence. xz (B,S,2*d_in) from in_proj.
 
     conv_state (B,cw-1,d_in), ssm_state (B,d_in,N).
-    Returns (y (B,S,d_in->d projected later), states)."""
+    Returns (y (B,S,d_in->d projected later), states).
+
+    ``n_valid`` (traced scalar): positions at or past it are zero padding
+    (a fixed-size prefill chunk's tail). Their ``dt`` is forced to 0 so the
+    SSM state passes through unchanged (exp(0·A)=1, zero input), and the
+    carried conv window ends at the last *valid* token — running chunks
+    back-to-back reproduces the unchunked recurrence exactly."""
     s = cfg.ssm
     d_in = xz.shape[-1] // 2
     x, z = xz[..., :d_in], xz[..., d_in:]
     # causal depthwise conv with carried state
     cw = s.conv_width
     xpad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
-    new_conv = xpad[:, -(cw - 1):] if cw > 1 else conv_state
+    if cw <= 1:
+        new_conv = conv_state
+    elif n_valid is None:
+        new_conv = xpad[:, -(cw - 1):]
+    else:
+        # last cw-1 inputs *ending at the n_valid-th real token* (rows
+        # [n_valid, n_valid + cw - 1) of xpad; reaches back into the old
+        # conv state when the chunk has fewer than cw-1 valid tokens)
+        new_conv = jax.lax.dynamic_slice_in_dim(xpad, n_valid, cw - 1,
+                                                axis=1)
     conv = sum(xpad[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
                for i in range(cw))
     x = jax.nn.silu(conv)
@@ -552,6 +568,8 @@ def _mamba_scan(p, xz, conv_state, ssm_state, cfg: ModelConfig):
     dt = jax.nn.softplus(
         L.dot(proj[..., :dt_rank], p["dt_proj"].astype(x.dtype))
         + p["dt_bias"].astype(x.dtype))                        # (B,S,d_in)
+    if n_valid is not None:
+        dt = dt * (jnp.arange(x.shape[1]) < n_valid)[None, :, None]
     bmat = proj[..., dt_rank:dt_rank + s.state_dim]            # (B,S,N)
     cmat = proj[..., dt_rank + s.state_dim:]                   # (B,S,N)
     a = -jnp.exp(p["a_log"]).astype(jnp.float32)               # (d_in,N)
@@ -601,6 +619,20 @@ def mamba_decode(p, cache, x, cfg: ModelConfig):
     return y, {"conv": conv.astype(cache["conv"].dtype), "ssm": ssm}
 
 
+def mamba_prefill_chunk(p, state, x, n_valid, cfg: ModelConfig):
+    """One chunk of a chunked prefill through the S6 recurrence.
+
+    x (1,C,E) chunk hidden states, only the first ``n_valid`` real; state
+    is the slot's carried {conv, ssm}. Pad tokens leave the state untouched
+    (see ``_mamba_scan``), so consecutive chunks reproduce the one-shot
+    ``_mamba_prefill`` state exactly. Returns (y (1,C,E), new_state)."""
+    xz = L.dot(x, p["in_proj"].astype(x.dtype))
+    y, conv, ssm = _mamba_scan(p, xz, state["conv"], state["ssm"], cfg,
+                               n_valid=n_valid)
+    y = L.dot(y, p["out_proj"].astype(x.dtype))
+    return y, {"conv": conv.astype(state["conv"].dtype), "ssm": ssm}
+
+
 # =====================================================================
 # xLSTM blocks — mLSTM (chunkwise-parallel) and sLSTM (recurrent)
 # =====================================================================
@@ -624,13 +656,18 @@ def init_mlstm(key, cfg: ModelConfig):
 MLSTM_CHUNK = 256
 
 
-def mlstm_train(p, x, cfg: ModelConfig, *, return_state: bool = False):
+def mlstm_train(p, x, cfg: ModelConfig, *, return_state: bool = False,
+                initial_state=None, n_valid=None):
     """Chunkwise-parallel mLSTM (exponential-gated linear attention with
     matrix memory). O(S·c·d + S·d²/c) — sub-quadratic, the long_500k path.
 
     ``return_state``: also return the final (C, n, m) recurrent state — the
     scan's own carry — so prefill gets its cache for free instead of
-    re-scanning the whole prompt token-by-token (§Perf X2)."""
+    re-scanning the whole prompt token-by-token (§Perf X2).
+    ``initial_state``: resume the recurrence from a carried {C, n, m} (the
+    paged engine's chunked prefill). ``n_valid``: positions at or past it
+    are padding — their input gate is forced to -inf and forget gate to 0
+    (identity), so they contribute nothing to the carry."""
     b, s, d = x.shape
     nh = cfg.ssm.n_heads
     dh = d // nh
@@ -644,6 +681,10 @@ def mlstm_train(p, x, cfg: ModelConfig, *, return_state: bool = False):
                       preferred_element_type=jnp.float32) + p["b_if"]
     ig, fg = if_g[..., :nh], if_g[..., nh:]                 # (B,S,H)
     logf = jax.nn.log_sigmoid(fg)
+    if n_valid is not None:
+        vm = (jnp.arange(s) < n_valid)[None, :, None]
+        ig = jnp.where(vm, ig, -1e30)                       # i -> 0
+        logf = jnp.where(vm, logf, 0.0)                     # f -> 1
 
     c = min(MLSTM_CHUNK, s)
     if s % c:
@@ -698,9 +739,14 @@ def mlstm_train(p, x, cfg: ModelConfig, *, return_state: bool = False):
              + jnp.einsum("bsh,bshd->bhd", w_s, kk.astype(jnp.float32)))
         return (C, n, m_next), h
 
-    C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
-    n0 = jnp.zeros((b, nh, dh), jnp.float32)
-    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    if initial_state is not None:
+        C0 = initial_state["C"].astype(jnp.float32)
+        n0 = initial_state["n"].astype(jnp.float32)
+        m0 = initial_state["m"].astype(jnp.float32)
+    else:
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
     (C_f, n_f, m_f), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
                                        (qc, kc, vc, ic, fc))
     h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
@@ -783,7 +829,11 @@ def _slstm_cell(p, wx_t, state, nh, dh):
     return (c, n, h, m_new)
 
 
-def slstm_train(p, x, cfg: ModelConfig, *, return_state: bool = False):
+def slstm_train(p, x, cfg: ModelConfig, *, return_state: bool = False,
+                initial_state=None, n_valid=None):
+    """``initial_state``/``n_valid``: resume from a carried {c,n,h,m} and
+    skip state updates for pad positions (the paged engine's chunked
+    prefill) — the recurrence is stepwise, so masking is exact."""
     b, s, d = x.shape
     nh = cfg.ssm.n_heads
     dh = d // nh
@@ -795,15 +845,25 @@ def slstm_train(p, x, cfg: ModelConfig, *, return_state: bool = False):
     # activations across the model axis ONCE, outside the scan; the cell is
     # then collective-free and the model axis idles through this (tiny) op.
     wx = constrain(wx, ("batch", "seq", None))
-    zeros = jnp.zeros((b, d), jnp.float32)
-    state0 = (zeros, zeros, zeros, jnp.full((b, d), -1e30))
+    if initial_state is not None:
+        state0 = (initial_state["c"].astype(jnp.float32),
+                  initial_state["n"].astype(jnp.float32),
+                  initial_state["h"].astype(jnp.float32),
+                  initial_state["m"].astype(jnp.float32))
+    else:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state0 = (zeros, zeros, zeros, jnp.full((b, d), -1e30))
     state0 = jax.tree.map(lambda a: constrain(a, ("batch", None)), state0)
+    valid = (jnp.arange(s) < n_valid) if n_valid is not None \
+        else jnp.ones((s,), bool)
 
-    def step(st, wx_t):
-        st = _slstm_cell(p, wx_t, st, nh, dh)
+    def step(st, inp):
+        wx_t, ok = inp
+        new = _slstm_cell(p, wx_t, st, nh, dh)
+        st = jax.tree.map(lambda nw, od: jnp.where(ok, nw, od), new, st)
         return st, st[2]
 
-    st_f, hs = jax.lax.scan(step, state0, jnp.moveaxis(wx, 1, 0))
+    st_f, hs = jax.lax.scan(step, state0, (jnp.moveaxis(wx, 1, 0), valid))
     h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
     y = L.dot(h, p["w_out"].astype(x.dtype))
     if return_state:

@@ -32,13 +32,18 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import blocks as B
 from repro.models import layers as L
+from repro.serving import cache_spec as CS
+# canonical layer-kind logic lives in the CacheSpec registry so the spec
+# table and the model assembly can never disagree; re-exported here for the
+# rest of the codebase (engine.py etc. call lm.uses_scan)
+from repro.serving.cache_spec import layer_kind, uses_scan
 from repro.sharding.rules import constrain
 
 
 # --------------------------------------------------------------- init
 
 def _is_slstm(cfg: ModelConfig, i: int) -> bool:
-    return bool(cfg.slstm_every) and (i % cfg.slstm_every == cfg.slstm_every - 1)
+    return CS.is_slstm(cfg, i)
 
 
 def init_layer(key, cfg: ModelConfig, kind: str):
@@ -70,22 +75,6 @@ def init_layer(key, cfg: ModelConfig, kind: str):
         p["ln_x"] = L.init_norm(cfg)
         p["xattn"] = B.init_attention(ks[3], cfg)
     return p
-
-
-def layer_kind(cfg: ModelConfig, i: int) -> str:
-    if cfg.family == "ssm":
-        return "slstm" if _is_slstm(cfg, i) else "mlstm"
-    if cfg.family == "moe":
-        return "moe"
-    if cfg.family == "hybrid":
-        return "hybrid"
-    if cfg.is_encoder_decoder:
-        return "dec"
-    return "dense"
-
-
-def uses_scan(cfg: ModelConfig) -> bool:
-    return cfg.family != "ssm"          # xlstm layers are heterogeneous
 
 
 def init(key, cfg: ModelConfig):
@@ -291,35 +280,67 @@ def init_cache(cfg: ModelConfig, batch: int, smax: int,
 
 
 def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                     dtype=jnp.float32) -> Dict[str, Any]:
-    """Stacked (L, ...) *pooled* decode cache: attention K/V live in one
-    shared page pool of (n_pages * page_size) rows with no batch dim —
-    requests map logical positions to pool rows through per-slot page
-    tables (serving/paged_cache.py). Total memory scales with the page
-    budget, not n_slots × smax."""
-    if not uses_scan(cfg) or cfg.family not in ("dense", "moe"):
-        raise ValueError("paged caches support scan attention families "
-                         f"(dense/moe); {cfg.family!r} has per-slot "
-                         "recurrent state — use the dense engine")
-    if cfg.attn_policy() in ("h2o", "pcaattn"):
-        # h2o keeps its own budgeted cache structure; pcaattn stores lossy
-        # d-dim keys, which cannot rebuild the exact prefix attention that
-        # chunked prefill needs — both serve through the dense engine
-        raise ValueError(f"{cfg.attn_policy()!r} cannot serve from a paged "
-                         "cache; use the dense engine")
-    hd = cfg.resolved_head_dim
+                     dtype=jnp.float32, n_slots: int = 1) -> Dict[str, Any]:
+    """Spec-driven paged decode cache for *every* family.
+
+    Each layer's components come from the CacheSpec registry
+    (serving/cache_spec.py):
+
+      PagedAttn / WindowPagedAttn -> shared page pool (n_pages * page_size,
+          Hkv, D) per layer, no batch dim; requests map logical positions
+          to pool rows through per-slot page tables.
+      StateSlot -> per-slot recurrent state (n_slots, ...) carried across
+          prefill chunks / decode steps; O(1) in request length.
+      CrossAttnStatic -> per-slot encoder K/V (n_slots, enc_seq, Hkv, D)
+          written once at admission.
+
+    Pool memory scales with the page budget, not n_slots × smax."""
+    CS.assert_pageable(cfg)
+    specs = CS.layer_specs(cfg)
     r = n_pages * page_size
-    layer = {"attn": {"k": jnp.zeros((r, cfg.n_kv_heads, hd), dtype),
-                      "v": jnp.zeros((r, cfg.n_kv_heads, hd), dtype)}}
-    return {"layers": jax.tree.map(
-        lambda a: jnp.broadcast_to(
-            a, (cfg.n_layers,) + a.shape).copy(), layer)}
+
+    def one(spec: CS.LayerSpec) -> Dict[str, Any]:
+        c: Dict[str, Any] = {}
+        for name, comp in spec.components:
+            if isinstance(comp, (CS.PagedAttn, CS.WindowPagedAttn)):
+                c["attn"] = {
+                    "k": jnp.zeros((r, comp.n_kv_heads, comp.head_dim),
+                                   dtype),
+                    "v": jnp.zeros((r, comp.n_kv_heads, comp.head_dim),
+                                   dtype)}
+            elif isinstance(comp, CS.StateSlot):
+                c["ssm"] = CS.state_slot_init(cfg, comp, n_slots, dtype)
+            elif isinstance(comp, CS.CrossAttnStatic):
+                c["cross_k"] = jnp.zeros(
+                    (n_slots, comp.enc_seq, comp.n_kv_heads,
+                     comp.head_dim), dtype)
+                c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+
+    if uses_scan(cfg):
+        layer = one(specs[0])
+        return {"layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (cfg.n_layers,) + a.shape).copy(), layer)}
+    return {"layers": [one(s) for s in specs]}
 
 
 # --------------------------------------------------------------- decode
 
 def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
-                  page_table=None, page_size: int = 0):
+                  page_table=None, page_size: int = 0, live=None):
+    def keep_live(new, old):
+        """StateSlot protection for the batched paged tick: slots that are
+        idle or mid-prefill must not have their carried recurrent state
+        advanced by the unconditional batched decode (their K/V writes
+        already land in the trash page; state has no trash row)."""
+        if live is None:
+            return new
+        return jax.tree.map(
+            lambda nw, od: jnp.where(
+                live.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, od),
+            new, old)
+
     if kind in ("dense", "moe", "hybrid", "dec"):
         h = L.norm_apply(p["ln1"], x)
         a, new_attn = B.attn_decode(p["attn"], c["attn"], h, pos_len, cfg,
@@ -329,7 +350,7 @@ def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
         c["attn"] = new_attn
         if kind == "hybrid":
             s, new_ssm = B.mamba_decode(p["ssm"], c["ssm"], h, cfg)
-            c["ssm"] = new_ssm
+            c["ssm"] = keep_live(new_ssm, c["ssm"])
             a = 0.5 * (L.norm_apply(p["ln_ssm"], a) +
                        L.norm_apply(p["ln_ssm"], s))
         x = x + a
@@ -350,7 +371,7 @@ def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
         fn = B.mlstm_decode if kind == "mlstm" else B.slstm_decode
         y, new_ssm = fn(p["ssm"], c["ssm"], h, cfg)
         c = dict(c)
-        c["ssm"] = new_ssm
+        c["ssm"] = keep_live(new_ssm, c["ssm"])
         x = x + y
         h = L.norm_apply(p["ln2"], x)
         x = x + L.mlp_apply(p["mlp"], h, cfg)
@@ -381,12 +402,15 @@ def _cache_unbits(tree, dtypes):
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
-                page_table=None, page_size: int = 0):
+                page_table=None, page_size: int = 0, live=None):
     """One generation step. token (B,) int32; pos_len (B,) tokens cached.
 
     Returns (logits (B,V), new_cache). With ``page_table (B, max_pages)``/
     ``page_size`` the cache is the pooled layout of ``init_paged_cache``
-    and every layer's attention reads/writes resolve through the table."""
+    and every layer's attention reads/writes resolve through the table.
+    ``live (B,)`` bool: slots marked dead keep their StateSlot components
+    (recurrent state / cross K/V are per-slot, with no trash row to divert
+    writes to)."""
     x = L.embed_apply(params["embed"], token[:, None], cfg)[:, 0]
     if not cfg.rope and cfg.family != "ssm":
         # sinusoidal decoders: add position encoding for the current slot
@@ -401,7 +425,8 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
             p, cbits = pc
             c = _cache_unbits(cbits, dtypes)
             x, c = _layer_decode(p, c, x, pos_len, cfg, kind,
-                                 page_table=page_table, page_size=page_size)
+                                 page_table=page_table, page_size=page_size,
+                                 live=live)
             return x, _cache_bits(c)
 
         x, new_bits = jax.lax.scan(
@@ -414,7 +439,7 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
             x_cur, c = _layer_decode(params["layers"][i], cache["layers"][i],
                                      x_cur, pos_len, cfg, layer_kind(cfg, i),
                                      page_table=page_table,
-                                     page_size=page_size)
+                                     page_size=page_size, live=live)
             new_list.append(c)
         x = x_cur
         new_cache = {"layers": new_list}
@@ -510,55 +535,123 @@ def prefill(params, cfg: ModelConfig, tokens, smax: int, *, frames=None,
 
 
 def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
-                  n_valid, page_table, page_size: int):
-    """One step of a paged, chunked prefill for a single request.
+                  n_valid, page_table, page_size: int, *, slot=None):
+    """One step of a paged, chunked prefill for a single request — driven
+    by the CacheSpec table, so every family serves through it.
 
     tokens (1, C) — a fixed-size chunk whose first ``n_valid`` entries are
     real prompt tokens at logical positions ``pos_start .. pos_start+C-1``
-    (the rest is zero padding, written to the trash page). The chunk's K/V
-    are scattered through ``page_table`` ((1, max_pages) or (max_pages,))
-    into the shared pool ``cache``; attention runs causally over the
-    cached prefix plus the chunk, so running consecutive chunks over a
-    prompt reproduces the one-shot ``prefill`` (tested logit parity in
-    tests/test_serving.py).
+    (the rest is zero padding, written to the trash page). Per component:
+
+      PagedAttn/WindowPagedAttn — the chunk's K/V scatter through
+          ``page_table`` ((1, max_pages) or (max_pages,)) into the shared
+          pool; attention runs causally over the cached prefix plus the
+          chunk (blocks.attn_prefill_chunk, exact via Lemma 4.1).
+      StateSlot — the slot's recurrent state (mamba / mLSTM / sLSTM) is
+          carried across chunks: pad tokens leave it untouched, so chunked
+          prefill reproduces the one-shot recurrence exactly.
+      CrossAttnStatic — read-only (written at admission); the chunk's
+          cross-attention queries attend the slot's full encoder K/V.
 
     Returns (logits (1, V) for token ``n_valid - 1`` of the chunk,
-    new_cache). ``pos_start``/``n_valid`` are traced scalars — one trace
-    serves every chunk of every request."""
-    if not uses_scan(cfg) or cfg.family not in ("dense", "moe"):
-        raise ValueError("chunked prefill supports scan attention families "
-                         "(dense/moe)")
-    kind = layer_kind(cfg, 0)
+    new_cache). ``pos_start``/``n_valid``/``slot`` are traced scalars —
+    one trace serves every chunk of every request in any slot."""
+    CS.assert_pageable(cfg)
     table_row = page_table[0] if page_table.ndim == 2 else page_table
+    slot = jnp.int32(0) if slot is None else jnp.asarray(slot, jnp.int32)
     b, c = tokens.shape
     x = L.embed_apply(params["embed"], tokens, cfg)
     positions = pos_start + jnp.arange(c)
-    if not cfg.rope:
+    if (not cfg.rope or cfg.is_encoder_decoder) and cfg.family != "ssm":
         x = x + _sinusoidal_at(positions, cfg.d_model)[None].astype(x.dtype)
 
-    def body(x, pc):
-        p, cc = pc
-        h = L.norm_apply(p["ln1"], x)
-        a, new_attn = B.attn_prefill_chunk(p["attn"], cc["attn"], h,
-                                           pos_start, n_valid, cfg,
-                                           table_row=table_row,
-                                           page_size=page_size)
-        cc = dict(cc)
-        cc["attn"] = new_attn
-        x = x + a
-        h = L.norm_apply(p["ln2"], x)
-        if kind == "moe":
-            y, _ = B.moe_apply(p["moe"], h, cfg)
-        else:
-            y = L.mlp_apply(p["mlp"], h, cfg)
-        return x + y, cc
+    def slot_take(a):
+        return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)
 
-    x, new_layers = jax.lax.scan(body, x, (params["layers"],
-                                           cache["layers"]))
+    def slot_put(full, one):
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=0)
+
+    if uses_scan(cfg):
+        kind = layer_kind(cfg, 0)
+
+        def body(x, pc):
+            p, cc = pc
+            cc = dict(cc)
+            h = L.norm_apply(p["ln1"], x)
+            a, new_attn = B.attn_prefill_chunk(p["attn"], cc["attn"], h,
+                                               pos_start, n_valid, cfg,
+                                               table_row=table_row,
+                                               page_size=page_size)
+            cc["attn"] = new_attn
+            if kind == "hybrid":
+                st = jax.tree.map(slot_take, cc["ssm"])
+                sy, new_st = B.mamba_prefill_chunk(p["ssm"], st, h,
+                                                   n_valid, cfg)
+                cc["ssm"] = jax.tree.map(slot_put, cc["ssm"], new_st)
+                a = 0.5 * (L.norm_apply(p["ln_ssm"], a) +
+                           L.norm_apply(p["ln_ssm"], sy))
+            x = x + a
+            if kind == "dec" and cfg.is_encoder_decoder:
+                ek = slot_take(cc["cross_k"]).astype(x.dtype)
+                ev = slot_take(cc["cross_v"]).astype(x.dtype)
+                hx = L.norm_apply(p["ln_x"], x)
+                q, _, _ = B._qkv(p["xattn"], hx, cfg)
+                from repro.core.attention import cross_attention
+                o = cross_attention(q, ek, ev)
+                x = x + L.dot(o.reshape(b, c, cfg.q_dim),
+                              p["xattn"]["wo"].astype(x.dtype))
+            h = L.norm_apply(p["ln2"], x)
+            if kind == "moe":
+                y, _ = B.moe_apply(p["moe"], h, cfg)
+            else:
+                y = L.mlp_apply(p["mlp"], h, cfg)
+            return x + y, cc
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"],
+                                               cache["layers"]))
+        new_cache = {"layers": new_layers}
+    else:
+        # ssm family (xlstm): no pages at all — the chunk runs the
+        # recurrences from the slot's carried state, masking pad tokens
+        new_list = []
+        for i in range(cfg.n_layers):
+            kind = layer_kind(cfg, i)
+            p = params["layers"][i]
+            cc = dict(cache["layers"][i])
+            st = jax.tree.map(slot_take, cc["ssm"])
+            h = L.norm_apply(p["ln1"], x)
+            fn = B.mlstm_train if kind == "mlstm" else B.slstm_train
+            y, new_st = fn(p["ssm"], h, cfg, return_state=True,
+                           initial_state=st, n_valid=n_valid)
+            cc["ssm"] = jax.tree.map(slot_put, cc["ssm"], new_st)
+            new_list.append(cc)
+            x = x + y
+            h2 = L.norm_apply(p["ln2"], x)
+            x = x + L.mlp_apply(p["mlp"], h2, cfg)
+        new_cache = {"layers": new_list}
+
     x_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
     x_last = L.norm_apply(params["final_norm"], x_last)
     logits = L.unembed_apply(params["embed"], x_last, cfg)[:, 0]
-    return logits, {"layers": new_layers}
+    return logits, new_cache
+
+
+def encode_cross_kv(params, cfg: ModelConfig, frames):
+    """Encoder K/V for every decoder layer (the CrossAttnStatic component).
+
+    Runs the encoder once over ``frames (B, enc_seq, d_model)`` and
+    projects the hidden states with each decoder layer's cross-attention
+    weights. Returns (k, v), each (L, B, enc_seq, Hkv, D) — written into a
+    request's slot once at admission by the paged engine."""
+    enc_x = _encode(params, frames, cfg)
+
+    def body(carry, p):
+        k, v = _enc_kv(p, enc_x, cfg)
+        return carry, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, 0, params["layers"])
+    return ks, vs
 
 
 def _mamba_prefill(p, x, cfg):

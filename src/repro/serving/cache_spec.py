@@ -1,0 +1,339 @@
+"""Per-layer CacheSpec registry: the declarative table that drives paged
+serving for **every** model family.
+
+PR 3's paged engine hard-coded the dense/moe scan families: one pooled K/V
+array per layer, one shared page table per slot, and ``if kind in (...)``
+chains in ``lm.init_paged_cache`` / ``lm.prefill_chunk`` that raised for
+anything with recurrent or encoder state. This module replaces those chains
+with a spec table: each layer *declares* its decode-state components and
+their lifecycle, and the cache plumbing (models/lm.py) plus the scheduler
+(serving/scheduler.py) are driven by the table instead of by family names.
+
+Component kinds:
+
+  PagedAttn        growable page-table K/V. Rows live in the shared page
+                   pool ((n_pages * page_size, Hkv, D) per layer, no batch
+                   dim); a request holds ceil(len/page_size) pages.
+  WindowPagedAttn  PagedAttn with a sliding-window attention mask: only the
+                   last ``window`` positions are ever attendable, so pages
+                   that slide fully out of the window are *recycled* —
+                   freed back to the pool and their table entries pointed
+                   at the trash page (reads of recycled rows are garbage
+                   but masked, exactly like the dense cache's dead rows).
+                   A request holds at most ceil(window/page_size)+1 pages.
+  StateSlot        fixed-size recurrent state (mamba conv/ssm, mLSTM C/n/m,
+                   sLSTM c/n/h/m) carried per *slot* across prefill chunks
+                   and decode steps. Not pooled — the state of a request is
+                   O(1) in its length. Preemption is recompute: the state
+                   is reset at (re-)admission and rebuilt exactly by the
+                   masked chunked prefill (blocks.mamba_prefill_chunk etc.),
+                   so the greedy continuation is preserved.
+  CrossAttnStatic  whisper-style encoder K/V, written once at admission
+                   (lm.encode_cross_kv) and read-only afterwards.
+
+The registry is pure config -> spec: jax arrays are only built by the
+explicit ``state_slot_init``/``fresh_state_tree``/``reset_slot_state``
+helpers both engines share. ``layer_kind``/``uses_scan`` are
+canonical here (models/lm.py re-exports them) so the spec table and the
+model assembly can never disagree about what a layer is.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# policies whose caches cannot rebuild exact prefix attention (h2o keeps its
+# own budgeted structure; pcaattn stores lossy d-dim keys) — they serve
+# through the dense engine only
+UNPAGEABLE_POLICIES = ("h2o", "pcaattn")
+
+
+# ------------------------------------------------------------ layer kinds
+
+def is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return bool(cfg.slstm_every) and (i % cfg.slstm_every
+                                      == cfg.slstm_every - 1)
+
+
+def layer_kind(cfg: ModelConfig, i: int) -> str:
+    """dense|moe|hybrid|mlstm|slstm|dec — what block layer ``i`` is."""
+    if cfg.family == "ssm":
+        return "slstm" if is_slstm(cfg, i) else "mlstm"
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.is_encoder_decoder:
+        return "dec"
+    return "dense"
+
+
+def uses_scan(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"          # xlstm layers are heterogeneous
+
+
+# ------------------------------------------------------------- components
+
+@dataclasses.dataclass(frozen=True)
+class PagedAttn:
+    """Growable page-table K/V in the shared pool."""
+    n_kv_heads: int
+    head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowPagedAttn:
+    """Paged K/V whose attendable suffix is bounded: pages that slide out
+    of the window are recycled (bounded page budget per request)."""
+    n_kv_heads: int
+    head_dim: int
+    window: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSlot:
+    """Fixed-size per-slot recurrent state; ``state`` names the blocks
+    cache builder (mamba|mlstm|slstm) that defines its pytree."""
+    state: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossAttnStatic:
+    """Encoder K/V written once at admission, read-only afterwards."""
+    enc_seq: int
+    n_kv_heads: int
+    head_dim: int
+
+
+Component = Union[PagedAttn, WindowPagedAttn, StateSlot, CrossAttnStatic]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer's decode-state declaration: named components, in the cache
+    dict's key order ('attn' -> pooled K/V, 'ssm' -> StateSlot pytree,
+    'cross' -> cross_k/cross_v arrays)."""
+    kind: str
+    components: Tuple[Tuple[str, Component], ...]
+
+    def component(self, name: str):
+        return dict(self.components).get(name)
+
+    @property
+    def attn(self):
+        c = self.component("attn")
+        return c if isinstance(c, (PagedAttn, WindowPagedAttn)) else None
+
+    @property
+    def state(self):
+        c = self.component("ssm")
+        return c if isinstance(c, StateSlot) else None
+
+    @property
+    def cross(self):
+        c = self.component("cross")
+        return c if isinstance(c, CrossAttnStatic) else None
+
+
+# --------------------------------------------------------------- registry
+
+def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
+    """The spec table: one LayerSpec per decoder layer."""
+    hd = cfg.resolved_head_dim
+    attn: Component
+    if cfg.sliding_window:
+        attn = WindowPagedAttn(cfg.n_kv_heads, hd, cfg.sliding_window)
+    else:
+        attn = PagedAttn(cfg.n_kv_heads, hd)
+
+    def one(i: int) -> LayerSpec:
+        kind = layer_kind(cfg, i)
+        comps = []
+        if kind in ("dense", "moe", "hybrid", "dec"):
+            comps.append(("attn", attn))
+        if kind == "hybrid":
+            comps.append(("ssm", StateSlot("mamba")))
+        if kind == "mlstm":
+            comps.append(("ssm", StateSlot("mlstm")))
+        if kind == "slstm":
+            comps.append(("ssm", StateSlot("slstm")))
+        if kind == "dec" and cfg.is_encoder_decoder:
+            comps.append(("cross", CrossAttnStatic(cfg.enc_seq,
+                                                   cfg.n_kv_heads, hd)))
+        return LayerSpec(kind, tuple(comps))
+
+    return tuple(one(i) for i in range(cfg.n_layers))
+
+
+def has_paged_attn(cfg: ModelConfig) -> bool:
+    return any(s.attn is not None for s in layer_specs(cfg))
+
+
+def has_state_slots(cfg: ModelConfig) -> bool:
+    return any(s.state is not None for s in layer_specs(cfg))
+
+
+def pageable(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Can this config serve from the paged engine? (ok, reason)."""
+    if has_paged_attn(cfg) and cfg.attn_policy() in UNPAGEABLE_POLICIES:
+        return False, (f"policy {cfg.attn_policy()!r} cannot rebuild exact "
+                       "prefix attention from its cache; use the dense "
+                       "engine")
+    return True, ""
+
+
+def assert_pageable(cfg: ModelConfig) -> None:
+    ok, reason = pageable(cfg)
+    if not ok:
+        raise ValueError(f"{cfg.arch}: {reason} (paged serving)")
+
+
+def servable_archs() -> Tuple[str, ...]:
+    """Archs whose (default-policy) config the paged engine serves — the
+    allowed set launch/serve.py derives instead of hard-coding families."""
+    from repro.configs import ARCHS, get_smoke_config
+    return tuple(a for a in ARCHS if pageable(get_smoke_config(a))[0])
+
+
+# ---------------------------------------------------------------- budgets
+
+def window_page_budget(window: int, page_size: int) -> int:
+    """Max live pages a window layer needs: the window spans at most
+    ceil(window/page_size) pages plus the page being written."""
+    return -(-window // page_size) + 1
+
+
+def recycle_window(cfg: ModelConfig) -> int:
+    """The window the engine may recycle pages against, or 0.
+
+    One page table is shared by every layer of a slot, so recycling a page
+    is only sound if *every* attention layer's mask has moved past it —
+    i.e. all attn layers are windowed; the effective recycle window is the
+    widest per-layer window."""
+    windows = []
+    for s in layer_specs(cfg):
+        if isinstance(s.attn, WindowPagedAttn):
+            windows.append(s.attn.window)
+        elif s.attn is not None:
+            return 0                      # a full-attention layer pins pages
+    return max(windows) if windows else 0
+
+
+def request_page_budget(cfg: ModelConfig, smax: int, page_size: int) -> int:
+    """Max pages one request can hold at once under the spec table."""
+    if not has_paged_attn(cfg):
+        return 0
+    max_pages = -(-smax // page_size)
+    w = recycle_window(cfg)
+    if w:
+        return min(max_pages, window_page_budget(w, page_size))
+    return max_pages
+
+
+# ------------------------------------------------------------- state init
+
+def state_slot_init(cfg: ModelConfig, comp: StateSlot, batch: int,
+                    dtype) -> Dict[str, Any]:
+    """Fresh state pytree for ``batch`` slots of a StateSlot component."""
+    from repro.models import blocks as B
+    if comp.state == "mamba":
+        return B.init_mamba_cache(cfg, batch, dtype)
+    if comp.state == "mlstm":
+        return B.init_mlstm_cache(cfg, batch)
+    if comp.state == "slstm":
+        return B.init_slstm_cache(cfg, batch)
+    raise ValueError(f"unknown StateSlot kind {comp.state!r}")
+
+
+def fresh_state_tree(cfg: ModelConfig, dtype, *, include_cross: bool = True):
+    """Batch-1 init values for every StateSlot (and optionally
+    CrossAttnStatic) leaf, shaped to DUS straight into one slot of a decode
+    cache — shared by both engines' slot-reset paths. None if the model has
+    no such components (attention-only families need no reset: rows past a
+    slot's position are unreachable)."""
+    specs = layer_specs(cfg)
+
+    def one(spec: LayerSpec) -> Dict[str, Any]:
+        c: Dict[str, Any] = {}
+        if spec.state is not None:
+            c["ssm"] = state_slot_init(cfg, spec.state, 1, dtype)
+        if include_cross and spec.cross is not None:
+            x = spec.cross
+            c["cross_k"] = jnp.zeros(
+                (1, x.enc_seq, x.n_kv_heads, x.head_dim), dtype)
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+
+    if uses_scan(cfg):
+        layer = one(specs[0])
+        if not layer:
+            return None
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (cfg.n_layers,) + a.shape).copy(), layer)
+    layers = [one(s) for s in specs]
+    return layers if any(layers) else None
+
+
+def reset_slot_state(layers, fresh, slot, scan: bool):
+    """Overwrite one slot's state leaves in a cache's ``layers`` tree with
+    ``fresh`` init values (from ``fresh_state_tree``); other leaves are
+    shared by reference. ``slot`` may be a traced scalar."""
+    def dus(full, one, axis):
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=axis)
+
+    if scan:
+        sub = {k: layers[k] for k in fresh}
+        sub = jax.tree.map(lambda f, o: dus(f, o, 1), sub, fresh)
+        return {**layers, **sub}
+    out = []
+    for lc, fr in zip(layers, fresh):
+        sub = {k: lc[k] for k in fr}
+        sub = jax.tree.map(lambda f, o: dus(f, o, 0), sub, fr)
+        out.append({**lc, **sub})
+    return out
+
+
+# ------------------------------------------------------------ spec table
+
+def _fmt_component(name: str, comp: Component, smax: int,
+                   page_size: int) -> str:
+    if isinstance(comp, WindowPagedAttn):
+        return (f"{name}=WindowPagedAttn(window={comp.window}, "
+                f"<= {window_page_budget(comp.window, page_size)} pages)")
+    if isinstance(comp, PagedAttn):
+        return f"{name}=PagedAttn(<= {-(-smax // page_size)} pages)"
+    if isinstance(comp, StateSlot):
+        return f"{name}=StateSlot({comp.state})"
+    if isinstance(comp, CrossAttnStatic):
+        return (f"{name}=CrossAttnStatic(enc_seq={comp.enc_seq}, "
+                "written at admission)")
+    return f"{name}={comp!r}"
+
+
+def format_spec_table(cfg: ModelConfig, smax: int, page_size: int) -> str:
+    """Human-readable per-layer spec table (printed by serve.py --dryrun).
+    Consecutive identical layers are folded into one row."""
+    specs = layer_specs(cfg)
+    rows = []
+    start = 0
+    for i in range(1, len(specs) + 1):
+        if i == len(specs) or specs[i] != specs[start]:
+            s = specs[start]
+            comps = " ".join(_fmt_component(n, c, smax, page_size)
+                             for n, c in s.components) or "(stateless)"
+            span = (f"{start}" if i - 1 == start else f"{start}-{i - 1}")
+            rows.append(f"  layer {span:>7}  {s.kind:<7} {comps}")
+            start = i
+    budget = request_page_budget(cfg, smax, page_size)
+    head = (f"CacheSpec[{cfg.arch}] smax={smax} page_size={page_size} "
+            f"budget={budget} pages/request"
+            + (f" recycle_window={recycle_window(cfg)}"
+               if recycle_window(cfg) else ""))
+    return "\n".join([head] + rows)

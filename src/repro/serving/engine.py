@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.serving import cache_spec as CS
 
 
 @dataclasses.dataclass
@@ -33,6 +34,9 @@ class Request:
     done: bool = False
     t_submit: float = 0.0         # set by submit(); for latency reporting
     t_done: float = 0.0           # set when the request finishes
+    # encoder-decoder (whisper): precomputed frame embeddings (enc_seq,
+    # d_model); the engine runs the encoder once at admission
+    frames: Optional[np.ndarray] = None
 
 
 def context_cap(smax: int, gen_tokens: int) -> int:
@@ -67,6 +71,13 @@ class ServingEngine:
         self.n_slots, self.smax = n_slots, smax
         self.eos_id, self.greedy = eos_id, greedy
         self.cache = lm.init_cache(cfg, n_slots, smax, jnp.float32)
+        # recurrent-state families only: batch-1 init values so an
+        # admission that skips prefill (1-token prompt) can reset its
+        # slot's state — a previous occupant's mamba/xlstm state must not
+        # leak into the new request. Attention-only families need nothing:
+        # stale K/V rows beyond the slot's position are unreachable.
+        self._fresh_state = CS.fresh_state_tree(cfg, jnp.float32,
+                                                include_cross=False)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.live = np.zeros((n_slots,), bool)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -76,8 +87,8 @@ class ServingEngine:
         # admission-path prefill, compiled; jit's cache retraces only per
         # distinct prompt length
         self._prefill = jax.jit(
-            lambda p, t: lm.prefill(p, cfg, t, smax,
-                                    cache_dtype=jnp.float32))
+            lambda p, t, fr: lm.prefill(p, cfg, t, smax, frames=fr,
+                                        cache_dtype=jnp.float32))
         self._queue: List[Request] = []
         self.ticks = 0
 
@@ -110,18 +121,40 @@ class ServingEngine:
         if len(toks) > cap:
             toks = toks[-cap:]
         self.pos = self.pos.at[slot].set(0)
+        fr = None
+        if self.cfg.is_encoder_decoder:
+            if req.frames is None:
+                raise ValueError("encoder-decoder serving needs "
+                                 "Request.frames (enc_seq, d_model)")
+            fr = jnp.asarray(req.frames)[None]
         if len(toks) > 1:
             _, filled, _ = self._prefill(self.params,
-                                         jnp.asarray(toks[None, :-1]))
-            axis = 1 if lm.uses_scan(self.cfg) else 0  # skip the layer axis
-            self.cache = jax.tree.map(
-                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                    full, one.astype(full.dtype), slot, axis=axis),
-                self.cache, filled)
+                                         jnp.asarray(toks[None, :-1]), fr)
+            self._write_slot(slot, filled)
             self.pos = self.pos.at[slot].set(len(toks) - 1)
+        elif self.cfg.is_encoder_decoder:
+            # 1-token prompt: nothing to cache, but the slot still needs
+            # its cross K/V — prefill the single token and keep pos=0 (the
+            # decode step rewrites the same cache row with identical
+            # values, so the continuation is unchanged)
+            _, filled, _ = self._prefill(self.params, jnp.asarray(toks[None]),
+                                         fr)
+            self._write_slot(slot, filled)
+        elif self._fresh_state is not None:
+            self.cache = {"layers": CS.reset_slot_state(
+                self.cache["layers"], self._fresh_state, slot,
+                lm.uses_scan(self.cfg))}
         self.last_tok = self.last_tok.at[slot].set(int(toks[-1]))
         self.slot_req[slot] = req
         self.live[slot] = True
+
+    def _write_slot(self, slot: int, one) -> None:
+        """Overwrite one slot's cache slice with a (batch-1) cache tree."""
+        axis = 1 if lm.uses_scan(self.cfg) else 0      # skip the layer axis
+        self.cache = jax.tree.map(
+            lambda full, single: jax.lax.dynamic_update_slice_in_dim(
+                full, single.astype(full.dtype), slot, axis=axis),
+            self.cache, one)
 
     # ------------------------------------------------------------- tick
 

@@ -140,8 +140,19 @@ class PagePool:
         return taken
 
     def free(self, pages: List[int]) -> None:
+        """Return pages to the free list.
+
+        Raises (rather than asserts, so ``python -O`` keeps the guard) on a
+        double-free or an attempt to free the reserved trash page — the
+        failure mode window-recycling bookkeeping would hit if a recycled
+        page were freed again at release/preemption."""
+        seen = set()
         for p in pages:
-            assert p != TRASH_PAGE and p not in self._free
+            if p == TRASH_PAGE:
+                raise ValueError("free() of the reserved trash page")
+            if p in self._free or p in seen:
+                raise ValueError(f"double-free of page {p}")
+            seen.add(p)
         self._free.extend(pages)
 
     @staticmethod

@@ -9,20 +9,39 @@ shared page pool of serving/paged_cache.py and a scheduler that interleaves
   * **batched decode** — one ``lm.decode_step`` over every live slot, with
     per-slot positions and page tables keeping ragged batches exact.
 
-Pages are allocated on demand (a request holds ``ceil(len/page_size)``
-pages) and freed the moment a request finishes. Under memory pressure the
-scheduler *preempts* the latest-arriving request (vLLM's recompute
-policy — an older request is never evicted for a younger one): its pages
-are freed and it is requeued at the front with its generated tokens folded
-into the prompt, so greedy decoding reproduces the identical continuation
-after re-admission. ``n_pages - 1 >= max_pages`` is enforced at
-construction, so a lone request can always run to its length cap and
+What a slot *holds* is declared by the per-layer CacheSpec table
+(serving/cache_spec.py), so every family in configs/ serves here:
+
+  PagedAttn        pages allocated on demand (ceil(len/page_size) held),
+                   freed the moment the request finishes.
+  WindowPagedAttn  (mixtral SWA) pages that slide fully out of the
+                   attention window are *recycled*: freed back to the pool
+                   and their table entries pointed at the trash page, so a
+                   window layer holds at most ceil(window/page_size)+1
+                   pages instead of ceil(smax/page_size). Recycling runs
+                   before growth each tick, so the bound holds at every
+                   instant of the decode phase.
+  StateSlot        (hymba mamba, xlstm m/s-LSTM) per-slot recurrent state,
+                   reset at admission and carried across prefill chunks;
+                   the batched decode masks state updates of non-live
+                   slots (mid-prefill or idle) via ``live``.
+  CrossAttnStatic  (whisper) encoder K/V computed once at admission from
+                   ``Request.frames`` and written into the slot.
+
+Under memory pressure the scheduler *preempts* the latest-arriving request
+(vLLM's recompute policy — an older request is never evicted for a younger
+one): its pages are freed and it is requeued at the front with its
+generated tokens folded into the prompt. StateSlot layers are handled by
+recompute — state is reset at re-admission and rebuilt exactly by the
+masked chunked prefill — so greedy decoding reproduces the identical
+continuation. ``n_pages - 1 >= `` the per-request page bound is enforced
+at construction, so a lone request can always run to its length cap and
 preemption cannot livelock.
 
 Decode numerics are the dense engine's: the jnp policies read the gathered
 logical view (bit-compatible with a dense cache of the same logical
 length), the ``loki_block`` Pallas path indexes the pool directly through
-the page table (DESIGN.md §7).
+the page table (DESIGN.md §7, §8).
 """
 from __future__ import annotations
 
@@ -37,22 +56,28 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.serving import cache_spec as CS
 from repro.serving.engine import Request, context_cap, sample_next
 from repro.serving.paged_cache import PagePool
 
 PAGED_POLICIES = ("full", "exact_topk", "loki", "loki_block")
 
 
+def _dus(full, one, slot, axis):
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, one.astype(full.dtype), slot, axis=axis)
+
+
 class PagedServingEngine:
-    """Continuous-batching engine over a paged KV-cache.
+    """Continuous-batching engine over a paged KV-cache (all families).
 
     n_slots        decode batch width (concurrent *running* requests)
     smax           logical context cap per request (rounded up to pages)
     page_size      tokens per page; defaults to ``cfg.loki.block_size`` so
                    pages coincide with the fused kernel's DMA blocks
     n_pages        physical pool size incl. the reserved trash page;
-                   defaults to fitting every slot at full length (pass less
-                   to exercise allocation pressure / preemption)
+                   defaults to fitting every slot at its spec-table page
+                   bound (pass less to exercise pressure / preemption)
     prefill_chunk  prompt tokens processed per tick (fixed-size, padded)
     """
 
@@ -64,7 +89,12 @@ class PagedServingEngine:
         if backend is not None:
             cfg = cfg.replace(
                 loki=dataclasses.replace(cfg.loki, backend=backend))
-        if cfg.attn_policy() not in PAGED_POLICIES:
+        CS.assert_pageable(cfg)
+        self.specs = CS.layer_specs(cfg)
+        self.has_pages = CS.has_paged_attn(cfg)
+        self.has_state = CS.has_state_slots(cfg)
+        self.is_encdec = cfg.is_encoder_decoder
+        if self.has_pages and cfg.attn_policy() not in PAGED_POLICIES:
             raise ValueError(
                 f"policy {cfg.attn_policy()!r} cannot serve from a paged "
                 f"cache (supported: {PAGED_POLICIES}); use ServingEngine")
@@ -72,25 +102,47 @@ class PagedServingEngine:
         self.page_size = page_size or cfg.loki.block_size
         self.max_pages = -(-smax // self.page_size)
         self.smax = self.max_pages * self.page_size      # logical cap
-        if n_pages is None:
-            n_pages = 1 + n_slots * self.max_pages       # +1: trash page
-        if n_pages - 1 < self.max_pages:
-            raise ValueError(
-                f"pool of {n_pages} pages cannot hold one full request "
-                f"({self.max_pages} pages); raise n_pages or lower smax")
         self.n_slots = n_slots
         self.prefill_chunk = prefill_chunk
         self.eos_id, self.greedy = eos_id, greedy
 
+        # page accounting from the spec table: ``req_budget`` is the
+        # decode-phase bound per request (= ceil(window/ps)+1 for SWA
+        # models, else max_pages); ``_req_pages_hard`` additionally covers
+        # a mid-prefill chunk, whose pages can't be recycled until the
+        # chunk's earliest query has moved past them
+        self.window = CS.recycle_window(cfg)
+        self.req_budget = CS.request_page_budget(cfg, self.smax,
+                                                 self.page_size)
+        if self.window:
+            self._req_pages_hard = min(
+                self.max_pages,
+                CS.window_page_budget(self.window + self.prefill_chunk - 1,
+                                      self.page_size))
+        else:
+            self._req_pages_hard = self.req_budget
+        if n_pages is None:
+            n_pages = 1 + max(n_slots * self._req_pages_hard, 1)
+        if self.has_pages and n_pages - 1 < self._req_pages_hard:
+            raise ValueError(
+                f"pool of {n_pages} pages cannot hold one full request "
+                f"({self._req_pages_hard} pages); raise n_pages or lower "
+                "smax")
+
         self.pool = PagePool(n_pages, self.page_size)
         self.cache = lm.init_paged_cache(cfg, n_pages, self.page_size,
-                                         jnp.float32)
+                                         jnp.float32, n_slots=n_slots)
+        self._fresh_state = CS.fresh_state_tree(cfg, jnp.float32)
         self.page_table = jnp.zeros((n_slots, self.max_pages), jnp.int32)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.last_tok = jnp.zeros((n_slots,), jnp.int32)
         self.live = np.zeros((n_slots,), bool)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        # logical page index -> physical page id, or None once recycled
+        # (window slide); ``len`` is the logical coverage, the number of
+        # non-None entries is what the slot actually holds
+        self.slot_pages: List[List[Optional[int]]] = [
+            [] for _ in range(n_slots)]
         # slots mid-prefill: slot -> index of the next prompt token to feed
         self._prefill_at: Dict[int, int] = {}
         # admission order, oldest first — preemption victims come from the
@@ -108,18 +160,49 @@ class PagedServingEngine:
         self._arrival_seq = 0
         self.ticks = 0
         self.n_preempted = 0
+        self.n_recycled_pages = 0
+        self.peak_slot_pages = 0       # max pages any slot held at once
 
         ps = self.page_size
         self._decode = jax.jit(
-            lambda p, c, t, pl, pt: lm.decode_step(
-                p, cfg, c, t, pl, page_table=pt, page_size=ps))
+            lambda p, c, t, pl, pt, lv: lm.decode_step(
+                p, cfg, c, t, pl, page_table=pt, page_size=ps, live=lv))
         self._chunk = jax.jit(
-            lambda p, c, toks, start, nv, row: lm.prefill_chunk(
-                p, cfg, c, toks, start, nv, row, ps))
+            lambda p, c, toks, start, nv, row, sl: lm.prefill_chunk(
+                p, cfg, c, toks, start, nv, row, ps, slot=sl))
+        if self.is_encdec:
+            self._encode_cross = jax.jit(
+                lambda p, fr: lm.encode_cross_kv(p, cfg, fr))
+
+    # --------------------------------------------------- per-slot state
+
+    def _reset_slot_state(self, slot: int) -> None:
+        """(Re-)admission: zero the slot's recurrent state so a previous
+        occupant cannot leak into this request — preemption recovery is
+        recompute, and recompute must start from the fresh state."""
+        if self._fresh_state is None:
+            return
+        self.cache = {"layers": CS.reset_slot_state(
+            self.cache["layers"], self._fresh_state, slot,
+            lm.uses_scan(self.cfg))}
+
+    def _install_cross(self, slot: int, frames: np.ndarray) -> None:
+        """CrossAttnStatic lifecycle: run the encoder once at admission and
+        write this request's cross K/V into its slot."""
+        ck, cv = self._encode_cross(self.params,
+                                    jnp.asarray(frames)[None])
+        layers = self.cache["layers"]
+        self.cache = {"layers": {
+            **layers,
+            "cross_k": _dus(layers["cross_k"], ck, slot, 1),
+            "cross_v": _dus(layers["cross_v"], cv, slot, 1)}}
 
     # ------------------------------------------------------------ admin
 
     def submit(self, req: Request) -> None:
+        if self.is_encdec and req.frames is None:
+            raise ValueError("encoder-decoder serving needs Request.frames "
+                             "(enc_seq, d_model)")
         req.t_submit = time.time()
         self._arrival[id(req)] = self._arrival_seq
         self._arrival_seq += 1
@@ -147,6 +230,9 @@ class PagedServingEngine:
             self.slot_pages[slot] = []
             self._admit_order.append(slot)
             self.pos = self.pos.at[slot].set(0)
+            self._reset_slot_state(slot)
+            if self.is_encdec:
+                self._install_cross(slot, req.frames)
             if len(toks) > 1:
                 self._prefill_at[slot] = 0
             else:
@@ -167,7 +253,10 @@ class PagedServingEngine:
             req.t_done = time.time()
             self._folded.pop(id(req), None)
             self._arrival.pop(id(req), None)
-        self.pool.free(self.slot_pages[slot])
+        # recycled (None) entries were freed the moment they slid out of
+        # the window — freeing them again here would double-free (PagePool
+        # raises); only the pages the slot still holds go back
+        self.pool.free([p for p in self.slot_pages[slot] if p is not None])
         self.slot_pages[slot] = []
         # retarget the freed slot at the trash page so the batched decode
         # step's unconditional write cannot touch reallocated pages
@@ -180,7 +269,9 @@ class PagedServingEngine:
 
     def _preempt(self, slot: int) -> None:
         """Recompute-preemption: fold generated tokens into the prompt and
-        requeue at the front; greedy decoding reproduces the rest."""
+        requeue at the front; greedy decoding reproduces the rest (the
+        slot's StateSlot components are reset at re-admission and rebuilt
+        by the masked chunked prefill)."""
         req = self.slot_req[slot]
         folded = self._folded.get(id(req), 0)
         fresh = req.out[folded:]
@@ -203,7 +294,8 @@ class PagedServingEngine:
         while self.pool.free_pages < need:
             mine = self._arrival[id(self.slot_req[protect])]
             victims = [s for s in self._admit_order
-                       if s != protect and self.slot_pages[s]
+                       if s != protect
+                       and any(p is not None for p in self.slot_pages[s])
                        and self._arrival[id(self.slot_req[s])] > mine]
             if not victims:
                 return False
@@ -213,6 +305,8 @@ class PagedServingEngine:
 
     def _grow_to(self, slot: int, n_tokens: int) -> bool:
         """Ensure the slot's table covers logical positions [0, n_tokens)."""
+        if not self.has_pages:
+            return True                    # StateSlot-only model (xlstm)
         need = PagePool.pages_for(n_tokens, self.page_size) \
             - len(self.slot_pages[slot])
         if need <= 0:
@@ -224,7 +318,34 @@ class PagedServingEngine:
         self.page_table = self.page_table.at[
             slot, base:base + need].set(jnp.asarray(pages, jnp.int32))
         self.slot_pages[slot].extend(pages)
+        self.peak_slot_pages = max(
+            self.peak_slot_pages,
+            sum(p is not None for p in self.slot_pages[slot]))
         return True
+
+    def _recycle_window(self, slot: int, next_q: int) -> None:
+        """WindowPagedAttn lifecycle: pages every future query's window has
+        slid past are dead — free them and point their table entries at the
+        trash page (reads of recycled rows are masked by the sliding-window
+        mask exactly like the dense cache's dead rows). ``next_q`` is the
+        earliest position any future query of this slot can have; it
+        attends kv >= next_q - window + 1."""
+        if not self.window:
+            return
+        first_live = max(0, next_q - self.window + 1) // self.page_size
+        pages = self.slot_pages[slot]
+        freed = [p for p in pages[:first_live] if p is not None]
+        if not freed:
+            return
+        pages[:first_live] = [None] * min(first_live, len(pages))
+        self.pool.free(freed)
+        self.n_recycled_pages += len(freed)
+        self.page_table = self.page_table.at[slot, :first_live].set(0)
+        live = sum(p is not None for p in pages)
+        if live > self._req_pages_hard:
+            raise RuntimeError(
+                f"slot {slot} holds {live} pages after recycling, above "
+                f"the spec-table bound {self._req_pages_hard}")
 
     # ------------------------------------------------------------- tick
 
@@ -240,13 +361,18 @@ class PagedServingEngine:
         start = self._prefill_at[slot]
         c = self.prefill_chunk
         n_valid = min(c, n_pre - start)
+        # recycle before growing: the chunk's earliest query is at
+        # ``start``, so pages its window has passed free up first and the
+        # per-request bound holds at every instant
+        self._recycle_window(slot, start)
         if not self._grow_to(slot, start + n_valid):
             return False                   # pool contended; retry next tick
         chunk = np.zeros((1, c), np.int32)
         chunk[0, :n_valid] = toks[start:start + n_valid]
         _, self.cache = self._chunk(
             self.params, self.cache, jnp.asarray(chunk),
-            jnp.int32(start), jnp.int32(n_valid), self.page_table[slot])
+            jnp.int32(start), jnp.int32(n_valid), self.page_table[slot],
+            jnp.int32(slot))
         self._prefill_at[slot] = start + n_valid
         if start + n_valid >= n_pre:
             self._ready(slot)
@@ -257,11 +383,14 @@ class PagedServingEngine:
             return False
         pos_np = np.asarray(self.pos)
         # every live slot writes its new token this step: make sure the
-        # target page exists (preempting youngest-first under pressure)
+        # target page exists (preempting youngest-first under pressure),
+        # recycling window-dead pages first so SWA slots stay within their
+        # spec-table page bound
         for slot in np.flatnonzero(self.live):
             slot = int(slot)
             if not self.live[slot]:
                 continue                   # preempted by an earlier grow
+            self._recycle_window(slot, int(pos_np[slot]))
             if not self._grow_to(slot, int(pos_np[slot]) + 1):
                 # this slot's request is the newest arrival under memory
                 # pressure: vLLM's recompute policy preempts the requester
@@ -271,11 +400,14 @@ class PagedServingEngine:
             return False
         # the batched step writes a token for *every* slot; non-live slots
         # (idle, or mid-prefill with pages already mapped) must land in the
-        # trash page, not at position 0 of their freshly prefilled pages
-        pt = self.page_table * jnp.asarray(self.live, jnp.int32)[:, None]
+        # trash page, not at position 0 of their freshly prefilled pages —
+        # and their StateSlot components must not advance (``live`` mask)
+        live_dev = jnp.asarray(self.live)
+        pt = self.page_table * live_dev.astype(jnp.int32)[:, None]
         logits, self.cache = self._decode(
-            self.params, self.cache, self.last_tok, self.pos, pt)
-        self.pos = self.pos + jnp.asarray(self.live, jnp.int32)
+            self.params, self.cache, self.last_tok, self.pos, pt,
+            live_dev if self.has_state else None)
+        self.pos = self.pos + live_dev.astype(jnp.int32)
         nxt_np = np.asarray(sample_next(logits, greedy=self.greedy,
                                         rng=rng, ticks=self.ticks))
         for slot in range(self.n_slots):
