@@ -25,7 +25,16 @@ hybrid, ssm, encdec, vlm) through the paged engine vs the dense engine —
 the CacheSpec registry's coverage claim as throughput rows (per-family
 ``families`` section in the JSON, incl. window-recycled pages for SWA).
 
-Results land in ``BENCH_serving.json`` at the repo root.
+``--workload shared-prefix`` drives N requests over one long shared
+system prompt with the prefix cache on vs off: prefix hit rate, prefill
+tokens computed/saved, TTFT p50/p99 and tok/s (greedy outputs are
+asserted identical — caching is exact, the win is skipped prefill):
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke \\
+        --workload shared-prefix
+
+Results land in ``BENCH_serving.json`` at the repo root (the shared-prefix
+rows merge into the existing report).
 """
 from __future__ import annotations
 
@@ -86,14 +95,17 @@ def _drain(eng, reqs):
     assert all(r.done for r in reqs), "engine failed to drain the queue"
     toks = sum(len(r.out) for r in reqs)
     lats = sorted(r.t_done - r.t_submit for r in reqs)
-    p = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]
+    ttfts = sorted(r.t_first - r.t_submit for r in reqs if r.t_first)
+    p = lambda xs, q: xs[min(int(q * len(xs)), len(xs) - 1)]
     return {
         "requests": len(reqs),
         "generated_tokens": toks,
         "wall_s": round(dt, 3),
         "tok_per_s": round(toks / max(dt, 1e-9), 2),
-        "latency_p50_s": round(p(0.50), 3),
-        "latency_p99_s": round(p(0.99), 3),
+        "latency_p50_s": round(p(lats, 0.50), 3),
+        "latency_p99_s": round(p(lats, 0.99), 3),
+        "ttft_p50_s": round(p(ttfts, 0.50), 3) if ttfts else None,
+        "ttft_p99_s": round(p(ttfts, 0.99), 3) if ttfts else None,
         "ticks": eng.ticks,
     }
 
@@ -139,6 +151,71 @@ def family_sweep(families, *, n_slots, smax, page_size, chunk, max_new,
     return rows
 
 
+def shared_prefix_workload(params, cfg, data, *, n_slots, smax, page_size,
+                           chunk, max_new, n_req):
+    """N requests over one long shared system prompt + short unique tails
+    — the prefix-caching acceptance workload. Drives the identical stream
+    through the paged engine with the cache on and off and reports the
+    prefix hit rate, prefill tokens computed, TTFT p50/p99 and tok/s.
+    Greedy outputs must agree token for token (exactness is asserted, not
+    just measured)."""
+    sys_len = max(2 * page_size + page_size // 2, smax // 2)
+    sys_prompt = np.asarray(data.batch_at(7000)["tokens"][0], np.int32)
+    sys_prompt = np.tile(sys_prompt, -(-sys_len // len(sys_prompt)))
+    sys_prompt = sys_prompt[:sys_len]
+
+    def reqs():
+        out = []
+        for i in range(n_req):
+            tail = np.asarray(
+                data.batch_at(7100 + i)["tokens"][0, : 4 + i % 5], np.int32)
+            out.append(Request(rid=i,
+                               prompt=np.concatenate([sys_prompt, tail]),
+                               max_new=max_new))
+        return out
+
+    rows = {}
+    outs = {}
+    for mode in ("off", "on"):
+        eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                 page_size=page_size, prefill_chunk=chunk,
+                                 prefix_cache=mode == "on")
+        rs = reqs()
+        row = _drain(eng, rs)
+        row["prefill_tokens_computed"] = eng.n_prefill_computed_tokens
+        row["prefix_hit_tokens"] = eng.n_prefix_hit_tokens
+        row["prefix_hit_rate"] = round(eng.prefix_hit_rate(), 3)
+        row["cow_copies"] = eng.n_cow_copies
+        row["evicted_pages"] = eng.pool.n_evicted
+        rows[f"cache_{mode}"] = row
+        outs[mode] = [r.out for r in rs]
+    assert outs["on"] == outs["off"], \
+        "prefix caching changed greedy outputs"
+    on, off = rows["cache_on"], rows["cache_off"]
+    assert on["prefix_hit_tokens"] > 0, "shared prefix never hit the cache"
+    assert on["prefill_tokens_computed"] < off["prefill_tokens_computed"]
+    rows["prefill_tokens_saved"] = (off["prefill_tokens_computed"]
+                                    - on["prefill_tokens_computed"])
+    print(f"[shared-prefix] hit rate {on['prefix_hit_rate']}, "
+          f"prefill {on['prefill_tokens_computed']} vs "
+          f"{off['prefill_tokens_computed']} tokens, "
+          f"ttft p50 {on['ttft_p50_s']}s vs {off['ttft_p50_s']}s")
+    return rows
+
+
+def _write_merged(path, update):
+    """Update the report in place: each invocation owns its sections
+    (standard / families / shared_prefix) and must not erase the others'."""
+    report = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            report = json.load(f)
+    report.update(update)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -153,6 +230,11 @@ def main():
                     help="comma list of families (or 'all') to sweep one "
                          "tiny config each through paged vs dense: "
                          + ",".join(FAMILY_ARCHS))
+    ap.add_argument("--workload", default="standard",
+                    choices=["standard", "shared-prefix"],
+                    help="shared-prefix: N requests over one long system "
+                         "prompt, prefix cache on vs off (hit rate, TTFT, "
+                         "tok/s; merged into the existing JSON report)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -173,6 +255,15 @@ def main():
 
     params, cfg = common.trained_params()
     data = common.SyntheticLM(common.BENCH_DATA)
+
+    if args.workload == "shared-prefix":
+        rows = shared_prefix_workload(
+            params, cfg, data, n_slots=n_slots, smax=smax,
+            page_size=page_size, chunk=chunk, max_new=max_new, n_req=n_req)
+        _write_merged(args.out, {"shared_prefix": rows})
+        print(json.dumps({"shared_prefix": rows}, indent=2))
+        print(f"\nwrote {args.out}")
+        return
 
     dense = ServingEngine(params, cfg, n_slots=n_slots, smax=smax)
     r_dense = _drain(dense, _requests(data, n_req, max_new))
@@ -197,7 +288,7 @@ def main():
     r_tight["preempted"] = tight.n_preempted
     r_tight["peak_pages"] = tight_pages - 1
 
-    report = {
+    update = {
         "config": {"n_slots": n_slots, "smax": smax,
                    "page_size": page_size, "prefill_chunk": chunk,
                    "max_new": max_new, "requests": n_req,
@@ -213,12 +304,10 @@ def main():
         if unknown:
             raise SystemExit(f"unknown families {unknown}; "
                              f"have {list(FAMILY_ARCHS)}")
-        report["families"] = family_sweep(
+        update["families"] = family_sweep(
             fams, n_slots=n_slots, smax=smax, page_size=page_size,
             chunk=chunk, max_new=max_new, n_req=n_req)
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
-    print(json.dumps(report, indent=2))
+    print(json.dumps(_write_merged(args.out, update), indent=2))
     print(f"\nwrote {args.out}")
 
 

@@ -17,9 +17,16 @@ once at admission, and mixtral's sliding-window layers recycle pages that
 slide out of the window. Only policies whose caches cannot rebuild exact
 prefix attention (h2o, pcaattn) fall back to the dense slot engine.
 
+``--sched-policy`` picks the paged engine's SchedulerPolicy (fifo |
+priority), ``--prefill-budget``/``--decode-budget`` cap per-tick work in
+tokens (vLLM-style), and ``--prefix-cache`` toggles page-granular prompt
+prefix sharing (COW on the partial tail page; auto-bypassed for configs
+whose spec table marks components unshareable).
+
 ``--dryrun`` prints the per-layer CacheSpec table for the chosen arch and
-policy (what state each layer holds, page budgets, recycle window) and
-exits without touching the accelerator.
+policy (what state each layer holds, page budgets, recycle window), the
+scheduler policy + token budgets + prefix-cache config, and exits without
+touching the accelerator.
 """
 from __future__ import annotations
 
@@ -78,10 +85,26 @@ def main():
                          "spec-table page bound)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens prefetched per tick (paged engine)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=["fifo", "priority"],
+                    help="paged-engine SchedulerPolicy (serving/policy.py);"
+                         " priority admits by Request.priority and may "
+                         "preempt a lower class for a slot")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prompt tokens computed per tick across chunks/"
+                         "slots (0 = one chunk per tick)")
+    ap.add_argument("--decode-budget", type=int, default=0,
+                    help="live slots decoded per tick (0 = all)")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="share identical prompt-prefix pages across "
+                         "requests (auto-bypassed for configs whose spec "
+                         "table marks components unshareable)")
     ap.add_argument("--warm-steps", type=int, default=60,
                     help="brief training so generation has signal")
     ap.add_argument("--dryrun", action="store_true",
-                    help="print the per-layer CacheSpec table and exit")
+                    help="print the per-layer CacheSpec table, scheduler "
+                         "policy, token budgets and prefix-cache config, "
+                         "then exit")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -96,6 +119,18 @@ def main():
         print(CS.format_spec_table(cfg, args.smax, ps))
         ok, why = CS.pageable(cfg)
         print("engine: paged" if ok else f"engine: dense fallback — {why}")
+        print(f"scheduler: policy={args.sched_policy} "
+              f"prefill_budget={args.prefill_budget or args.prefill_chunk} "
+              f"tok/tick decode_budget={args.decode_budget or args.n_slots} "
+              "tok/tick")
+        can_share, share_why = CS.prefix_shareable(cfg)
+        if args.prefix_cache == "off":
+            print("prefix-cache: off (by flag)")
+        elif can_share:
+            print("prefix-cache: on (page-granular, COW tail, LRU "
+                  "eviction before preemption)")
+        else:
+            print(f"prefix-cache: bypassed — {share_why}")
         print("paged-servable archs (default policy): "
               + ", ".join(CS.servable_archs()))
         return
@@ -141,17 +176,32 @@ def main():
             params, cfg, n_slots=args.n_slots, smax=args.smax,
             page_size=args.page_size or None,
             n_pages=args.n_pages or None,
-            prefill_chunk=args.prefill_chunk, backend=args.backend)
+            prefill_chunk=args.prefill_chunk, backend=args.backend,
+            policy=args.sched_policy,
+            prefill_budget=args.prefill_budget or None,
+            decode_budget=args.decode_budget or None,
+            prefix_cache=args.prefix_cache == "on")
         extra = (f" window={eng.window} (recycling)" if eng.window else "")
+        share = ("on" if eng.prefix_caching else
+                 f"bypassed ({eng.prefix_cache_reason})"
+                 if args.prefix_cache == "on" else "off")
         print(f"paged engine: page_size={eng.page_size} "
               f"pool={eng.pool.n_pages} pages "
-              f"(budget {eng.req_budget}/request){extra}")
+              f"(budget {eng.req_budget}/request){extra} "
+              f"policy={eng.policy.name} "
+              f"budgets={eng.budget.prefill_tokens}p/"
+              f"{eng.budget.decode_tokens}d tok/tick "
+              f"prefix-cache={share}")
     else:
         eng = ServingEngine(params, cfg, n_slots=args.n_slots,
                             smax=args.smax, backend=args.backend)
+    # the priority policy needs classes to tell apart: spread the demo
+    # stream over two of them (even rids are urgent)
     reqs = [Request(rid=i,
                     prompt=data.batch_at(4000 + i)["tokens"][0, :24 + 4 * i],
                     max_new=args.max_new,
+                    priority=(i + 1) % 2 if args.sched_policy == "priority"
+                    else 0,
                     frames=(np.asarray(_frames(cfg, 4000 + i)[0])
                             if cfg.is_encoder_decoder else None))
             for i in range(args.requests)]
@@ -164,6 +214,12 @@ def main():
     print(f"policy={args.policy} served {len(reqs)} requests "
           f"({toks} tokens) in {eng.ticks} ticks, {dt:.1f}s "
           f"-> {toks/dt:.1f} tok/s, {1e3*dt/max(eng.ticks,1):.0f} ms/tick")
+    if paged and eng.prefix_caching:
+        print(f"prefix cache: {eng.n_prefix_hit_tokens} hit tokens, "
+              f"{eng.n_prefill_computed_tokens} computed "
+              f"(hit rate {eng.prefix_hit_rate():.2f}), "
+              f"{eng.n_cow_copies} COW copies, "
+              f"{eng.pool.n_evicted} evictions")
     for r in reqs[:2]:
         print(f"  req{r.rid}: {np.asarray(r.out)[:10]}")
     print("done")

@@ -555,7 +555,16 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
 
     Returns (logits (1, V) for token ``n_valid - 1`` of the chunk,
     new_cache). ``pos_start``/``n_valid``/``slot`` are traced scalars —
-    one trace serves every chunk of every request in any slot."""
+    one trace serves every chunk of every request in any slot.
+
+    Prefix caching (state-free families): chunks fully covered by cached
+    pages are *skipped entirely* — the scheduler starts the query stream
+    at the first uncached token, so the first call may have ``pos_start``
+    anywhere in the prompt over a table whose earlier entries are shared
+    physical pages. This composes with chunking because cached pages
+    already hold storage-basis keys: the prefix scores below are taken in
+    that basis regardless of who wrote the rows (Lemma 4.1 — scoring is
+    unaffected), so a cache-hit run is exact, not approximate."""
     CS.assert_pageable(cfg)
     table_row = page_table[0] if page_table.ndim == 2 else page_table
     slot = jnp.int32(0) if slot is None else jnp.asarray(slot, jnp.int32)
@@ -635,6 +644,39 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
     x_last = L.norm_apply(params["final_norm"], x_last)
     logits = L.unembed_apply(params["embed"], x_last, cfg)[:, 0]
     return logits, new_cache
+
+
+def copy_cache_page(cfg: ModelConfig, cache, src_page, dst_page,
+                    page_size: int):
+    """Copy-on-write over a paged cache: duplicate physical page ``src``'s
+    rows into ``dst`` in every paged-attention layer's K and V pool.
+
+    The scheduler calls this when a request sharing a cached tail page
+    must diverge (its next token lands mid-page in rows another request /
+    the prefix index still reads): the rows read so far move to a private
+    page, the table entry is repointed, and only then does the request
+    write. ``src_page``/``dst_page`` are traced scalars — one trace serves
+    every COW."""
+    from repro.serving import paged_cache as PC
+    src = jnp.asarray(src_page, jnp.int32)
+    dst = jnp.asarray(dst_page, jnp.int32)
+
+    def cp(attn):
+        return {"k": PC.copy_page_rows(attn["k"], src, dst, page_size),
+                "v": PC.copy_page_rows(attn["v"], src, dst, page_size)}
+
+    if uses_scan(cfg):
+        layers = dict(cache["layers"])
+        if "attn" in layers:
+            # (L, R, Hkv, D): vmap the row copy over the stacked layer axis
+            layers["attn"] = jax.vmap(cp)(layers["attn"])
+        return {"layers": layers}
+    out = []
+    for lc in cache["layers"]:
+        if "attn" in lc:
+            lc = {**lc, "attn": cp(lc["attn"])}
+        out.append(lc)
+    return {"layers": out}
 
 
 def encode_cross_kv(params, cfg: ModelConfig, frames):

@@ -81,33 +81,55 @@ def uses_scan(cfg: ModelConfig) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class PagedAttn:
-    """Growable page-table K/V in the shared pool."""
+    """Growable page-table K/V in the shared pool.
+
+    ``shareable``: a full page's K/V depends only on the token prefix (and
+    the fixed params/policy), so identical prompt prefixes may alias the
+    same physical pages — this is the component prefix caching rides on."""
     n_kv_heads: int
     head_dim: int
+    shareable = True
 
 
 @dataclasses.dataclass(frozen=True)
 class WindowPagedAttn:
     """Paged K/V whose attendable suffix is bounded: pages that slide out
-    of the window are recycled (bounded page budget per request)."""
+    of the window are recycled (bounded page budget per request).
+
+    Not shareable: recycling frees a slot's pages mid-stream and points
+    table entries at the trash page, so a physical page's lifetime is tied
+    to one request's window position — aliasing it from another request
+    would read recycled/garbage rows as live context."""
     n_kv_heads: int
     head_dim: int
     window: int
+    shareable = False
 
 
 @dataclasses.dataclass(frozen=True)
 class StateSlot:
     """Fixed-size per-slot recurrent state; ``state`` names the blocks
-    cache builder (mamba|mlstm|slstm) that defines its pytree."""
+    cache builder (mamba|mlstm|slstm) that defines its pytree.
+
+    Not shareable: the recurrent state summarizes the *entire* prefix in
+    O(1) space, so a request cannot skip prefill over cached pages — the
+    skipped tokens would be missing from its state. Families with any
+    StateSlot bypass prefix caching entirely."""
     state: str
+    shareable = False
 
 
 @dataclasses.dataclass(frozen=True)
 class CrossAttnStatic:
-    """Encoder K/V written once at admission, read-only afterwards."""
+    """Encoder K/V written once at admission, read-only afterwards.
+
+    Not shareable: the decoder's self-attention K/V depends on the
+    request's encoder output (frames) through cross-attention, so equal
+    token prefixes do *not* imply equal cached K/V across requests."""
     enc_seq: int
     n_kv_heads: int
     head_dim: int
+    shareable = False
 
 
 Component = Union[PagedAttn, WindowPagedAttn, StateSlot, CrossAttnStatic]
@@ -184,6 +206,20 @@ def pageable(cfg: ModelConfig) -> Tuple[bool, str]:
         return False, (f"policy {cfg.attn_policy()!r} cannot rebuild exact "
                        "prefix attention from its cache; use the dense "
                        "engine")
+    return True, ""
+
+
+def prefix_shareable(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Can prompt-prefix pages be shared across this config's requests?
+    (ok, reason). The engine consults this, so hybrid/SSM/encdec/SWA
+    families transparently bypass sharing instead of erroring."""
+    if not has_paged_attn(cfg):
+        return False, "no paged-attention layers to share"
+    for s in layer_specs(cfg):
+        for name, comp in s.components:
+            if not comp.shareable:
+                return False, (f"{type(comp).__name__} ({name}) pins pages "
+                               "to one request")
     return True, ""
 
 
@@ -280,6 +316,25 @@ def fresh_state_tree(cfg: ModelConfig, dtype, *, include_cross: bool = True):
     return layers if any(layers) else None
 
 
+def snapshot_slot_state(layers, fresh, slot: int, scan: bool):
+    """Extract one slot's state leaves from a cache's ``layers`` tree,
+    shaped like ``fresh_state_tree`` output (batch-1 leaves) so a later
+    ``reset_slot_state(layers, snapshot, slot, scan)`` restores it
+    verbatim. Used by snapshot-on-preemption: the (tiny) recurrent state
+    goes to host instead of being recomputed from the folded prompt."""
+    def take(full, axis):
+        return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=axis)
+
+    if scan:
+        sub = {k: layers[k] for k in fresh}
+        return jax.tree.map(lambda full, _: take(full, 1), sub, fresh)
+    out = []
+    for lc, fr in zip(layers, fresh):
+        out.append(jax.tree.map(lambda full, _: take(full, 0),
+                                {k: lc[k] for k in fr}, fr))
+    return out
+
+
 def reset_slot_state(layers, fresh, slot, scan: bool):
     """Overwrite one slot's state leaves in a cache's ``layers`` tree with
     ``fresh`` init values (from ``fresh_state_tree``); other leaves are
@@ -332,8 +387,10 @@ def format_spec_table(cfg: ModelConfig, smax: int, page_size: int) -> str:
             rows.append(f"  layer {span:>7}  {s.kind:<7} {comps}")
             start = i
     budget = request_page_budget(cfg, smax, page_size)
+    ok, why = prefix_shareable(cfg)
+    share = "prefix_shareable" if ok else f"prefix_unshareable ({why})"
     head = (f"CacheSpec[{cfg.arch}] smax={smax} page_size={page_size} "
             f"budget={budget} pages/request"
             + (f" recycle_window={recycle_window(cfg)}"
-               if recycle_window(cfg) else ""))
+               if recycle_window(cfg) else "") + f" {share}")
     return "\n".join([head] + rows)

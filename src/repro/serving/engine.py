@@ -32,7 +32,12 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # scheduling class: higher is more urgent. FIFO ignores it; the paged
+    # engine's priority policy admits (and, for strictly higher classes,
+    # preempts) by it. Ties fall back to arrival order.
+    priority: int = 0
     t_submit: float = 0.0         # set by submit(); for latency reporting
+    t_first: float = 0.0          # first generated token (TTFT reporting)
     t_done: float = 0.0           # set when the request finishes
     # encoder-decoder (whisper): precomputed frame embeddings (enc_seq,
     # d_model); the engine runs the encoder once at admission
@@ -176,6 +181,8 @@ class ServingEngine:
                 continue
             tok = int(nxt_np[slot])
             req.out.append(tok)
+            if len(req.out) == 1:
+                req.t_first = time.time()
             finished = (len(req.out) >= req.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
                         or int(pos_np[slot]) >= self.smax - 1)

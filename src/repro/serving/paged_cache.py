@@ -9,9 +9,9 @@ pays for its worst case. Here the cache is a shared **page pool**:
 
 A request's logical position ``p`` lives at pool row
 ``table[slot, p // page_size] * page_size + p % page_size``. Pages are
-handed out on demand as a request's context grows and returned to the free
-list the moment it finishes (or is preempted), so memory scales with the
-*live* token count, not with ``n_slots * smax``.
+handed out on demand as a request's context grows and **released** — not
+destroyed — the moment it finishes (or is preempted), so memory scales with
+the *live* token count, not with ``n_slots * smax``.
 
 ``page_size`` defaults to ``LokiConfig.block_size``: the fused Loki decode
 kernel already treats the cache as fixed-size blocks, so a page is exactly
@@ -23,21 +23,43 @@ table at it, so the batched decode step's unconditional cache write lands
 in the trash instead of corrupting pages that have been reallocated to
 other requests.
 
+Refcounts + prefix cache (DESIGN.md §9): every held page carries a
+refcount, and full prompt pages can be *registered* in a content-hash
+index (a chain hash over the page's tokens and everything before them, so
+two prompts share a physical page iff their token prefixes are identical).
+A later request whose prompt starts with the same pages **acquires** them
+(refcount++) instead of recomputing their K/V. Releasing a page whose
+refcount drops to zero sends it to
+
+  * the free list, if it was never registered, or
+  * an LRU of *cached-but-unreferenced* pages, if it is in the index —
+    still servable as prefix hits, reclaimed (LRU-first, index entry
+    dropped) only when the free list runs dry. Eviction of unreferenced
+    cached pages therefore always happens *before* the scheduler has to
+    preempt a live request.
+
 This module is deliberately two-layered:
   * pure-jnp array helpers (``gather_logical``, ``write_token_rows``,
-    ``write_chunk_rows``) used inside jit by models/ and core/,
+    ``write_chunk_rows``, ``copy_page_rows``) used inside jit,
   * the host-side ``PagePool`` allocator driven by the scheduler.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import collections
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 TRASH_PAGE = 0
 
 _UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+# chain-hash root: the "prefix" before a prompt's first page
+ROOT_KEY = b""
 
 
 # ------------------------------------------------------------ jnp helpers
@@ -106,15 +128,58 @@ def write_chunk_rows(pool, new, table_row, pos_start, page_size: int, *,
     return _scatter_rows(pool, rows, new)
 
 
+def copy_page_rows(pool, src_page, dst_page, page_size: int):
+    """Copy-on-write: duplicate one physical page's rows inside a pool.
+
+    pool (R, ...); src_page/dst_page traced int32 scalars. Used when a
+    request sharing a cached tail page must diverge from it: the rows it
+    read so far are copied to a freshly-allocated page, and only then does
+    the request write its own tokens (the shared original stays intact for
+    its other readers / the cache index)."""
+    rows = jax.lax.dynamic_slice_in_dim(pool, src_page * page_size,
+                                        page_size, axis=0)
+    return jax.lax.dynamic_update_slice_in_dim(pool, rows,
+                                               dst_page * page_size, axis=0)
+
+
 # --------------------------------------------------------- host allocator
 
+def page_key(parent: bytes, tokens) -> bytes:
+    """Chain hash identifying a full page of prompt tokens *in context*:
+    ``parent`` is the preceding pages' key (ROOT_KEY for page 0), so equal
+    keys imply equal token prefixes end to end — position-dependent K/V
+    (rope, Loki's storage basis) can be shared safely."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(parent)
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One registered (immutable, full) prompt page."""
+    page: int
+    key: bytes                 # chain hash incl. this page's tokens
+    parent: bytes              # chain hash of the preceding pages
+    tokens: np.ndarray         # this page's page_size token ids
+
+
 class PagePool:
-    """Host-side free-list allocator over ``n_pages`` physical pages.
+    """Host-side refcounted allocator over ``n_pages`` physical pages.
 
     Page 0 is reserved (trash page for freed slots' writes), so the usable
-    capacity is ``n_pages - 1`` pages. Finished/preempted requests free
-    their pages immediately — the eviction policy is "free on finish";
-    under pressure the scheduler additionally preempts (see scheduler.py).
+    capacity is ``n_pages - 1`` pages. Lifecycle of a usable page:
+
+      free -> alloc() -> held (ref 1) -> acquire()/release() ref +-1
+        release to ref 0:  unregistered -> free
+                           registered   -> cached (LRU, evictable)
+      cached -> match_prefix() hit -> held again (ref 1)
+      cached -> eviction (free list empty) -> free
+
+    ``free_pages`` counts only truly-free pages; ``cached_pages`` the
+    registered-but-unreferenced LRU; ``available_pages`` their sum — the
+    number ``alloc`` can actually produce. ``used_pages`` counts pages some
+    request currently holds a reference to.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -123,37 +188,216 @@ class PagePool:
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: List[int] = list(range(1, n_pages))
+        self._ref: Dict[int, int] = {}
+        # prefix-cache index over *full* prompt pages
+        self._index: Dict[bytes, CacheEntry] = {}
+        self._children: Dict[bytes, List[CacheEntry]] = {}
+        self._by_page: Dict[int, CacheEntry] = {}
+        # registered pages with refcount 0, oldest-released first
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        # counters (benchmarks / hit-rate assertions)
+        self.n_lookups = 0
+        self.n_hits = 0
+        self.n_hit_tokens = 0
+        self.n_evicted = 0
+
+    # ------------------------------------------------------- accounting
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
     @property
+    def cached_pages(self) -> int:
+        """Registered pages no request references — servable as prefix
+        hits, reclaimable by ``alloc`` without preempting anyone."""
+        return len(self._lru)
+
+    @property
+    def available_pages(self) -> int:
+        """What ``alloc`` can produce: free plus evictable cached pages."""
+        return len(self._free) + len(self._lru)
+
+    @property
     def used_pages(self) -> int:
-        return (self.n_pages - 1) - len(self._free)
+        """Pages some request currently holds a reference to (cached-but-
+        unreferenced pages are *not* used — they are reclaimable)."""
+        return (self.n_pages - 1) - len(self._free) - len(self._lru)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def is_registered(self, page: int) -> bool:
+        return page in self._by_page
+
+    def deregister(self, page: int) -> None:
+        """Drop a *held* page's index entry (no-op if unregistered). The
+        sole-reader arm of copy-on-write uses this to take ownership in
+        place: the caller is about to overwrite rows, so the cached
+        content ceases to exist and a copy would preserve data nobody
+        else references. Unreferenced cached pages are reclaimed through
+        ``_evict_one`` instead."""
+        e = self._by_page.pop(page, None)
+        if e is None:
+            return
+        if self._ref.get(page, 0) <= 0:
+            raise ValueError(f"deregister of unheld page {page}")
+        del self._index[e.key]
+        sibs = self._children[e.parent]
+        sibs.remove(e)
+        if not sibs:
+            del self._children[e.parent]
+
+    # ------------------------------------------------------- alloc/free
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Grab n pages, or None (and no allocation) if the pool can't."""
-        if n > len(self._free):
+        """Grab n fresh pages (refcount 1), or None (and no allocation /
+        eviction) if the pool can't. Eviction of cached-but-unreferenced
+        pages (LRU first) backs the free list, so a full cache never
+        forces a preemption while reclaimable pages exist. ``alloc(0)``
+        returns ``[]`` without touching the free list."""
+        if n == 0:
+            return []
+        if n > self.available_pages:
             return None
+        while len(self._free) < n:
+            self._evict_one()
         taken, self._free = self._free[:n], self._free[n:]
+        for p in taken:
+            self._ref[p] = 1
         return taken
 
-    def free(self, pages: List[int]) -> None:
-        """Return pages to the free list.
+    def acquire(self, pages: List[int]) -> List[int]:
+        """Take an additional reference on already-held or cached pages
+        (sharing). ``acquire([])`` returns ``[]`` without touching any
+        state. Raises on a page nobody holds and the index doesn't know —
+        that would be acquiring a free page out of thin air."""
+        for p in pages:
+            if p == TRASH_PAGE:
+                raise ValueError("acquire of the reserved trash page")
+            if self._ref.get(p, 0) == 0 and p not in self._by_page:
+                raise ValueError(f"acquire of unheld page {p}")
+        for p in pages:
+            self._acquire_one(p)
+        return pages
 
-        Raises (rather than asserts, so ``python -O`` keeps the guard) on a
-        double-free or an attempt to free the reserved trash page — the
-        failure mode window-recycling bookkeeping would hit if a recycled
-        page were freed again at release/preemption."""
-        seen = set()
+    def _acquire_one(self, page: int) -> None:
+        self._ref[page] = self._ref.get(page, 0) + 1
+        self._lru.pop(page, None)
+
+    def release(self, pages: List[int]) -> None:
+        """Drop one reference per page. At refcount zero the page returns
+        to the free list — or, if registered in the prefix index, to the
+        cached-unreferenced LRU (still hittable, evicted on demand).
+
+        Raises (rather than asserts, so ``python -O`` keeps the guard) on
+        a refcount underflow — the refcounted equivalent of a double-free
+        — or an attempt to release the reserved trash page."""
+        seen: Dict[int, int] = {}
         for p in pages:
             if p == TRASH_PAGE:
                 raise ValueError("free() of the reserved trash page")
-            if p in self._free or p in seen:
-                raise ValueError(f"double-free of page {p}")
-            seen.add(p)
-        self._free.extend(pages)
+            seen[p] = seen.get(p, 0) + 1
+            if self._ref.get(p, 0) < seen[p]:
+                raise ValueError(
+                    f"double-free of page {p} (refcount underflow)")
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                if p in self._by_page:
+                    self._lru[p] = None          # MRU end of the LRU
+                else:
+                    self._free.append(p)
+
+    # released pages historically went through ``free``; release IS free
+    # under refcounts (ref 1 -> 0), so keep the old name as an alias
+    free = release
+
+    def _evict_one(self) -> None:
+        """Reclaim the least-recently-released cached page: drop its index
+        entry and hand the physical page to the free list."""
+        page, _ = self._lru.popitem(last=False)
+        e = self._by_page.pop(page)
+        del self._index[e.key]
+        sibs = self._children[e.parent]
+        sibs.remove(e)
+        if not sibs:
+            del self._children[e.parent]
+        self._free.append(page)
+        self.n_evicted += 1
+
+    # ------------------------------------------------------ prefix cache
+
+    def register(self, page: int, parent: bytes, tokens) -> bytes:
+        """Publish a held, fully-written prompt page under its chain hash.
+        Returns the page's key (the next page's ``parent``). A key that is
+        already indexed keeps its existing physical page (first writer
+        wins); the caller's copy stays private. Registered pages are
+        immutable: the engine never writes a row of a registered page
+        again (COW duplicates first)."""
+        toks = np.ascontiguousarray(tokens, np.int32)
+        if toks.shape[0] != self.page_size:
+            raise ValueError("register() needs exactly one full page of "
+                             f"tokens ({self.page_size}), got {toks.shape}")
+        key = page_key(parent, toks)
+        if key in self._index or page in self._by_page:
+            return key
+        if self._ref.get(page, 0) <= 0:
+            raise ValueError(f"register of unheld page {page}")
+        e = CacheEntry(page, key, parent, toks)
+        self._index[key] = e
+        self._children.setdefault(parent, []).append(e)
+        self._by_page[page] = e
+        return key
+
+    def match_prefix(self, tokens, max_tokens: int
+                     ) -> Tuple[List[int], int, bool, bytes]:
+        """Longest cached prefix of ``tokens[:max_tokens]``, acquired.
+
+        Walks the chain hash over full pages; after the last full-page hit
+        it additionally tries a *partial tail*: a registered sibling page
+        whose first rows match the remaining tokens (the classic shared-
+        system-prompt case where the split falls mid-page). Matched pages
+        come back with a reference taken (caller releases them like any
+        other page).
+
+        Returns (pages, n_matched_tokens, tail_is_partial, parent_key)
+        where ``parent_key`` is the chain hash after the *full* matches —
+        the key the caller threads into ``register`` for the pages it goes
+        on to compute itself."""
+        ps = self.page_size
+        toks = np.ascontiguousarray(tokens, np.int32)
+        pages: List[int] = []
+        n, parent = 0, ROOT_KEY
+        while n + ps <= max_tokens:
+            key = page_key(parent, toks[n:n + ps])
+            e = self._index.get(key)
+            if e is None:
+                break
+            self._acquire_one(e.page)
+            pages.append(e.page)
+            parent = key
+            n += ps
+        tail = False
+        rem = min(max_tokens - n, ps)   # rem == ps: full lookup missed but
+        if rem > 0:                     # a shorter overlap may still exist
+            best, best_j = None, 0
+            for e in self._children.get(parent, ()):  # longest overlap wins
+                j = int((e.tokens[:rem] == toks[n:n + rem]).cumprod().sum())
+                if j > best_j:
+                    best, best_j = e, j
+            if best is not None:
+                self._acquire_one(best.page)
+                pages.append(best.page)
+                n += best_j
+                tail = True
+        self.n_lookups += 1
+        if pages:
+            self.n_hits += 1
+        self.n_hit_tokens += n
+        return pages, n, tail, parent
 
     @staticmethod
     def pages_for(n_tokens: int, page_size: int) -> int:

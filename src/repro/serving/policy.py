@@ -1,0 +1,109 @@
+"""Pluggable scheduling policies for the paged serving engine.
+
+PR 3's ``PagedServingEngine.tick`` hard-coded one policy: FIFO admission,
+one prefill chunk, one batched decode. This module factors the *decisions*
+out of the tick so the engine runs three policy-driven phases —
+
+  admission  which waiting request gets a slot next, and whether a waiting
+             request may *preempt* a running one for its slot
+  prefill    which mid-prefill slots advance, and by how many tokens
+  decode     which live slots decode this tick when the decode budget is
+             smaller than the live set
+
+— while the mechanism (pages, refcounts, chunked prefill, preemption
+bookkeeping) stays in serving/scheduler.py.
+
+A policy is two total orders plus one capability flag:
+
+  sort_key(req, arrival)      urgency: smaller = served first. Admission
+                              pops the minimum; preemption victims are the
+                              *maximum* among strictly-less-urgent
+                              requests, so the most urgent request always
+                              makes progress and preemption cannot
+                              livelock (the running key multiset strictly
+                              decreases at every swap).
+  decode_key(req, arrival, last_tick)
+                              decode-phase order under a token budget.
+                              Includes the slot's last-decoded tick so a
+                              budget smaller than the live set round-
+                              robins instead of starving the largest key.
+  preempt_for_admission       may a strictly-more-urgent *waiting* request
+                              evict a running one just to get a slot?
+                              False for FIFO (arrival order already means
+                              no waiter is ever more urgent than a
+                              runner); True for priority classes.
+
+Budgets are vLLM-style per-tick token counts (``TickBudget``): prefill
+spends ``prefill_tokens`` prompt tokens per tick across any number of
+chunks and slots; decode spends ``decode_tokens`` (one token per live
+slot per tick). Both default to the legacy behavior — one chunk, every
+live slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TickBudget:
+    """Per-tick work caps, in tokens.
+
+    prefill_tokens  prompt tokens computed per tick (>= chunk size lets
+                    several small chunks / several waiting prompts share
+                    one tick; the engine never splits a chunk)
+    decode_tokens   live slots decoded per tick (each costs one token);
+                    slots left out are simply masked from the batched
+                    step and resume on a later tick — per-slot positions
+                    keep their streams exact regardless of schedule
+    """
+    prefill_tokens: int
+    decode_tokens: int
+
+
+class SchedulerPolicy:
+    """FIFO: serve in arrival order, never preempt for admission."""
+
+    name = "fifo"
+    preempt_for_admission = False
+
+    def sort_key(self, req, arrival: int):
+        return (0, arrival)
+
+    def decode_key(self, req, arrival: int, last_tick: int):
+        return (0, last_tick, arrival)
+
+
+class FifoPolicy(SchedulerPolicy):
+    pass
+
+
+class PriorityPolicy(SchedulerPolicy):
+    """Priority classes: higher ``Request.priority`` is served first;
+    arrival order breaks ties inside a class (so equal-priority traffic
+    degrades to FIFO). A waiting request of a strictly higher class may
+    preempt the least-urgent running request to take its slot — the
+    preempted request is requeued and (for StateSlot families) restored
+    from its host snapshot at re-admission."""
+
+    name = "priority"
+    preempt_for_admission = True
+
+    def sort_key(self, req, arrival: int):
+        return (-req.priority, arrival)
+
+    def decode_key(self, req, arrival: int, last_tick: int):
+        return (-req.priority, last_tick, arrival)
+
+
+POLICIES = {"fifo": FifoPolicy, "priority": PriorityPolicy}
+
+
+def make_policy(policy) -> SchedulerPolicy:
+    """'fifo' | 'priority' | a SchedulerPolicy instance."""
+    if isinstance(policy, SchedulerPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler policy {policy!r}; have {list(POLICIES)}")

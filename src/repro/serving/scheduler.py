@@ -1,41 +1,49 @@
-"""Paged serving engine: admission + continuous batching over a page pool.
+"""Paged serving engine: policy-driven scheduling over a refcounted pool.
 
 Replaces the dense engine's ``(n_slots, Smax, ...)`` preallocation with the
-shared page pool of serving/paged_cache.py and a scheduler that interleaves
+shared page pool of serving/paged_cache.py and a tick split into three
+**policy-driven phases** (serving/policy.py):
 
-  * **chunked prefill** — each tick advances at most one waiting prompt by
-    ``prefill_chunk`` tokens, so a long prompt neither monopolizes a tick
-    nor gets truncated to the cache length, and
-  * **batched decode** — one ``lm.decode_step`` over every live slot, with
-    per-slot positions and page tables keeping ragged batches exact.
+  admission  waiting requests take free slots in ``SchedulerPolicy`` order
+             (FIFO or priority classes); under the priority policy a
+             strictly-more-urgent waiter may preempt the least-urgent
+             running request for its slot
+  prefill    mid-prefill slots advance by fixed-size chunks until the
+             per-tick **prefill token budget** is spent — several small
+             chunks, or several waiting prompts, share one tick
+  decode     one batched ``lm.decode_step`` over the selected live slots
+             (at most the **decode token budget**; selection round-robins
+             within a policy class so a tight budget never starves a
+             stream), with per-slot positions and page tables keeping
+             ragged batches exact
 
 What a slot *holds* is declared by the per-layer CacheSpec table
-(serving/cache_spec.py), so every family in configs/ serves here:
+(serving/cache_spec.py) — PagedAttn / WindowPagedAttn (recycled) /
+StateSlot / CrossAttnStatic — so every family in configs/ serves here
+(DESIGN.md §8).
 
-  PagedAttn        pages allocated on demand (ceil(len/page_size) held),
-                   freed the moment the request finishes.
-  WindowPagedAttn  (mixtral SWA) pages that slide fully out of the
-                   attention window are *recycled*: freed back to the pool
-                   and their table entries pointed at the trash page, so a
-                   window layer holds at most ceil(window/page_size)+1
-                   pages instead of ceil(smax/page_size). Recycling runs
-                   before growth each tick, so the bound holds at every
-                   instant of the decode phase.
-  StateSlot        (hymba mamba, xlstm m/s-LSTM) per-slot recurrent state,
-                   reset at admission and carried across prefill chunks;
-                   the batched decode masks state updates of non-live
-                   slots (mid-prefill or idle) via ``live``.
-  CrossAttnStatic  (whisper) encoder K/V computed once at admission from
-                   ``Request.frames`` and written into the slot.
+**Prefix caching** (DESIGN.md §9): for configs whose components are all
+``shareable`` (state-free, full-attention families), full prompt pages are
+registered in the pool's content-hash index as prefill writes them. A
+later request whose prompt starts with the same tokens *acquires* those
+pages (refcount++) and starts its query stream at the first uncached
+token — chunks fully covered by cached pages are never computed. Cached
+pages hold storage-basis keys, so Loki scoring over them is exact (Lemma
+4.1). When the match ends mid-page the tail page is shared read-only and
+**copy-on-write** duplicates it the moment this request must write its
+own rows. Unreferenced cached pages form an LRU that ``alloc`` reclaims
+*before* the scheduler ever preempts a live request.
 
-Under memory pressure the scheduler *preempts* the latest-arriving request
-(vLLM's recompute policy — an older request is never evicted for a younger
-one): its pages are freed and it is requeued at the front with its
-generated tokens folded into the prompt. StateSlot layers are handled by
-recompute — state is reset at re-admission and rebuilt exactly by the
-masked chunked prefill — so greedy decoding reproduces the identical
-continuation. ``n_pages - 1 >= `` the per-request page bound is enforced
-at construction, so a lone request can always run to its length cap and
+Under memory pressure the scheduler *preempts* the least-urgent request
+by the policy's order (vLLM's recompute policy — under FIFO an older
+request is never evicted for a younger one): its references are released
+— never force-freed, shared pages survive for their other readers — and
+it is requeued with its generated tokens folded into the prompt.
+StateSlot layers are handled by recompute, except pure-state families
+(no pages to rebuild), whose tiny recurrent state is **snapshotted to
+host** at preemption and restored at re-admission so the folded prompt is
+not re-run. ``n_pages - 1 >=`` the per-request page bound is enforced at
+construction, so a lone request can always run to its length cap and
 preemption cannot livelock.
 
 Decode numerics are the dense engine's: the jnp policies read the gathered
@@ -48,7 +56,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,8 +65,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import lm
 from repro.serving import cache_spec as CS
+from repro.serving import paged_cache as PC
 from repro.serving.engine import Request, context_cap, sample_next
 from repro.serving.paged_cache import PagePool
+from repro.serving.policy import SchedulerPolicy, TickBudget, make_policy
 
 PAGED_POLICIES = ("full", "exact_topk", "loki", "loki_block")
 
@@ -78,14 +88,22 @@ class PagedServingEngine:
     n_pages        physical pool size incl. the reserved trash page;
                    defaults to fitting every slot at its spec-table page
                    bound (pass less to exercise pressure / preemption)
-    prefill_chunk  prompt tokens processed per tick (fixed-size, padded)
+    prefill_chunk  prompt tokens processed per chunk (fixed-size, padded)
+    policy         'fifo' | 'priority' | a SchedulerPolicy instance
+    prefill_budget prompt tokens computed per tick (default: one chunk)
+    decode_budget  live slots decoded per tick (default: all of them)
+    prefix_cache   share identical prompt-prefix pages across requests
+                   (auto-bypassed for configs with unshareable components)
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  smax: int = 512, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None, prefill_chunk: int = 32,
                  eos_id: Optional[int] = None, greedy: bool = True,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 policy="fifo", prefill_budget: Optional[int] = None,
+                 decode_budget: Optional[int] = None,
+                 prefix_cache: bool = True):
         if backend is not None:
             cfg = cfg.replace(
                 loki=dataclasses.replace(cfg.loki, backend=backend))
@@ -105,6 +123,14 @@ class PagedServingEngine:
         self.n_slots = n_slots
         self.prefill_chunk = prefill_chunk
         self.eos_id, self.greedy = eos_id, greedy
+        self.policy: SchedulerPolicy = make_policy(policy)
+        self.budget = TickBudget(
+            prefill_tokens=prefill_budget or prefill_chunk,
+            decode_tokens=decode_budget or n_slots)
+        shareable, why = CS.prefix_shareable(cfg)
+        self.prefix_caching = bool(prefix_cache and shareable)
+        self.prefix_cache_reason = (
+            "" if not prefix_cache else why)     # bypass reason, if any
 
         # page accounting from the spec table: ``req_budget`` is the
         # decode-phase bound per request (= ceil(window/ps)+1 for SWA
@@ -143,25 +169,44 @@ class PagedServingEngine:
         # non-None entries is what the slot actually holds
         self.slot_pages: List[List[Optional[int]]] = [
             [] for _ in range(n_slots)]
+        # slot -> logical index of a shared tail page this request must
+        # copy-on-write before its first write lands in it (full-page
+        # prefix hits need no COW: the slot never writes below its first
+        # uncached token, so only the partial tail can collide)
+        self._cow_pending: Dict[int, int] = {}
+        # prefix-cache registration cursor per slot: next full prompt page
+        # to publish, and the chain hash of everything before it
+        self._reg_next: Dict[int, int] = {}
+        self._reg_parent: Dict[int, bytes] = {}
         # slots mid-prefill: slot -> index of the next prompt token to feed
         self._prefill_at: Dict[int, int] = {}
-        # admission order, oldest first — preemption victims come from the
-        # tail so head-of-line requests always finish
+        # admission order, oldest first — used for phase iteration; the
+        # *policy* key decides urgency and preemption victims
         self._admit_order: List[int] = []
         self._queue: Deque[Request] = collections.deque()
         # generated tokens already folded back into req.prompt by earlier
         # preemptions (keyed by object id; a second preemption must only
         # fold the tokens generated since the last one)
         self._folded: Dict[int, int] = {}
-        # original submission order (survives preemption/re-admission):
-        # preemption only ever evicts later arrivals, so head-of-line
-        # requests always finish
+        # original submission order (survives preemption/re-admission) —
+        # the tie-break inside a policy class, so FIFO's "an older request
+        # is never evicted for a younger one" guarantee holds per class
         self._arrival: Dict[int, int] = {}
         self._arrival_seq = 0
+        # host snapshots of preempted StateSlot state: id(req) ->
+        # (tokens consumed, batch-1 state tree); restore-eligible only for
+        # pure-state families (paged K/V cannot be snapshotted away — its
+        # pages were released), recompute stays the fallback
+        self._state_snap: Dict[int, Tuple[int, Any]] = {}
+        self._snap_eligible = self.has_state and not self.has_pages
+        self._last_decoded = np.zeros((n_slots,), np.int64)
         self.ticks = 0
         self.n_preempted = 0
         self.n_recycled_pages = 0
         self.peak_slot_pages = 0       # max pages any slot held at once
+        self.n_prefill_computed_tokens = 0
+        self.n_cow_copies = 0
+        self.n_state_restores = 0
 
         ps = self.page_size
         self._decode = jax.jit(
@@ -170,11 +215,17 @@ class PagedServingEngine:
         self._chunk = jax.jit(
             lambda p, c, toks, start, nv, row, sl: lm.prefill_chunk(
                 p, cfg, c, toks, start, nv, row, ps, slot=sl))
+        self._copy_page = jax.jit(
+            lambda c, s, d: lm.copy_cache_page(cfg, c, s, d, ps))
         if self.is_encdec:
             self._encode_cross = jax.jit(
                 lambda p, fr: lm.encode_cross_kv(p, cfg, fr))
 
     # --------------------------------------------------- per-slot state
+
+    def _key(self, req: Request):
+        """The policy's urgency key (smaller = more urgent)."""
+        return self.policy.sort_key(req, self._arrival[id(req)])
 
     def _reset_slot_state(self, slot: int) -> None:
         """(Re-)admission: zero the slot's recurrent state so a previous
@@ -185,6 +236,25 @@ class PagedServingEngine:
         self.cache = {"layers": CS.reset_slot_state(
             self.cache["layers"], self._fresh_state, slot,
             lm.uses_scan(self.cfg))}
+
+    def _try_restore_state(self, slot: int, req: Request,
+                           n_pre: int) -> Optional[int]:
+        """Snapshot-on-preemption restore: write the host snapshot back
+        into the slot and return the number of prompt tokens it already
+        folded in, or None when recompute must run (no snapshot, or the
+        model also has paged K/V whose pages were released — rebuilding
+        those recomputes the state anyway)."""
+        snap = self._state_snap.get(id(req))
+        if snap is None or not self._snap_eligible:
+            return None
+        consumed, tree = snap
+        if not 1 <= consumed <= n_pre:
+            return None
+        self.cache = {"layers": CS.reset_slot_state(
+            self.cache["layers"], jax.tree.map(jnp.asarray, tree), slot,
+            lm.uses_scan(self.cfg))}
+        self.n_state_restores += 1
+        return consumed
 
     def _install_cross(self, slot: int, frames: np.ndarray) -> None:
         """CrossAttnStatic lifecycle: run the encoder once at admission and
@@ -208,35 +278,64 @@ class PagedServingEngine:
         self._arrival_seq += 1
         self._queue.append(req)
 
-    def _admit(self) -> None:
-        for slot in range(self.n_slots):
-            if not self._queue:
-                return
-            if self.slot_req[slot] is not None:
-                continue
-            req = self._queue.popleft()
-            toks = req.prompt.astype(np.int32)
-            if not req.out:
-                cap = context_cap(self.smax, req.max_new)
-                if len(toks) > cap:
-                    toks = toks[-cap:]
-            # else: re-admission after a mid-decode preemption. Everything
-            # in the folded prompt was legitimately cached at preemption
-            # (pos_after < smax-1, so len <= smax-1): re-truncating here
-            # would drop context the unpreempted run kept and make greedy
-            # output depend on preemption timing.
-            req.prompt = toks
-            self.slot_req[slot] = req
-            self.slot_pages[slot] = []
-            self._admit_order.append(slot)
-            self.pos = self.pos.at[slot].set(0)
+    def _pop_next(self) -> Request:
+        """Most urgent waiting request by the policy key. Re-admissions
+        keep their original arrival, so under FIFO a preempted request
+        resumes ahead of everything that arrived after it."""
+        qi = min(range(len(self._queue)),
+                 key=lambda i: self._key(self._queue[i]))
+        req = self._queue[qi]
+        del self._queue[qi]
+        return req
+
+    def _admit_into(self, slot: int, req: Request) -> None:
+        toks = req.prompt.astype(np.int32)
+        if not req.out:
+            cap = context_cap(self.smax, req.max_new)
+            if len(toks) > cap:
+                toks = toks[-cap:]
+        # else: re-admission after a mid-decode preemption. Everything
+        # in the folded prompt was legitimately cached at preemption
+        # (pos_after < smax-1, so len <= smax-1): re-truncating here
+        # would drop context the unpreempted run kept and make greedy
+        # output depend on preemption timing.
+        req.prompt = toks
+        self.slot_req[slot] = req
+        self.slot_pages[slot] = []
+        self._cow_pending.pop(slot, None)
+        self._admit_order.append(slot)
+        self.pos = self.pos.at[slot].set(0)
+        n_pre = len(toks) - 1
+        restored = self._try_restore_state(slot, req, n_pre)
+        if restored is None:
             self._reset_slot_state(slot)
-            if self.is_encdec:
-                self._install_cross(slot, req.frames)
-            if len(toks) > 1:
-                self._prefill_at[slot] = 0
-            else:
-                self._ready(slot)
+        if self.is_encdec:
+            self._install_cross(slot, req.frames)
+        start = 0
+        self._reg_next[slot] = 0
+        self._reg_parent[slot] = PC.ROOT_KEY
+        if restored is not None:
+            start = restored
+        elif self.prefix_caching and n_pre > 0:
+            pages, cov, tail, parent = self.pool.match_prefix(toks, n_pre)
+            if pages:
+                self.page_table = self.page_table.at[
+                    slot, :len(pages)].set(jnp.asarray(pages, jnp.int32))
+                self.slot_pages[slot] = list(pages)
+                if tail:
+                    # shared partial tail: read-only until the first write
+                    # into it forces a copy (COW)
+                    self._cow_pending[slot] = len(pages) - 1
+                n_full = len(pages) - (1 if tail else 0)
+                self._reg_next[slot] = n_full
+                self._reg_parent[slot] = parent
+                self.peak_slot_pages = max(self.peak_slot_pages,
+                                           len(pages))
+                start = cov
+        if n_pre > start:
+            self._prefill_at[slot] = start
+        else:
+            self._ready(slot)
 
     def _ready(self, slot: int) -> None:
         """Prefill finished: the slot joins the decode batch."""
@@ -253,11 +352,17 @@ class PagedServingEngine:
             req.t_done = time.time()
             self._folded.pop(id(req), None)
             self._arrival.pop(id(req), None)
-        # recycled (None) entries were freed the moment they slid out of
-        # the window — freeing them again here would double-free (PagePool
-        # raises); only the pages the slot still holds go back
-        self.pool.free([p for p in self.slot_pages[slot] if p is not None])
+            self._state_snap.pop(id(req), None)
+        # recycled (None) entries were released the moment they slid out
+        # of the window; everything else drops one reference — a shared
+        # page another request (or the prefix index) still needs survives,
+        # a sole-owned one returns to the free list / LRU
+        self.pool.release(
+            [p for p in self.slot_pages[slot] if p is not None])
         self.slot_pages[slot] = []
+        self._cow_pending.pop(slot, None)
+        self._reg_next.pop(slot, None)
+        self._reg_parent.pop(slot, None)
         # retarget the freed slot at the trash page so the batched decode
         # step's unconditional write cannot touch reallocated pages
         self.page_table = self.page_table.at[slot].set(0)
@@ -269,38 +374,65 @@ class PagedServingEngine:
 
     def _preempt(self, slot: int) -> None:
         """Recompute-preemption: fold generated tokens into the prompt and
-        requeue at the front; greedy decoding reproduces the rest (the
-        slot's StateSlot components are reset at re-admission and rebuilt
-        by the masked chunked prefill)."""
+        requeue; greedy decoding reproduces the rest. A preempted request
+        *releases* its references — shared pages are never freed out from
+        under their other readers. Pure-state families additionally
+        snapshot the slot's recurrent state to host so re-admission can
+        skip re-running the folded prompt (paged families keep recompute:
+        their released K/V pages must be rebuilt anyway, which rebuilds
+        the state for free)."""
         req = self.slot_req[slot]
+        consumed = self._prefill_at.get(slot)
         folded = self._folded.get(id(req), 0)
         fresh = req.out[folded:]
         if fresh:
             req.prompt = np.concatenate(
                 [req.prompt, np.asarray(fresh, np.int32)])
             self._folded[id(req)] = len(req.out)
+        if consumed is None:
+            # live mid-decode: the state has folded in every token of the
+            # (just-folded) prompt except the last, which re-admission
+            # feeds through the first decode step
+            consumed = len(req.prompt) - 1 if self.live[slot] else 0
+        if self._snap_eligible and consumed >= 1:
+            snap = CS.snapshot_slot_state(
+                self.cache["layers"], self._fresh_state, slot,
+                lm.uses_scan(self.cfg))
+            self._state_snap[id(req)] = (consumed, jax.device_get(snap))
         self._release(slot, done=False)
         self._queue.appendleft(req)
         self.n_preempted += 1
 
     def _make_room(self, need: int, protect: int) -> bool:
-        """Free pages by preempting requests that *arrived after* the
-        protected slot's request, newest arrival first — an older request
-        is never evicted for a younger one, so head-of-line requests
-        always finish even though re-admission rejoins the slot list.
+        """Free pages by preempting strictly-less-urgent requests (largest
+        policy key first) — under FIFO that is exactly "newest arrival
+        first; an older request is never evicted for a younger one", so
+        head-of-line requests always finish. Unreferenced cached pages do
+        NOT require preemption: they count as available and ``alloc``
+        reclaims them LRU-first, so eviction always precedes preemption.
         Only slots actually holding pages are victims (a just-admitted
         slot with none would be churned for nothing). True iff ``need``
         pages are now available."""
-        while self.pool.free_pages < need:
-            mine = self._arrival[id(self.slot_req[protect])]
-            victims = [s for s in self._admit_order
-                       if s != protect
-                       and any(p is not None for p in self.slot_pages[s])
-                       and self._arrival[id(self.slot_req[s])] > mine]
-            if not victims:
+        while self.pool.available_pages < need:
+            mine = self._key(self.slot_req[protect])
+            candidates = [s for s in self._admit_order
+                          if s != protect
+                          and any(p is not None for p in self.slot_pages[s])
+                          and self._key(self.slot_req[s]) > mine]
+            if not candidates:
                 return False
+            # under sharing, releasing a page only reclaims it when this
+            # slot is its last holder: prefer victims whose preemption
+            # actually gains pages; fall back to shared-only holders only
+            # when nothing gainful exists (their release drops refcounts,
+            # which is what turns a co-holder into a gainful victim next
+            # iteration — so the loop still makes progress)
+            gainful = [s for s in candidates
+                       if any(p is not None and self.pool.refcount(p) == 1
+                              for p in self.slot_pages[s])]
             self._preempt(max(
-                victims, key=lambda s: self._arrival[id(self.slot_req[s])]))
+                gainful or candidates,
+                key=lambda s: self._key(self.slot_req[s])))
         return True
 
     def _grow_to(self, slot: int, n_tokens: int) -> bool:
@@ -323,6 +455,59 @@ class PagedServingEngine:
             sum(p is not None for p in self.slot_pages[slot]))
         return True
 
+    def _resolve_cow(self, slot: int) -> bool:
+        """Copy-on-write of a shared tail page, run lazily right before
+        this slot's first write could land in it. If the slot is the
+        page's only reader it takes ownership in place — the index entry
+        is dropped (this write is about to overwrite the cached content)
+        and no copy is paid; only a page another request still reads is
+        actually copied, the table entry repointed, and the original left
+        serving its other readers. False when the pool cannot produce the
+        copy's page (caller retries or preempts)."""
+        idx = self._cow_pending.get(slot)
+        if idx is None:
+            return True
+        old = self.slot_pages[slot][idx]
+        if self.pool.refcount(old) == 1:
+            self.pool.deregister(old)
+            self._cow_pending.pop(slot)
+            return True
+        if not self._make_room(1, protect=slot):
+            return False
+        if self.pool.refcount(old) == 1:
+            # _make_room preempted the co-holder: sole reader after all —
+            # take ownership instead of paying the copy at peak pressure
+            self.pool.deregister(old)
+            self._cow_pending.pop(slot)
+            return True
+        new = self.pool.alloc(1)[0]
+        self.cache = self._copy_page(self.cache, old, new)
+        self.page_table = self.page_table.at[slot, idx].set(new)
+        self.slot_pages[slot][idx] = new
+        self.pool.release([old])
+        self._cow_pending.pop(slot)
+        self.n_cow_copies += 1
+        return True
+
+    def _register_ready_pages(self, slot: int) -> None:
+        """Publish full prompt pages the prefill has completely written.
+        Only pages fully covered by *prefilled* prompt tokens register —
+        the page receiving decode writes never does, so registered pages
+        are immutable and safe to alias."""
+        if not self.prefix_caching:
+            return
+        req = self.slot_req[slot]
+        toks = req.prompt
+        written = self._prefill_at.get(slot, len(toks) - 1)
+        ps = self.page_size
+        i = self._reg_next[slot]
+        while (i + 1) * ps <= written:
+            self._reg_parent[slot] = self.pool.register(
+                self.slot_pages[slot][i], self._reg_parent[slot],
+                toks[i * ps:(i + 1) * ps])
+            i += 1
+        self._reg_next[slot] = i
+
     def _recycle_window(self, slot: int, next_q: int) -> None:
         """WindowPagedAttn lifecycle: pages every future query's window has
         slid past are dead — free them and point their table entries at the
@@ -338,7 +523,7 @@ class PagedServingEngine:
         if not freed:
             return
         pages[:first_live] = [None] * min(first_live, len(pages))
-        self.pool.free(freed)
+        self.pool.release(freed)
         self.n_recycled_pages += len(freed)
         self.page_table = self.page_table.at[slot, :first_live].set(0)
         live = sum(p is not None for p in pages)
@@ -347,14 +532,57 @@ class PagedServingEngine:
                 f"slot {slot} holds {live} pages after recycling, above "
                 f"the spec-table bound {self._req_pages_hard}")
 
-    # ------------------------------------------------------------- tick
+    # ------------------------------------------------------------ phases
 
-    def _prefill_step(self) -> bool:
-        """Advance the oldest mid-prefill request by one fixed-size chunk."""
-        slot = next((s for s in self._admit_order
-                     if s in self._prefill_at), None)
-        if slot is None:
-            return False
+    def _admission_phase(self) -> None:
+        """Fill free slots in policy order; then, if the policy allows it,
+        let a strictly-more-urgent waiter preempt the least-urgent running
+        request for its slot (the running key multiset strictly decreases
+        at every swap, so this terminates and the most urgent request
+        always makes progress)."""
+        while self._queue:
+            free = [s for s in range(self.n_slots)
+                    if self.slot_req[s] is None]
+            if not free:
+                break
+            self._admit_into(free[0], self._pop_next())
+        if not self.policy.preempt_for_admission:
+            return
+        while self._queue:
+            qi = min(range(len(self._queue)),
+                     key=lambda i: self._key(self._queue[i]))
+            cand = self._queue[qi]
+            worse = [s for s in self._admit_order
+                     if self._key(self.slot_req[s]) > self._key(cand)]
+            if not worse:
+                return
+            del self._queue[qi]
+            self._preempt(max(worse,
+                              key=lambda s: self._key(self.slot_req[s])))
+            slot = next(s for s in range(self.n_slots)
+                        if self.slot_req[s] is None)
+            self._admit_into(slot, cand)
+
+    def _prefill_phase(self) -> None:
+        """Advance mid-prefill slots, most urgent first, spending at most
+        ``budget.prefill_tokens`` real prompt tokens across any number of
+        chunks and slots this tick."""
+        budget = self.budget.prefill_tokens
+        slots = sorted([s for s in self._admit_order
+                        if s in self._prefill_at],
+                       key=lambda s: self._key(self.slot_req[s]))
+        for slot in slots:
+            while budget > 0 and slot in self._prefill_at:
+                n = self._prefill_slot_chunk(slot)
+                if n < 0:
+                    break              # this slot is pool-contended; a
+                budget -= max(n, 1)    # later slot may still fit (e.g. a
+            if budget <= 0:            # chunk into pages it already holds)
+                return
+
+    def _prefill_slot_chunk(self, slot: int) -> int:
+        """One fixed-size chunk of one slot's prompt. Returns the number
+        of real tokens computed, or -1 when the pool is contended."""
         req = self.slot_req[slot]
         toks = req.prompt
         n_pre = len(toks) - 1              # last token goes through decode
@@ -365,8 +593,12 @@ class PagedServingEngine:
         # ``start``, so pages its window has passed free up first and the
         # per-request bound holds at every instant
         self._recycle_window(slot, start)
+        # a shared tail page must be copied before this chunk's first
+        # write lands in it (start == the first uncached token)
+        if not self._resolve_cow(slot):
+            return -1
         if not self._grow_to(slot, start + n_valid):
-            return False                   # pool contended; retry next tick
+            return -1
         chunk = np.zeros((1, c), np.int32)
         chunk[0, :n_valid] = toks[start:start + n_valid]
         _, self.cache = self._chunk(
@@ -374,48 +606,65 @@ class PagedServingEngine:
             jnp.int32(start), jnp.int32(n_valid), self.page_table[slot],
             jnp.int32(slot))
         self._prefill_at[slot] = start + n_valid
+        self.n_prefill_computed_tokens += n_valid
+        self._register_ready_pages(slot)
         if start + n_valid >= n_pre:
             self._ready(slot)
-        return True
+        return n_valid
 
-    def _decode_tick(self, rng: Optional[jax.Array]) -> bool:
+    def _decode_phase(self, rng: Optional[jax.Array]) -> bool:
         if not self.live.any():
             return False
+        # decode-budget selection: when more slots are live than the
+        # budget covers, the policy's decode key picks this tick's batch
+        # (strict priority classes, round-robin inside a class)
+        chosen = [int(s) for s in np.flatnonzero(self.live)]
+        if len(chosen) > self.budget.decode_tokens:
+            chosen.sort(key=lambda s: self.policy.decode_key(
+                self.slot_req[s], self._arrival[id(self.slot_req[s])],
+                int(self._last_decoded[s])))
+            chosen = chosen[: self.budget.decode_tokens]
+        sel = np.zeros((self.n_slots,), bool)
+        sel[chosen] = True
         pos_np = np.asarray(self.pos)
-        # every live slot writes its new token this step: make sure the
-        # target page exists (preempting youngest-first under pressure),
-        # recycling window-dead pages first so SWA slots stay within their
+        # every selected slot writes its new token this step: make sure
+        # the target page exists and is privately writable (COW first),
+        # recycling window-dead pages so SWA slots stay within their
         # spec-table page bound
-        for slot in np.flatnonzero(self.live):
-            slot = int(slot)
+        for slot in chosen:
             if not self.live[slot]:
                 continue                   # preempted by an earlier grow
             self._recycle_window(slot, int(pos_np[slot]))
-            if not self._grow_to(slot, int(pos_np[slot]) + 1):
-                # this slot's request is the newest arrival under memory
+            if not (self._resolve_cow(slot)
+                    and self._grow_to(slot, int(pos_np[slot]) + 1)):
+                # this slot's request is the least urgent under memory
                 # pressure: vLLM's recompute policy preempts the requester
-                # itself rather than evicting an older request
+                # itself rather than evicting a more urgent request
                 self._preempt(slot)
-        if not self.live.any():
+        sel &= self.live
+        if not sel.any():
             return False
-        # the batched step writes a token for *every* slot; non-live slots
-        # (idle, or mid-prefill with pages already mapped) must land in the
-        # trash page, not at position 0 of their freshly prefilled pages —
-        # and their StateSlot components must not advance (``live`` mask)
-        live_dev = jnp.asarray(self.live)
-        pt = self.page_table * live_dev.astype(jnp.int32)[:, None]
+        # the batched step writes a token for *every* slot; unselected
+        # slots (idle, mid-prefill, live-but-over-budget) must land in the
+        # trash page, not at their current position — and their StateSlot
+        # components must not advance (``live`` mask)
+        sel_dev = jnp.asarray(sel)
+        pt = self.page_table * sel_dev.astype(jnp.int32)[:, None]
         logits, self.cache = self._decode(
             self.params, self.cache, self.last_tok, self.pos, pt,
-            live_dev if self.has_state else None)
-        self.pos = self.pos + live_dev.astype(jnp.int32)
+            sel_dev if self.has_state else None)
+        self.pos = self.pos + sel_dev.astype(jnp.int32)
         nxt_np = np.asarray(sample_next(logits, greedy=self.greedy,
                                         rng=rng, ticks=self.ticks))
+        self._last_decoded[sel] = self.ticks
         for slot in range(self.n_slots):
             req = self.slot_req[slot]
-            if req is None or not self.live[slot]:
+            if req is None or not sel[slot]:
                 continue
             tok = int(nxt_np[slot])
             req.out.append(tok)
+            if len(req.out) == 1:
+                req.t_first = time.time()
             finished = (len(req.out) >= req.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
                         or int(pos_np[slot]) + 1 >= self.smax - 1)
@@ -425,11 +674,25 @@ class PagedServingEngine:
                 self.last_tok = self.last_tok.at[slot].set(tok)
         return True
 
+    # ------------------------------------------------------------- tick
+
     def tick(self, rng: Optional[jax.Array] = None) -> None:
-        self._admit()
-        self._prefill_step()
-        self._decode_tick(rng)
+        self._admission_phase()
+        self._prefill_phase()
+        self._decode_phase(rng)
         self.ticks += 1
+
+    @property
+    def n_prefix_hit_tokens(self) -> int:
+        """Prompt tokens served from cached pages (every match goes
+        through pool.match_prefix, so the pool's counter is the truth)."""
+        return self.pool.n_hit_tokens
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefill-eligible prompt tokens served from cached
+        pages instead of being computed."""
+        total = self.n_prefix_hit_tokens + self.n_prefill_computed_tokens
+        return self.n_prefix_hit_tokens / total if total else 0.0
 
     def run_until_done(self, max_ticks: int = 10_000,
                        rng: Optional[jax.Array] = None) -> None:

@@ -1,0 +1,292 @@
+"""Prefix caching over the refcounted PagePool (PR 5).
+
+Greedy-identity matrix with the cache on/off across families × policies
+(shareable dense llama2, auto-bypassed mixtral-SWA and hymba), COW
+divergence at the shared tail page, LRU eviction of cached pages *before*
+any preemption, hit-rate counters, preemption exactness under sharing,
+and the PagePool refcount/accounting hardening."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import cache_spec as CS
+from repro.serving import paged_cache as PC
+from repro.serving.engine import Request
+from repro.serving.paged_cache import PagePool
+from repro.serving.scheduler import PagedServingEngine
+
+
+def _cfg(arch, policy):
+    cfg = get_smoke_config(arch)
+    if policy != "full":
+        cfg = cfg.with_policy(policy, k_f=0.5, d_f=0.5, block_size=8,
+                              local_window=4, min_k=4)
+    return cfg
+
+
+def _serve(params, cfg, prompts, *, cache, max_new=4, smax=64, n_slots=2,
+           n_pages=None, **kw):
+    eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                             page_size=8, prefill_chunk=8, n_pages=n_pages,
+                             prefix_cache=cache, **kw)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(3000)
+    assert all(r.done for r in reqs)
+    return eng, [r.out for r in reqs]
+
+
+# ===================================================================
+# Acceptance: greedy outputs bit-identical with the cache on vs off
+# (shareable families actually hit; unshareable families bypass)
+# ===================================================================
+
+MATRIX = [(a, p)
+          for a in ("llama2-7b", "mixtral-8x22b", "hymba-1.5b")
+          for p in ("full", "loki", "loki_block")]
+
+
+@pytest.mark.parametrize("arch,policy", MATRIX,
+                         ids=[f"{a}-{p}" for a, p in MATRIX])
+def test_prefix_cache_identity_matrix(arch, policy):
+    cfg = _cfg(arch, policy)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    base = (np.arange(24) * 11 + 3) % cfg.vocab        # shared system prompt
+    prompts = [np.concatenate([base,
+                               (np.arange(5 + i) * 7 + 2 + i) % cfg.vocab])
+               for i in range(3)]
+    eng_on, outs_on = _serve(params, cfg, prompts, cache=True)
+    eng_off, outs_off = _serve(params, cfg, prompts, cache=False)
+    assert outs_on == outs_off, (arch, policy, outs_on, outs_off)
+    if CS.prefix_shareable(cfg)[0]:
+        # 3 requests > 2 slots: the late admission sees the registered base
+        assert eng_on.prefix_caching
+        assert eng_on.n_prefix_hit_tokens >= 24
+        assert (eng_on.n_prefill_computed_tokens
+                < eng_off.n_prefill_computed_tokens)
+    else:
+        # hymba (StateSlot) / mixtral (WindowPagedAttn): transparent bypass
+        assert not eng_on.prefix_caching
+        assert eng_on.n_prefix_hit_tokens == 0
+    assert eng_off.n_prefix_hit_tokens == 0
+
+
+def test_unshareable_reasons_name_the_component():
+    ok, _ = CS.prefix_shareable(get_smoke_config("llama2-7b"))
+    assert ok
+    for arch, frag in [("mixtral-8x22b", "WindowPagedAttn"),
+                       ("hymba-1.5b", "StateSlot"),
+                       ("whisper-small", "CrossAttnStatic"),
+                       ("xlstm-125m", "no paged-attention")]:
+        ok, why = CS.prefix_shareable(get_smoke_config(arch))
+        assert not ok and frag in why, (arch, why)
+
+
+# ===================================================================
+# COW divergence at the shared tail page
+# ===================================================================
+
+def test_cow_divergence_at_tail_page():
+    """B's prompt matches A's first 20 tokens: pages 0-1 fully, page 2
+    only rows 0-3 (the partial tail). A is still decoding — it reads page
+    2 every step — so B must copy-on-write it before prefilling its own
+    tokens, leaving the donor intact: A's continuation is unchanged and a
+    later rerun of A's prompt still full-hits A's registered pages."""
+    cfg = _cfg("llama2-7b", "full")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    a = (np.arange(33) * 11 + 3) % cfg.vocab           # n_pre=32: 4 pages
+    b = np.concatenate([a[:20], (np.arange(12) * 13 + 7) % cfg.vocab])
+    solo_a = _serve(params, cfg, [a], cache=False, n_slots=1, max_new=16,
+                    smax=64)[1][0]
+    solo_b = _serve(params, cfg, [b], cache=False, n_slots=1, max_new=4,
+                    smax=64)[1][0]
+
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=64, page_size=8,
+                             prefill_chunk=8, prefix_cache=True)
+    ra = Request(rid=0, prompt=a.copy(), max_new=16)
+    eng.submit(ra)
+    while not eng.live.any():                          # a fully prefilled,
+        eng.tick()                                     # pages registered
+    rb = Request(rid=1, prompt=b.copy(), max_new=4)
+    eng.submit(rb)                                     # shares live a's tail
+    eng.run_until_done(400)
+    assert ra.done and rb.done
+
+    assert eng.n_cow_copies == 1                       # b diverged mid-page
+    assert ra.out == solo_a                            # donor unperturbed
+    assert rb.out == solo_b
+
+    rerun = Request(rid=2, prompt=a.copy(), max_new=16)
+    eng.submit(rerun)
+    eng.run_until_done(400)
+    assert rerun.out == solo_a
+    assert eng.n_prefix_hit_tokens >= 20 + 32          # b's 20 + rerun's 32
+
+
+def test_cow_sole_reader_takes_ownership_without_copy():
+    """When the donor request already finished (the tail page is cached
+    but nobody else references it), COW degenerates to taking ownership:
+    the index entry is dropped, no copy is paid, and outputs stay exact."""
+    cfg = _cfg("llama2-7b", "full")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    a = (np.arange(33) * 11 + 3) % cfg.vocab
+    b = np.concatenate([a[:20], (np.arange(12) * 13 + 7) % cfg.vocab])
+
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=64, page_size=8,
+                             prefill_chunk=8, prefix_cache=True)
+    outs = []
+    for i, p in enumerate([a, b]):                     # sequential: a done
+        r = Request(rid=i, prompt=p.copy(), max_new=4)
+        eng.submit(r)
+        eng.run_until_done(300)
+        assert r.done
+        outs.append(r.out)
+    assert eng.n_cow_copies == 0                       # ownership, no copy
+    assert eng.n_prefix_hit_tokens >= 20
+
+    _, outs_off = _serve(params, cfg, [a, b], cache=False, n_slots=1)
+    assert outs == outs_off
+
+
+# ===================================================================
+# Eviction ordering: LRU cached pages are reclaimed BEFORE preemption
+# ===================================================================
+
+def test_eviction_under_pressure_before_preemption():
+    cfg = _cfg("llama2-7b", "full")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=8, n_pages=9,  # 8 usable pages
+                             prefix_cache=True)
+    warm = Request(rid=0, prompt=(np.arange(17) * 11 + 3) % cfg.vocab,
+                   max_new=2)
+    eng.submit(warm)
+    eng.run_until_done(200)
+    assert eng.pool.cached_pages >= 2                  # warm's full pages
+
+    # two fresh-prefix requests that together need every usable page: the
+    # pool must reclaim warm's cached pages, not preempt anybody
+    prompts = [(np.arange(20) * 7 + 5 + i) % cfg.vocab for i in range(2)]
+    reqs = [Request(rid=1 + i, prompt=p.copy(), max_new=12)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(400)
+    assert all(r.done for r in reqs)
+    assert eng.pool.n_evicted >= 1
+    assert eng.n_preempted == 0
+
+    _, outs_off = _serve(params, cfg, prompts, cache=False, max_new=12,
+                         smax=32)
+    assert [r.out for r in reqs] == outs_off
+
+
+def test_preemption_with_shared_pages_stays_exact():
+    """Tight pool + shared prefixes: preemption releases references and
+    never frees shared pages out from under their other readers; greedy
+    outputs match the cache-off run (which preempts too)."""
+    cfg = _cfg("llama2-7b", "full")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    base = (np.arange(16) * 5 + 1) % cfg.vocab
+    prompts = [np.concatenate([base, (np.arange(3 + i) * 7 + i) % cfg.vocab])
+               for i in range(4)]
+    eng_on, outs_on = _serve(params, cfg, prompts, cache=True, max_new=14,
+                             smax=32, n_pages=6)
+    eng_off, outs_off = _serve(params, cfg, prompts, cache=False,
+                               max_new=14, smax=32, n_pages=6)
+    assert eng_on.n_preempted > 0 and eng_off.n_preempted > 0
+    assert outs_on == outs_off
+    # every reference was returned: nothing is still marked in use
+    assert eng_on.pool.used_pages == 0
+    assert (eng_on.pool.free_pages + eng_on.pool.cached_pages
+            == eng_on.pool.n_pages - 1)
+
+
+# ===================================================================
+# Hit-rate counters
+# ===================================================================
+
+def test_hit_rate_counters_shared_system_prompt():
+    cfg = _cfg("llama2-7b", "full")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    base = (np.arange(24) * 11 + 3) % cfg.vocab
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=64, page_size=8,
+                             prefill_chunk=8, prefix_cache=True)
+    for i in range(3):                       # sequential: later ones hit
+        tail = (np.arange(4) * 7 + i) % cfg.vocab
+        r = Request(rid=i, prompt=np.concatenate([base, tail]), max_new=3)
+        eng.submit(r)
+        eng.run_until_done(200)
+        assert r.done
+    assert eng.pool.n_lookups == 3
+    assert eng.pool.n_hits == 2                        # first one misses
+    assert eng.n_prefix_hit_tokens >= 2 * 24
+    assert 0.0 < eng.prefix_hit_rate() < 1.0
+    assert eng.pool.used_pages == 0                    # all refs returned
+
+
+# ===================================================================
+# PagePool hardening: refcounts, empty spans, accounting, matching
+# ===================================================================
+
+def test_page_pool_refcount_hardening():
+    pool = PagePool(6, 8)
+    free0 = pool.free_pages
+    assert pool.alloc(0) == [] and pool.free_pages == free0
+    assert pool.acquire([]) == []
+    a = pool.alloc(2)
+    pool.acquire([a[0]])                               # refcount 2
+    pool.release([a[0]])
+    pool.release([a[0]])                               # back to the pool
+    with pytest.raises(ValueError, match="double-free"):
+        pool.release([a[0]])                           # below zero raises
+    with pytest.raises(ValueError, match="double-free"):
+        pool.release([a[1], a[1]])                     # underflow in one call
+    with pytest.raises(ValueError, match="unheld"):
+        pool.acquire([a[0]])                           # free page: no owner
+    with pytest.raises(ValueError, match="trash"):
+        pool.acquire([PC.TRASH_PAGE])
+    pool.release([a[1]])
+
+
+def test_page_pool_cached_accounting_and_lru_eviction():
+    pool = PagePool(6, 4)                              # 5 usable pages
+    held = pool.alloc(2)
+    k0 = pool.register(held[0], PC.ROOT_KEY, np.arange(4))
+    pool.register(held[1], k0, np.arange(4, 8))
+    assert pool.used_pages == 2 and pool.cached_pages == 0
+    pool.release(held)                                 # registered -> LRU
+    assert pool.used_pages == 0
+    assert pool.cached_pages == 2 and pool.free_pages == 3
+    assert pool.available_pages == 5
+    got = pool.alloc(4)                                # forces one eviction
+    assert len(got) == 4 and pool.n_evicted == 1
+    with pytest.raises(ValueError, match="full page"):
+        pool.register(got[0], PC.ROOT_KEY, np.arange(3))
+
+
+def test_page_pool_match_prefix_chain_and_partial_tail():
+    pool = PagePool(8, 4)
+    toks = np.arange(12, dtype=np.int32)
+    held = pool.alloc(3)
+    k = PC.ROOT_KEY
+    for i, p in enumerate(held):
+        k = pool.register(p, k, toks[4 * i:4 * i + 4])
+    pool.release(held)
+
+    pages, n, tail, _ = pool.match_prefix(toks, 12)    # exact full-page hit
+    assert pages == held and n == 12 and not tail
+    pool.release(pages)
+
+    q = np.concatenate([toks[:10], [99, 98]]).astype(np.int32)
+    pages, n, tail, _ = pool.match_prefix(q, 12)       # diverges mid-page 2
+    assert pages == held and n == 10 and tail
+    pool.release(pages)
+
+    miss, n, tail, _ = pool.match_prefix(q + 1, 12)    # different page 0
+    assert miss == [] and n == 0 and not tail
+    assert pool.n_lookups == 3 and pool.n_hits == 2

@@ -1,0 +1,268 @@
+"""Policy-driven scheduler phases (PR 5): FIFO vs priority admission,
+priority preemption for a slot, per-tick prefill/decode token budgets,
+and StateSlot snapshot-on-preemption (restore for pure-state families,
+recompute fallback for hybrids)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.policy import (FifoPolicy, PriorityPolicy, TickBudget,
+                                  make_policy)
+from repro.serving.scheduler import PagedServingEngine
+
+
+def _model(arch="qwen2.5-3b"):
+    cfg = get_smoke_config(arch)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _solo(params, cfg, prompt, max_new, smax=48):
+    eng = ServingEngine(params, cfg, n_slots=1, smax=smax)
+    r = Request(rid=0, prompt=prompt.copy(), max_new=max_new)
+    eng.submit(r)
+    eng.run_until_done(500)
+    return r.out
+
+
+def test_make_policy_and_keys():
+    assert isinstance(make_policy("fifo"), FifoPolicy)
+    assert isinstance(make_policy("priority"), PriorityPolicy)
+    p = make_policy(PriorityPolicy())
+    assert isinstance(p, PriorityPolicy)
+    with pytest.raises(ValueError, match="unknown scheduler policy"):
+        make_policy("lifo")
+    hi = Request(rid=0, prompt=np.arange(3), max_new=1, priority=2)
+    lo = Request(rid=1, prompt=np.arange(3), max_new=1, priority=0)
+    assert p.sort_key(hi, 5) < p.sort_key(lo, 0)       # class beats arrival
+    f = make_policy("fifo")
+    assert f.sort_key(hi, 5) > f.sort_key(lo, 0)       # FIFO ignores class
+
+
+def test_priority_admission_order_single_slot():
+    """Both waiting before the first tick: priority admits the urgent one
+    first even though it was submitted second; FIFO keeps arrival order.
+    Outputs stay exact either way."""
+    params, cfg = _model()
+    p_lo = (np.arange(6) * 7 + 2) % cfg.vocab
+    p_hi = (np.arange(9) * 5 + 3) % cfg.vocab
+    solo_lo = _solo(params, cfg, p_lo, 4)
+    solo_hi = _solo(params, cfg, p_hi, 4)
+
+    firsts = {}
+    for pol in ("fifo", "priority"):
+        eng = PagedServingEngine(params, cfg, n_slots=1, smax=48,
+                                 page_size=8, prefill_chunk=4, policy=pol)
+        lo = Request(rid=0, prompt=p_lo.copy(), max_new=4, priority=0)
+        hi = Request(rid=1, prompt=p_hi.copy(), max_new=4, priority=1)
+        eng.submit(lo)
+        eng.submit(hi)
+        eng.run_until_done(400)
+        assert lo.out == solo_lo and hi.out == solo_hi, pol
+        firsts[pol] = (lo.t_first, hi.t_first)
+    assert firsts["fifo"][0] < firsts["fifo"][1]       # arrival order
+    assert firsts["priority"][1] < firsts["priority"][0]
+
+
+def test_priority_preempts_running_lower_class_for_slot():
+    """A strictly-more-urgent arrival takes the only slot mid-decode; the
+    preempted request is folded, requeued and finishes exactly."""
+    params, cfg = _model()
+    p_lo = (np.arange(7) * 7 + 2) % cfg.vocab
+    p_hi = (np.arange(5) * 5 + 3) % cfg.vocab
+    solo_lo = _solo(params, cfg, p_lo, 10)
+    solo_hi = _solo(params, cfg, p_hi, 4)
+
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=48, page_size=8,
+                             prefill_chunk=4, policy="priority")
+    lo = Request(rid=0, prompt=p_lo.copy(), max_new=10, priority=0)
+    eng.submit(lo)
+    for _ in range(5):                   # lo reaches mid-decode
+        eng.tick()
+    assert lo.out and not lo.done
+    hi = Request(rid=1, prompt=p_hi.copy(), max_new=4, priority=1)
+    eng.submit(hi)
+    eng.tick()
+    assert eng.n_preempted >= 1
+    assert eng.slot_req[0] is hi         # hi owns the slot now
+    eng.run_until_done(500)
+    assert hi.done and hi.out == solo_hi
+    assert lo.done and lo.out == solo_lo
+    assert hi.t_done < lo.t_done
+
+
+def test_fifo_never_preempts_for_admission():
+    params, cfg = _model()
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=48, page_size=8,
+                             prefill_chunk=4, policy="fifo")
+    lo = Request(rid=0, prompt=(np.arange(6) * 7 + 2) % cfg.vocab,
+                 max_new=8, priority=0)
+    eng.submit(lo)
+    for _ in range(4):
+        eng.tick()
+    hi = Request(rid=1, prompt=(np.arange(5) * 5 + 3) % cfg.vocab,
+                 max_new=4, priority=9)
+    eng.submit(hi)
+    eng.run_until_done(400)
+    assert eng.n_preempted == 0
+    assert lo.t_done < hi.t_done         # arrival order held
+
+
+# ===================================================================
+# Per-tick token budgets
+# ===================================================================
+
+def test_prefill_budget_spends_multiple_chunks_per_tick():
+    """budget >= whole prompt: admission + all chunks + first decode in
+    one tick. The default budget (one chunk) takes several ticks."""
+    params, cfg = _model()
+    prompt = (np.arange(17) * 7 + 3) % cfg.vocab       # 16 prefill tokens
+
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=48, page_size=8,
+                             prefill_chunk=4, prefill_budget=16)
+    assert eng.budget == TickBudget(prefill_tokens=16, decode_tokens=1)
+    r = Request(rid=0, prompt=prompt.copy(), max_new=3)
+    eng.submit(r)
+    eng.tick()
+    assert len(r.out) == 1               # prefilled AND decoded in tick 0
+    eng.run_until_done(200)
+
+    slow = PagedServingEngine(params, cfg, n_slots=1, smax=48, page_size=8,
+                              prefill_chunk=4)        # legacy: one chunk
+    r2 = Request(rid=1, prompt=prompt.copy(), max_new=3)
+    slow.submit(r2)
+    slow.tick()
+    assert not r2.out and slow._prefill_at[0] == 4
+    slow.run_until_done(200)
+    assert r2.out == r.out               # schedule never changes tokens
+
+
+def test_prefill_budget_shares_one_tick_across_waiting_prompts():
+    params, cfg = _model()
+    prompts = [(np.arange(9 + i) * 7 + i) % cfg.vocab for i in range(2)]
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=48, page_size=8,
+                             prefill_chunk=8, prefill_budget=32)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=2)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.tick()                           # both prompts prefill this tick
+    assert all(len(r.out) == 1 for r in reqs)
+    eng.run_until_done(100)
+    truth = [_solo(params, cfg, p, 2) for p in prompts]
+    assert [r.out for r in reqs] == truth
+
+
+def test_decode_budget_round_robins_and_stays_exact():
+    """decode_tokens=1 with two live streams: slots alternate (neither
+    starves) and per-slot positions keep both streams bit-exact."""
+    params, cfg = _model()
+    prompts = [(np.arange(5 + 3 * i) * 7 + i) % cfg.vocab for i in range(2)]
+    truth = [_solo(params, cfg, p, 6) for p in prompts]
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=48, page_size=8,
+                             prefill_chunk=8, decode_budget=1)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=6)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    done_tick = {}
+    for _ in range(400):
+        if all(r.done for r in reqs):
+            break
+        eng.tick()
+        for r in reqs:
+            if r.done and r.rid not in done_tick:
+                done_tick[r.rid] = eng.ticks
+    assert [r.out for r in reqs] == truth
+    # 12 generated tokens at 1/tick: the streams alternate, so the two
+    # requests finish within a couple of ticks of each other — a drain
+    # that starved one slot until the other finished would leave a gap of
+    # at least max_new ticks
+    assert eng.ticks >= 12
+    assert abs(done_tick[0] - done_tick[1]) <= 3, done_tick
+
+
+# ===================================================================
+# StateSlot snapshot-on-preemption (hymba recompute fallback + xlstm
+# host-snapshot restore), greedy-identity parity
+# ===================================================================
+
+def test_xlstm_priority_preemption_restores_snapshot():
+    """Pure-state family: preemption snapshots the recurrent state to
+    host; re-admission restores it instead of re-running the folded
+    prompt, and the continuation is bit-identical."""
+    params, cfg = _model("xlstm-125m")
+    p_lo = (np.arange(13) * 7 + 2) % cfg.vocab
+    p_hi = (np.arange(5) * 5 + 3) % cfg.vocab
+    solo_lo = _solo(params, cfg, p_lo, 10)
+    solo_hi = _solo(params, cfg, p_hi, 4)
+
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=48, page_size=8,
+                             prefill_chunk=4, policy="priority")
+    lo = Request(rid=0, prompt=p_lo.copy(), max_new=10, priority=0)
+    eng.submit(lo)
+    for _ in range(6):                   # lo is mid-decode
+        eng.tick()
+    assert lo.out and not lo.done
+    hi = Request(rid=1, prompt=p_hi.copy(), max_new=4, priority=1)
+    eng.submit(hi)
+    eng.run_until_done(500)
+    assert eng.n_preempted >= 1
+    assert eng.n_state_restores >= 1     # restore path actually ran
+    assert hi.done and hi.out == solo_hi
+    assert lo.done and lo.out == solo_lo
+
+
+def test_xlstm_mid_prefill_preemption_restores_partial_state():
+    """Preempting a slot that is still prefilling snapshots the state at
+    its chunk boundary; re-admission resumes from that token, not from
+    scratch — and stays exact."""
+    params, cfg = _model("xlstm-125m")
+    p_lo = (np.arange(21) * 7 + 2) % cfg.vocab         # 20 prefill tokens
+    p_hi = (np.arange(4) * 5 + 3) % cfg.vocab
+    solo_lo = _solo(params, cfg, p_lo, 5)
+    solo_hi = _solo(params, cfg, p_hi, 3)
+
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=48, page_size=8,
+                             prefill_chunk=4, policy="priority")
+    lo = Request(rid=0, prompt=p_lo.copy(), max_new=5, priority=0)
+    eng.submit(lo)
+    eng.tick()                           # one chunk in, still prefilling
+    assert 0 in eng._prefill_at and not lo.out
+    hi = Request(rid=1, prompt=p_hi.copy(), max_new=3, priority=1)
+    eng.submit(hi)
+    eng.run_until_done(500)
+    assert eng.n_preempted >= 1 and eng.n_state_restores >= 1
+    assert lo.done and lo.out == solo_lo
+    assert hi.done and hi.out == solo_hi
+    # restore resumed mid-prompt: the re-run never recomputed the tokens
+    # the snapshot had already folded in
+    assert eng.n_prefill_computed_tokens < 2 * (len(p_lo) - 1)
+
+
+def test_hymba_priority_preemption_falls_back_to_recompute():
+    """Hybrid (StateSlot + PagedAttn): released K/V pages must be rebuilt
+    anyway, so the snapshot path stays off and recompute reproduces the
+    continuation exactly."""
+    params, cfg = _model("hymba-1.5b")
+    p_lo = (np.arange(9) * 7 + 2) % cfg.vocab
+    p_hi = (np.arange(5) * 5 + 3) % cfg.vocab
+    solo_lo = _solo(params, cfg, p_lo, 8)
+    solo_hi = _solo(params, cfg, p_hi, 3)
+
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=48, page_size=8,
+                             prefill_chunk=4, policy="priority")
+    lo = Request(rid=0, prompt=p_lo.copy(), max_new=8, priority=0)
+    eng.submit(lo)
+    for _ in range(5):
+        eng.tick()
+    hi = Request(rid=1, prompt=p_hi.copy(), max_new=3, priority=1)
+    eng.submit(hi)
+    eng.run_until_done(500)
+    assert eng.n_preempted >= 1
+    assert eng.n_state_restores == 0     # fallback, not restore
+    assert lo.done and lo.out == solo_lo
+    assert hi.done and hi.out == solo_hi
