@@ -33,8 +33,17 @@ asserted identical — caching is exact, the win is skipped prefill):
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke \\
         --workload shared-prefix
 
+``--workload layout`` drives one identical stream through the paged
+engine under each PageLayout (DESIGN.md §10) — native fp16 vs latent-rank
+fp16 vs quantized int8 latent — and reports bytes/page/layer, total pool
+bytes and tok/s per layout (the int8 latent layout must at least halve
+the fp16 page footprint; asserted):
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke \\
+        --workload layout
+
 Results land in ``BENCH_serving.json`` at the repo root (the shared-prefix
-rows merge into the existing report).
+and layout rows merge into the existing report).
 """
 from __future__ import annotations
 
@@ -87,10 +96,12 @@ def _requests(data, n, max_new, base_len=16, stride=6, vocab=512, cfg=None):
 
 
 def _drain(eng, reqs):
+    """Drive a stream through any engine via the Engine protocol (submit /
+    drain / stats) — no branching on the engine kind."""
     for r in reqs:
         eng.submit(r)
     t0 = time.time()
-    eng.run_until_done(max_ticks=20_000)
+    eng.drain(max_ticks=20_000)
     dt = time.time() - t0
     assert all(r.done for r in reqs), "engine failed to drain the queue"
     toks = sum(len(r.out) for r in reqs)
@@ -106,7 +117,7 @@ def _drain(eng, reqs):
         "latency_p99_s": round(p(lats, 0.99), 3),
         "ttft_p50_s": round(p(ttfts, 0.50), 3) if ttfts else None,
         "ttft_p99_s": round(p(ttfts, 0.99), 3) if ttfts else None,
-        "ticks": eng.ticks,
+        "ticks": eng.stats()["ticks"],
     }
 
 
@@ -203,6 +214,58 @@ def shared_prefix_workload(params, cfg, data, *, n_slots, smax, page_size,
     return rows
 
 
+def layout_workload(data, *, n_slots, smax, page_size, chunk, max_new,
+                    n_req, specs=None):
+    """One identical stream per PageLayout through the paged engine.
+
+    The model is the PCA-calibrated bench LM under loki_block — the policy
+    whose decode kernels read latent keys straight off the pages. Rows:
+    bytes/page/layer (K+V rows at the layout's storage width and dtype),
+    total pool bytes (pages × layers, plus the f32 scale sidecars for
+    quantized layouts) and tok/s. The int8 latent layout must cut
+    bytes/page at least 2× vs fp16 — asserted, not just reported."""
+    params, base = common.trained_params()
+    params = common.loki_params()          # pca-basis layouts need the
+    base = common.policy_cfg(              # projections in the params
+        "loki_block", k_f=0.5, d_f=0.5, block_size=8, local_window=4,
+        min_k=4)
+    hd = base.resolved_head_dim
+    specs = specs or ["fp16", f"fp16:pca:r={hd // 2}",
+                      f"int8:pca:r={hd // 2}"]
+    rows = {}
+    for spec in specs:
+        cfg = base.with_layout(spec)
+        lay = cfg.page_layout
+        eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                 page_size=page_size, prefill_chunk=chunk)
+        # warm drain: compile the chunked-prefill + decode programs for
+        # this layout so tok/s compares steady-state pages, not XLA
+        _drain(eng, _requests(data, 1, 2, vocab=cfg.vocab))
+        row = _drain(eng, _requests(data, n_req, max_new, vocab=cfg.vocab))
+        bpp = lay.bytes_per_page_row(hd, cfg.n_kv_heads) * page_size
+        pool_bytes = bpp * cfg.n_layers * eng.pool.n_pages
+        if lay.quantized:                  # (n_pages,) f32 K + V scales
+            pool_bytes += 2 * 4 * cfg.n_layers * eng.pool.n_pages
+        row.update({
+            "layout": lay.describe(),
+            "bytes_per_page_layer": bpp,
+            "pool_bytes": pool_bytes,
+            "pool_pages": eng.pool.n_pages,
+        })
+        rows[lay.describe()] = row
+        print(f"[layout {lay.describe()}] {bpp} B/page/layer, "
+              f"{row['tok_per_s']} tok/s, {row['ticks']} ticks")
+    fp16 = next((r for k, r in rows.items() if k.startswith("fp16:native")),
+                None)
+    int8 = next((r for k, r in rows.items() if k.startswith("int8")), None)
+    if fp16 and int8:
+        ratio = fp16["bytes_per_page_layer"] / int8["bytes_per_page_layer"]
+        rows["int8_page_reduction_vs_fp16"] = round(ratio, 2)
+        assert ratio >= 2.0, \
+            f"int8 latent pages only {ratio:.2f}x smaller than fp16"
+    return rows
+
+
 def _write_merged(path, update):
     """Update the report in place: each invocation owns its sections
     (standard / families / shared_prefix) and must not erase the others'."""
@@ -231,10 +294,16 @@ def main():
                          "tiny config each through paged vs dense: "
                          + ",".join(FAMILY_ARCHS))
     ap.add_argument("--workload", default="standard",
-                    choices=["standard", "shared-prefix"],
+                    choices=["standard", "shared-prefix", "layout"],
                     help="shared-prefix: N requests over one long system "
                          "prompt, prefix cache on vs off (hit rate, TTFT, "
-                         "tok/s; merged into the existing JSON report)")
+                         "tok/s). layout: the same stream under each "
+                         "--layouts PageLayout (bytes/page, tok/s). Both "
+                         "merge into the existing JSON report")
+    ap.add_argument("--layouts", default="",
+                    help="comma list of PageLayout specs for --workload "
+                         "layout (default: fp16, fp16:pca:r=D/2, "
+                         "int8:pca:r=D/2)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -255,6 +324,17 @@ def main():
 
     params, cfg = common.trained_params()
     data = common.SyntheticLM(common.BENCH_DATA)
+
+    if args.workload == "layout":
+        specs = ([s.strip() for s in args.layouts.split(",") if s.strip()]
+                 or None)
+        rows = layout_workload(
+            data, n_slots=n_slots, smax=smax, page_size=page_size,
+            chunk=chunk, max_new=max_new, n_req=n_req, specs=specs)
+        _write_merged(args.out, {"layouts": rows})
+        print(json.dumps({"layouts": rows}, indent=2))
+        print(f"\nwrote {args.out}")
+        return
 
     if args.workload == "shared-prefix":
         rows = shared_prefix_workload(

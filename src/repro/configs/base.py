@@ -28,6 +28,101 @@ class SSMConfig:
     n_heads: int = 4              # mlstm/slstm heads
 
 
+#: storage bytes per element for each PageLayout dtype
+LAYOUT_ITEMSIZE = {"fp32": 4, "fp16": 2, "bf16": 2, "int8": 1, "fp8": 1}
+_LAYOUT_QMAX = {"int8": 127.0, "fp8": 448.0}   # fp8 = e4m3 max normal
+
+
+@dataclasses.dataclass(frozen=True)
+class PageLayout:
+    """Declarative physical layout of paged KV-cache components.
+
+    Single source of truth for page allocation, the store path (prefill
+    chunk / decode append) and every read path (XLA views and the Pallas
+    decode kernels). One layout per CacheSpec component; ``StateSlot``
+    stays full-precision native and takes no layout.
+
+    dtype  — page storage dtype: fp32 | fp16 | bf16 | int8 | fp8 (e4m3).
+             Quantized dtypes store one f32 amax scale per page next to
+             the page table (Double Sparsity, arXiv 2408.07092).
+    basis  — "native" stores keys as produced; "pca" stores keys already
+             projected into the calibrated PCA basis (SALS, arXiv
+             2510.24273). Exact at full rank by Lemma 4.1 (orthogonal P
+             preserves q·k); queries are rotated at read time and the
+             back-projection folds into the attention epilogue (softmax
+             weights are basis-free, V stays native).
+    rank   — latent K width under basis="pca": keep only the leading r
+             PCA dims (0 = full head_dim). V is never truncated.
+    scale_granularity — only "page" is implemented: one scale per
+             physical page per pool (K and V scales are separate).
+    """
+    dtype: str = "fp32"
+    basis: str = "native"
+    rank: int = 0
+    scale_granularity: str = "page"
+
+    def __post_init__(self):
+        if self.dtype not in LAYOUT_ITEMSIZE:
+            raise ValueError(f"PageLayout dtype {self.dtype!r}; "
+                             f"have {sorted(LAYOUT_ITEMSIZE)}")
+        if self.basis not in ("native", "pca"):
+            raise ValueError(f"PageLayout basis {self.basis!r}")
+        if self.rank and self.basis != "pca":
+            raise ValueError("PageLayout rank requires basis='pca'")
+        if self.rank < 0:
+            raise ValueError("PageLayout rank must be >= 0")
+        if self.scale_granularity != "page":
+            raise ValueError("only per-page scales are implemented")
+
+    # ------------------------------------------------------------ queries
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype in _LAYOUT_QMAX
+
+    @property
+    def qmax(self) -> float:
+        """Largest representable magnitude of the quantized dtype."""
+        return _LAYOUT_QMAX[self.dtype]
+
+    @property
+    def itemsize(self) -> int:
+        return LAYOUT_ITEMSIZE[self.dtype]
+
+    def k_width(self, head_dim: int) -> int:
+        """Stored K feature width: latent rank under pca, else head_dim."""
+        if self.basis == "pca" and self.rank:
+            return min(self.rank, head_dim)
+        return head_dim
+
+    def bytes_per_page_row(self, head_dim: int, n_kv_heads: int) -> int:
+        """K+V bytes of one token row (scales amortize over the page)."""
+        per = self.itemsize * n_kv_heads
+        return per * (self.k_width(head_dim) + head_dim)
+
+    # ------------------------------------------------------------- parse
+
+    @classmethod
+    def parse(cls, s: str) -> "PageLayout":
+        """Parse ``"fp16"`` / ``"fp16:pca"`` / ``"int8:pca:r=32"`` specs."""
+        parts = [p for p in s.strip().split(":") if p]
+        if not parts:
+            return cls()
+        dtype, basis, rank = parts[0], "native", 0
+        for tok in parts[1:]:
+            if tok in ("native", "pca"):
+                basis = tok
+            elif tok.startswith("r="):
+                rank = int(tok[2:])
+            else:
+                raise ValueError(f"bad layout token {tok!r} in {s!r}")
+        return cls(dtype=dtype, basis=basis, rank=rank)
+
+    def describe(self) -> str:
+        r = f":r={self.rank}" if self.rank else ""
+        return f"{self.dtype}:{self.basis}{r}"
+
+
 @dataclasses.dataclass(frozen=True)
 class LokiConfig:
     """Paper technique knobs (Section 4)."""
@@ -74,6 +169,9 @@ class ModelConfig:
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None
     loki: LokiConfig = dataclasses.field(default_factory=LokiConfig)
+    # physical layout of paged KV pages (serving); default is today's
+    # fp32/native layout so training and the dense engine are untouched
+    page_layout: PageLayout = dataclasses.field(default_factory=PageLayout)
     # decode attention policy: full|loki|loki_block|exact_topk|pcaattn|h2o
     policy: str = "full"
     # hybrid: which layers are attention (hymba runs attn ∥ mamba inside a block)
@@ -112,6 +210,11 @@ class ModelConfig:
     def with_loki(self, **kw) -> "ModelConfig":
         lk = dataclasses.replace(self.loki, enabled=True, **kw)
         return dataclasses.replace(self, policy="loki", loki=lk)
+
+    def with_layout(self, layout) -> "ModelConfig":
+        if isinstance(layout, str):
+            layout = PageLayout.parse(layout)
+        return dataclasses.replace(self, page_layout=layout)
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -158,7 +158,9 @@ def gather_heads(cache, idx):
 def attend_selected(q, k_sel, v_sel, valid, *, logit_scale=None):
     """Exact attention over a selected key subset.
 
-    q (B,H,D); k_sel, v_sel (B,Hkv,G,K,D); valid (B,Hkv,G,K) bool."""
+    q (B,H,W); k_sel (B,Hkv,G,K,W); v_sel (B,Hkv,G,K,D); valid
+    (B,Hkv,G,K) bool. ``W <= D``: rank-r layouts store truncated latent
+    keys, so the output width follows V, not the query."""
     b, h, d = q.shape
     n_kv = k_sel.shape[1]
     scale = logit_scale if logit_scale is not None else d ** -0.5
@@ -168,4 +170,4 @@ def attend_selected(q, k_sel, v_sel, valid, *, logit_scale=None):
     scores = jnp.where(valid, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(v_sel.dtype)
     out = jnp.einsum("bhgk,bhgkd->bhgd", w, v_sel)
-    return out.reshape(b, h, d)
+    return out.reshape(b, h, v_sel.shape[-1])

@@ -42,12 +42,15 @@ def resolve_backend(backend: str, platform: Optional[str] = None) -> str:
 
 
 def _token_fallback(q_rope, k_hat_cache, v_cache, cur_len, proj, cfg,
-                    *, sliding_window, logit_scale, page_table, page_size):
-    """Token-granular jnp path; gathers the logical view first when paged."""
+                    *, sliding_window, logit_scale, page_table, page_size,
+                    k_scale=None, v_scale=None):
+    """Token-granular jnp path; gathers the logical view first when paged
+    (dequantizing through the per-page scale sidecars when present)."""
     if page_table is not None:
-        from repro.serving.paged_cache import gather_logical
-        k_hat_cache = gather_logical(k_hat_cache, page_table, page_size)
-        v_cache = gather_logical(v_cache, page_table, page_size)
+        from repro.serving.paged_cache import gather_logical_dq
+        k_hat_cache = gather_logical_dq(k_hat_cache, k_scale,
+                                        page_table, page_size)
+        v_cache = gather_logical_dq(v_cache, v_scale, page_table, page_size)
     return loki.loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
                             cfg, sliding_window=sliding_window,
                             logit_scale=logit_scale)
@@ -56,27 +59,38 @@ def _token_fallback(q_rope, k_hat_cache, v_cache, cur_len, proj, cfg,
 def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
                       cfg: LokiConfig, *, sliding_window: int = 0,
                       logit_scale=None, page_table=None, page_size: int = 0,
+                      k_scale=None, v_scale=None,
                       interpret: Optional[bool] = None):
     """Block-granular Loki decode through the configured backend.
 
-    q_rope (B,H,D); k_hat_cache/v_cache (B,Smax,Hkv,D); cur_len (B,) or
-    scalar; proj (Hkv,D,D). Returns (B,H,D).
+    q_rope (B,H,D); k_hat_cache (B,Smax,Hkv,W) with W <= D the stored
+    latent key width (rank-r PageLayout truncation; W = D full basis);
+    v_cache (B,Smax,Hkv,D); cur_len (B,) or scalar; proj (Hkv,D,D).
+    Returns (B,H,D).
 
     ``sliding_window`` and ``cfg.local_window`` are honored identically on
     every backend (the token path's semantics). With ``page_table``/
     ``page_size`` the caches are the serving engine's shared page pools
-    (R,Hkv,D): the Pallas kernels index their block DMAs through the table,
-    the jnp paths gather the logical view through the same table."""
+    (R,Hkv,·): the Pallas kernels index their block DMAs through the table,
+    the jnp paths gather the logical view through the same table. Quantized
+    layouts pass the pools' per-page f32 ``k_scale``/``v_scale`` sidecars;
+    every path dequantizes behind its DMA/gather, never in HBM."""
     backend = resolve_backend(cfg.backend)
     paged = page_table is not None
     b, h = q_rope.shape[0], q_rope.shape[1]
     if paged:
-        n_kv, dim = k_hat_cache.shape[-2], k_hat_cache.shape[-1]
+        n_kv, kd = k_hat_cache.shape[-2], k_hat_cache.shape[-1]
+        dim = v_cache.shape[-1]
         smax = page_table.shape[1] * page_size
     else:
-        _, smax, n_kv, dim = k_hat_cache.shape
+        _, smax, n_kv, kd = k_hat_cache.shape
+        dim = v_cache.shape[-1]
     g = h // n_kv
-    d = min(max(int(cfg.d_f * dim), 8), dim)
+    if logit_scale is None and kd < dim:
+        # rank-r keys: the softmax temperature is set by the true head_dim,
+        # not the truncated key width — pin it before any backend's default
+        logit_scale = dim ** -0.5
+    d = min(max(int(cfg.d_f * dim), 8), kd)
     plan = tuning.plan_decode(smax, dim, g, d, cfg.block_size,
                               itemsize=jnp.dtype(k_hat_cache.dtype).itemsize)
     if paged and plan is not None and page_size % plan.block_size:
@@ -84,8 +98,9 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
         # straddle two (non-adjacent) physical pages
         plan = None
     pargs = dict(page_table=page_table, page_size=page_size)
+    qargs = dict(k_scale=k_scale, v_scale=v_scale)
     fb_args = dict(sliding_window=sliding_window, logit_scale=logit_scale,
-                   page_table=page_table, page_size=page_size)
+                   page_table=page_table, page_size=page_size, **qargs)
 
     if backend == "xla":
         if smax % cfg.block_size:
@@ -97,7 +112,8 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
             cfg = dataclasses.replace(cfg, block_size=plan.block_size)
         return loki.loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len,
                                       proj, cfg, logit_scale=logit_scale,
-                                      sliding_window=sliding_window, **pargs)
+                                      sliding_window=sliding_window,
+                                      **pargs, **qargs)
     if plan is None:
         # no viable tiling: jnp fallback, keeping the kernel's group-shared
         # selection when the block decomposition exists at all
@@ -107,7 +123,8 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
                                           cur_len, proj, cfg,
                                           logit_scale=logit_scale,
                                           sliding_window=sliding_window,
-                                          group_select=True, **pargs)
+                                          group_select=True,
+                                          **pargs, **qargs)
         return _token_fallback(q_rope, k_hat_cache, v_cache, cur_len, proj,
                                cfg, **fb_args)
 
@@ -122,6 +139,7 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
                        -(-sliding_window // plan.block_size) + 1)
     qg = q_rope.reshape(b, n_kv, g, dim)
     q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    q_hat = q_hat[..., :kd]
     cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -130,5 +148,5 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
     out = fn(q_hat, k_hat_cache, v_cache, cur, d=d, k_blocks=k_blocks,
              block_size=plan.block_size, scale=logit_scale,
              local_window=cfg.local_window, sliding_window=sliding_window,
-             interpret=interpret, **pargs)
+             interpret=interpret, **pargs, **qargs)
     return out.reshape(b, h, dim)

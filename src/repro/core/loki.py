@@ -85,21 +85,23 @@ def loki_decode_chunked(q_rope, k_hat_cache, v_cache, cur_len, proj,
     from repro.sharding.rules import constrain
     b, h, dim = q_rope.shape
     smax = k_hat_cache.shape[1]
+    kd = k_hat_cache.shape[-1]        # stored key width (latent rank <= D)
     nc = cfg.n_chunks
     assert nc > 0 and smax % nc == 0
     sc = smax // nc
-    d = max(int(cfg.d_f * dim), 8)
+    d = min(max(int(cfg.d_f * dim), 8), kd)
     n_kv = proj.shape[0]
     g = h // n_kv
 
     qg = q_rope.reshape(b, n_kv, g, dim)
-    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg,
+                       proj.astype(q_rope.dtype))[..., :kd]
     scale = logit_scale if logit_scale is not None else dim ** -0.5
 
     # chunk view of the cache: (B, nc, Sc, Hkv, D); nc rides the kv_seq shards
-    kc = k_hat_cache.reshape(b, nc, sc, n_kv, dim)
+    kc = k_hat_cache.reshape(b, nc, sc, n_kv, kd)
     kc = constrain(kc, ("batch", "kv_seq", None, "kv_heads", None))
-    vc = v_cache.reshape(b, nc, sc, n_kv, dim)
+    vc = v_cache.reshape(b, nc, sc, n_kv, v_cache.shape[-1])
     vc = constrain(vc, ("batch", "kv_seq", None, "kv_heads", None))
 
     # approximate scores from the leading d PCA dims, chunk-local
@@ -152,8 +154,8 @@ def loki_decode_chunked(q_rope, k_hat_cache, v_cache, cur_len, proj,
     v_sel = jnp.take_along_axis(vcx, idx_g[..., None], axis=3)
     k_sel = constrain(k_sel, ("batch", "kv_seq", "kv_heads", None, None))
     v_sel = constrain(v_sel, ("batch", "kv_seq", "kv_heads", None, None))
-    k_sel = k_sel.reshape(b, nc, n_kv, g, kpc, dim)
-    v_sel = v_sel.reshape(b, nc, n_kv, g, kpc, dim)
+    k_sel = k_sel.reshape(b, nc, n_kv, g, kpc, kd)
+    v_sel = v_sel.reshape(b, nc, n_kv, g, kpc, v_cache.shape[-1])
 
     # exact scores over the union; softmax across (nc, kpc) jointly
     scores = jnp.einsum("bhgd,bchgkd->bhgck", q_hat * scale, k_sel,
@@ -173,24 +175,30 @@ def loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
     """Decode attention with Loki (Algorithm 1, lines 3-9).
 
     q_rope       (B,H,D)    post-RoPE query (original basis)
-    k_hat_cache  (B,Smax,Hkv,D) keys already in PCA basis
+    k_hat_cache  (B,Smax,Hkv,W) keys already in PCA basis; W <= D is the
+                 stored width (the PageLayout's latent rank under rank-r
+                 pages, D otherwise — exact at W == D by Lemma 4.1)
     v_cache      (B,Smax,Hkv,D)
     proj         (Hkv,D,D)  PCA projection for this layer
     Returns (B,H,D).
     """
     b, h, dim = q_rope.shape
     smax = k_hat_cache.shape[1]
-    d = max(int(cfg.d_f * dim), 8)
+    kd = k_hat_cache.shape[-1]
+    d = min(max(int(cfg.d_f * dim), 8), kd)
+    # sqrt(D) scaling regardless of the stored key width (Algorithm 2)
+    scale = logit_scale if logit_scale is not None else dim ** -0.5
 
-    # line 3: rotate the query into the PCA basis
+    # line 3: rotate the query into the PCA basis (truncated to the
+    # stored width — the trailing components have no cached counterpart)
     n_kv = proj.shape[0]
     qg = q_rope.reshape(b, n_kv, h // n_kv, dim)
     q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
-    q_hat = q_hat.reshape(b, h, dim)
+    q_hat = q_hat.reshape(b, h, dim)[..., :kd]
 
     # line 5: approximate scores from the leading d PCA components
     approx = decode_scores(q_hat, k_hat_cache, d_slice=d,
-                           logit_scale=logit_scale)
+                           logit_scale=scale)
     m = length_mask(smax, cur_len)
     if sliding_window:
         m = m & window_mask(smax, cur_len, sliding_window)
@@ -207,13 +215,14 @@ def loki_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
 
     # lines 8-9: exact attention in the PCA basis over the selection
     return attend_selected(q_hat, k_sel, v_sel, valid,
-                           logit_scale=logit_scale)
+                           logit_scale=scale)
 
 
 def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
                       cfg: LokiConfig, *, sliding_window: int = 0,
                       logit_scale=None, group_select: bool = False,
-                      page_table=None, page_size: int = 0):
+                      page_table=None, page_size: int = 0,
+                      k_scale=None, v_scale=None):
     """Block-granular Loki (the TPU-native formulation; jnp reference).
 
     Selection happens over per-block maxima of the approximate scores, and
@@ -237,23 +246,27 @@ def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
     logical per-slot view through the same table the fused kernel indexes —
     the jnp oracle for paged decode (DESIGN.md §7)."""
     if page_table is not None:
-        from repro.serving.paged_cache import gather_logical
-        k_hat_cache = gather_logical(k_hat_cache, page_table, page_size)
-        v_cache = gather_logical(v_cache, page_table, page_size)
+        from repro.serving.paged_cache import gather_logical_dq
+        k_hat_cache = gather_logical_dq(k_hat_cache, k_scale,
+                                        page_table, page_size)
+        v_cache = gather_logical_dq(v_cache, v_scale,
+                                    page_table, page_size)
     b, h, dim = q_rope.shape
     smax = k_hat_cache.shape[1]
+    kd = k_hat_cache.shape[-1]        # stored key width (latent rank <= D)
     bs = cfg.block_size
     assert smax % bs == 0, "cache length must be a multiple of block_size"
-    d = max(int(cfg.d_f * dim), 8)
+    d = min(max(int(cfg.d_f * dim), 8), kd)
     n_blocks = smax // bs
+    scale = logit_scale if logit_scale is not None else dim ** -0.5
 
     n_kv = proj.shape[0]
     qg = q_rope.reshape(b, n_kv, h // n_kv, dim)
     q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
-    q_hat = q_hat.reshape(b, h, dim)
+    q_hat = q_hat.reshape(b, h, dim)[..., :kd]
 
     approx = decode_scores(q_hat, k_hat_cache, d_slice=d,
-                           logit_scale=logit_scale)
+                           logit_scale=scale)
     m = length_mask(smax, cur_len)
     if sliding_window:
         m = m & window_mask(smax, cur_len, sliding_window)
@@ -287,4 +300,4 @@ def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
     k_sel = gather_heads(k_hat_cache, idx)
     v_sel = gather_heads(v_cache, idx)
     return attend_selected(q_hat, k_sel, v_sel, valid,
-                           logit_scale=logit_scale)
+                           logit_scale=scale)

@@ -60,7 +60,7 @@ NEG_INF = -1e30
 def _score_and_select(ln, q_hat, kd_src, kd_buf, scores, sem_kd,
                       write_sel, *, d: int, bs: int, nb: int, nb_pad: int,
                       k_blocks: int, scale: float, local_window: int = 0,
-                      sliding_window: int = 0):
+                      sliding_window: int = 0, k_scale_at=None):
     """Phases 1-2: stream d-slices, keep block maxima in VMEM, emit top-k.
 
     ``kd_src(j)`` returns the HBM ref slice holding block j's leading-d
@@ -100,6 +100,11 @@ def _score_and_select(ln, q_hat, kd_src, kd_buf, scores, sem_kd,
 
         kd_copy(j, slot).wait()
         kd = kd_buf[slot].astype(jnp.float32)              # (bs, d)
+        if k_scale_at is not None:
+            # quantized layout: per-page scale rides in SMEM; the multiply
+            # happens here, inside the DMA epilogue — HBM only ever moves
+            # the narrow codes (DESIGN.md §10)
+            kd = kd * k_scale_at(j)
         s = jax.lax.dot_general(qd, kd, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
@@ -125,10 +130,14 @@ def _score_and_select(ln, q_hat, kd_src, kd_buf, scores, sem_kd,
         scores[...] = jnp.where(lanes == idx, NEG_INF, row)
 
 
-def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
-                  nb_pad: int, k_blocks: int, scale: float, g: int,
-                  dim: int, local_window: int, sliding_window: int):
-    if paged:
+def _fused_kernel(*args, paged: bool, quant: bool, ps: int, d: int, bs: int,
+                  nb: int, nb_pad: int, k_blocks: int, scale: float, g: int,
+                  kdim: int, dim: int, local_window: int,
+                  sliding_window: int):
+    if quant:
+        (len_ref, pt_ref, q_ref, k_ref, v_ref, ksc_ref, vsc_ref, out_ref,
+         kd_buf, kbuf, vbuf, scores, sel, sem_kd, sem_kv) = args
+    elif paged:
         (len_ref, pt_ref, q_ref, k_ref, v_ref, out_ref,
          kd_buf, kbuf, vbuf, scores, sel, sem_kd, sem_kv) = args
     else:
@@ -137,7 +146,7 @@ def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
     b = pl.program_id(0)
     h = pl.program_id(1)
     ln = len_ref[b]
-    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, W)
 
     def k_slice(ref, blk, width):
         """HBM source for (logical) block ``blk``: direct for contiguous
@@ -149,6 +158,11 @@ def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
             return ref.at[pl.ds(row, bs), h, pl.ds(0, width)]
         return ref.at[b, pl.ds(tok, bs), h, pl.ds(0, width)]
 
+    def page_of(blk):
+        # blocks tile pages exactly (ps % bs == 0), so one physical page —
+        # hence one quantization scale — covers the whole DMA'd block
+        return pt_ref[b, (blk * bs) // ps]
+
     def write_sel(t, idx):
         sel[t] = idx
 
@@ -156,9 +170,11 @@ def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
                       sem_kd, write_sel, d=d, bs=bs, nb=nb, nb_pad=nb_pad,
                       k_blocks=k_blocks, scale=scale,
                       local_window=local_window,
-                      sliding_window=sliding_window)
+                      sliding_window=sliding_window,
+                      k_scale_at=(lambda j: ksc_ref[page_of(j), 0])
+                      if quant else None)
 
-    qs = q * scale                                         # (G, D)
+    qs = q * scale                                         # (G, W)
 
     def att_blk(t, carry):
         m_prev, l_prev, acc = carry
@@ -169,7 +185,7 @@ def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
         def _fetch():
             # -1 sentinel (exhausted selection): skip the DMA; the stale
             # buffer contents are fully masked below
-            ck = pltpu.make_async_copy(k_slice(k_ref, safe, dim), kbuf,
+            ck = pltpu.make_async_copy(k_slice(k_ref, safe, kdim), kbuf,
                                        sem_kv.at[0])
             cv = pltpu.make_async_copy(k_slice(v_ref, safe, dim), vbuf,
                                        sem_kv.at[1])
@@ -178,7 +194,9 @@ def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
             ck.wait()
             cv.wait()
 
-        kb = kbuf[...].astype(jnp.float32)                 # (bs, D)
+        kb = kbuf[...].astype(jnp.float32)                 # (bs, W)
+        if quant:
+            kb = kb * ksc_ref[page_of(safe), 0]
         s = jax.lax.dot_general(qs, kb, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         pos = safe * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
@@ -193,6 +211,8 @@ def _fused_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
             * (m_prev > NEG_INF / 2)
         p = jnp.exp(s - m_safe[:, None]) * live            # (G, bs)
         vb = vbuf[...].astype(jnp.float32)                 # (bs, D)
+        if quant:
+            vb = vb * vsc_ref[page_of(safe), 0]
         acc = acc * alpha[:, None] + jnp.dot(
             p, vb, preferred_element_type=jnp.float32)
         return m_new, l_prev * alpha + jnp.sum(p, axis=1), acc
@@ -225,16 +245,26 @@ def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
                       block_size: int = 128, scale=None,
                       local_window: int = 0, sliding_window: int = 0,
                       page_table=None, page_size: int = 0,
+                      k_scale=None, v_scale=None,
                       interpret: bool = False):
-    """Single-pass Loki decode. (B,Hkv,G,D),(B,S,Hkv,D),(B,S,Hkv,D),(B,)
+    """Single-pass Loki decode. (B,Hkv,G,W),(B,S,Hkv,W),(B,S,Hkv,D),(B,)
     -> (B,Hkv,G,D). Requires cur_len >= 1 per row (the decode invariant:
     the new token is already in the cache). With ``page_table``/``page_size``
-    the caches are pooled (R,Hkv,D) and block DMAs resolve through the
-    table."""
-    b, n_kv, g, dim = q_hat.shape
+    the caches are pooled (R,Hkv,W) and block DMAs resolve through the
+    table. ``W <= D`` is the stored latent key width (rank-r PageLayout);
+    queries arrive already projected/truncated to W, values stay full D.
+    Quantized layouts pass ``k_scale``/``v_scale`` (n_pages,) f32 per-page
+    scales (paged only); the kernel multiplies them in right after each
+    block's DMA lands — dequantization never touches HBM."""
+    b, n_kv, g, kdim = q_hat.shape
+    dim = v.shape[-1]
+    assert k_hat.shape[-1] == kdim, "q_hat/k_hat latent widths must match"
     bs = block_size
     paged, s_len, prefetch = _paged_args(q_hat, k_hat, cur_len, page_table,
                                          page_size, bs)
+    quant = k_scale is not None
+    assert not quant or (paged and v_scale is not None), \
+        "per-page scales require paged caches"
     assert s_len % bs == 0, "cache length must be a multiple of block_size"
     nb = s_len // bs
     nb_pad = pad_lanes(nb)
@@ -242,29 +272,39 @@ def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
     scale = float(scale if scale is not None else dim ** -0.5)
 
     kernel = functools.partial(
-        _fused_kernel, paged=paged, ps=page_size, d=d, bs=bs, nb=nb,
-        nb_pad=nb_pad, k_blocks=k_blocks, scale=scale, g=g, dim=dim,
-        local_window=local_window, sliding_window=sliding_window)
+        _fused_kernel, paged=paged, quant=quant, ps=page_size, d=d, bs=bs,
+        nb=nb, nb_pad=nb_pad, k_blocks=k_blocks, scale=scale, g=g,
+        kdim=kdim, dim=dim, local_window=local_window,
+        sliding_window=sliding_window)
     if paged:
         io_map = lambda i, j, ln, pt: (i, j, 0, 0)
     else:
         io_map = lambda i, j, ln: (i, j, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, kdim), io_map),
+        # the caches stay in HBM; the kernel DMAs d-slices and the
+        # winning blocks itself
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    inputs = [q_hat, k_hat, v]
+    if quant:
+        # (n_pages, 1) f32 sidecars land whole in SMEM: one scalar read per
+        # block resolves the page's scale (scalar prefetch is int32-only)
+        in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM),
+                     pl.BlockSpec(memory_space=pltpu.SMEM)]
+        inputs += [k_scale.astype(jnp.float32).reshape(-1, 1),
+                   v_scale.astype(jnp.float32).reshape(-1, 1)]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=len(prefetch),
             grid=(b, n_kv),
-            in_specs=[
-                pl.BlockSpec((1, 1, g, dim), io_map),
-                # the caches stay in HBM; the kernel DMAs d-slices and the
-                # winning blocks itself
-                pl.BlockSpec(memory_space=pltpu.ANY),
-                pl.BlockSpec(memory_space=pltpu.ANY),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, g, dim), io_map),
             scratch_shapes=[
                 pltpu.VMEM((2, bs, d), k_hat.dtype),    # score-stream buffers
-                pltpu.VMEM((bs, dim), k_hat.dtype),     # winner K̂ block
+                pltpu.VMEM((bs, kdim), k_hat.dtype),    # winner K̂ block
                 pltpu.VMEM((bs, dim), v.dtype),         # winner V block
                 pltpu.VMEM((1, nb_pad), jnp.float32),   # block maxima
                 pltpu.SMEM((k_blocks,), jnp.int32),     # selected blocks
@@ -274,14 +314,17 @@ def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
         interpret=interpret,
-    )(*prefetch, q_hat, k_hat, v)
+    )(*prefetch, *inputs)
     return out
 
 
-def _select_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
-                   nb_pad: int, k_blocks: int, scale: float,
-                   local_window: int, sliding_window: int):
-    if paged:
+def _select_kernel(*args, paged: bool, quant: bool, ps: int, d: int,
+                   bs: int, nb: int, nb_pad: int, k_blocks: int,
+                   scale: float, local_window: int, sliding_window: int):
+    if quant:
+        (len_ref, pt_ref, q_ref, k_ref, ksc_ref, out_ref,
+         kd_buf, scores, sem_kd) = args
+    elif paged:
         (len_ref, pt_ref, q_ref, k_ref, out_ref,
          kd_buf, scores, sem_kd) = args
     else:
@@ -289,7 +332,7 @@ def _select_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
     b = pl.program_id(0)
     h = pl.program_id(1)
     ln = len_ref[b]
-    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, W)
 
     def kd_src(j):
         tok = j * bs
@@ -304,30 +347,36 @@ def _select_kernel(*args, paged: bool, ps: int, d: int, bs: int, nb: int,
     _score_and_select(ln, q, kd_src, kd_buf, scores, sem_kd, write_sel,
                       d=d, bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks,
                       scale=scale, local_window=local_window,
-                      sliding_window=sliding_window)
+                      sliding_window=sliding_window,
+                      k_scale_at=(lambda j: ksc_ref[
+                          pt_ref[b, (j * bs) // ps], 0]) if quant else None)
 
 
 def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
                   block_size: int = 128, scale=None, local_window: int = 0,
                   sliding_window: int = 0, page_table=None,
-                  page_size: int = 0, interpret: bool = False):
-    """Fused score+select: (B,Hkv,G,D),(B,S,Hkv,D),(B,) -> (B,Hkv,kb) int32
+                  page_size: int = 0, k_scale=None,
+                  interpret: bool = False):
+    """Fused score+select: (B,Hkv,G,W),(B,S,Hkv,W),(B,) -> (B,Hkv,kb) int32
     block indices, group-shared; ``-1`` marks exhausted entries (fewer live
     blocks than kb). Scores live only in VMEM scratch. Paged caches resolve
-    block reads through ``page_table`` exactly like ``fused_loki_decode``."""
-    b, n_kv, g, dim = q_hat.shape
+    block reads through ``page_table`` exactly like ``fused_loki_decode``;
+    quantized layouts pass the K pool's (n_pages,) ``k_scale`` sidecar."""
+    b, n_kv, g, kdim = q_hat.shape
     bs = block_size
     paged, s_len, prefetch = _paged_args(q_hat, k_hat, cur_len, page_table,
                                          page_size, bs)
+    quant = k_scale is not None
+    assert not quant or paged, "per-page scales require paged caches"
     assert s_len % bs == 0, "cache length must be a multiple of block_size"
     nb = s_len // bs
     nb_pad = pad_lanes(nb)
     k_blocks = min(k_blocks, nb)
-    scale = float(scale if scale is not None else dim ** -0.5)
+    scale = float(scale if scale is not None else kdim ** -0.5)
 
     kernel = functools.partial(
-        _select_kernel, paged=paged, ps=page_size, d=d, bs=bs, nb=nb,
-        nb_pad=nb_pad, k_blocks=k_blocks, scale=scale,
+        _select_kernel, paged=paged, quant=quant, ps=page_size, d=d, bs=bs,
+        nb=nb, nb_pad=nb_pad, k_blocks=k_blocks, scale=scale,
         local_window=local_window, sliding_window=sliding_window)
     if paged:
         q_map = lambda i, j, ln, pt: (i, j, 0, 0)
@@ -335,15 +384,20 @@ def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
     else:
         q_map = lambda i, j, ln: (i, j, 0, 0)
         o_map = lambda i, j, ln: (i, j, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, kdim), q_map),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    inputs = [q_hat, k_hat]
+    if quant:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        inputs.append(k_scale.astype(jnp.float32).reshape(-1, 1))
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=len(prefetch),
             grid=(b, n_kv),
-            in_specs=[
-                pl.BlockSpec((1, 1, g, dim), q_map),
-                pl.BlockSpec(memory_space=pltpu.ANY),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, k_blocks), o_map),
             scratch_shapes=[
                 pltpu.VMEM((2, bs, d), k_hat.dtype),
@@ -353,5 +407,5 @@ def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_kv, k_blocks), jnp.int32),
         interpret=interpret,
-    )(*prefetch, q_hat, k_hat)
+    )(*prefetch, *inputs)
     return out

@@ -109,9 +109,12 @@ def block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len, *,
 
 # ------------------------------------------------- GQA-batched variant
 
-def _gkernel(*args, paged: bool, bs: int, scale: float, n_sel: int,
-             sliding_window: int):
-    if paged:
+def _gkernel(*args, paged: bool, quant: bool, bs: int, bpp: int,
+             scale: float, n_sel: int, sliding_window: int):
+    if quant:
+        (blk_idx_ref, len_ref, pt_ref, q_ref, k_ref, v_ref,
+         ksc_ref, vsc_ref, out_ref, m_ref, l_ref, acc_ref) = args
+    elif paged:
         (blk_idx_ref, len_ref, pt_ref, q_ref, k_ref, v_ref, out_ref,
          m_ref, l_ref, acc_ref) = args
     else:
@@ -127,9 +130,14 @@ def _gkernel(*args, paged: bool, bs: int, scale: float, n_sel: int,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
-    # paged pools have no batch dim: the k/v block arrives as (bs, 1, D)
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, W)
+    # paged pools have no batch dim: the k/v block arrives as (bs, 1, W)
     k = (k_ref[:, 0] if paged else k_ref[0, :, 0]).astype(jnp.float32)
+    if quant:
+        # one physical page per staged block (bs divides page_size): its
+        # SMEM-resident scale dequantizes the codes right after the DMA
+        page = pt_ref[b, jnp.maximum(blk_idx_ref[b, h, j], 0) // bpp]
+        k = k * ksc_ref[page, 0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, bs)
 
@@ -149,6 +157,8 @@ def _gkernel(*args, paged: bool, bs: int, scale: float, n_sel: int,
     alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0)) * (m_prev > NEG_INF / 2)
     p = jnp.exp(s - m_safe[:, None]) * live                # (G, bs)
     v_blk = (v_ref[:, 0] if paged else v_ref[0, :, 0]).astype(jnp.float32)
+    if quant:
+        v_blk = v_blk * vsc_ref[page, 0]
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
         p, v_blk, preferred_element_type=jnp.float32)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
@@ -165,6 +175,7 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
                                    block_size: int = 128, scale=None,
                                    sliding_window: int = 0,
                                    page_table=None, page_size: int = 0,
+                                   k_scale=None, v_scale=None,
                                    interpret: bool = False):
     """GQA-batched sparse attention over a *group-shared* block selection.
 
@@ -186,10 +197,16 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
     resolve to physical blocks inside the BlockSpec index map — the sparse
     paged read costs exactly one extra SMEM lookup per block (DESIGN.md §7).
     """
-    b, n_kv, g, dim = q_hat.shape
+    b, n_kv, g, kdim = q_hat.shape
+    dim = v.shape[-1]
+    assert k_hat.shape[-1] == kdim, "q_hat/k_hat latent widths must match"
     bs = block_size
     n_sel = blk_idx.shape[-1]
     paged = page_table is not None
+    quant = k_scale is not None
+    assert not quant or (paged and v_scale is not None), \
+        "per-page scales require paged caches"
+    bpp = 0
     if paged:
         assert page_size > 0 and page_size % bs == 0, \
             "kernel blocks must tile pages exactly"
@@ -200,8 +217,9 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
         assert k_hat.shape[1] % bs == 0
     scale = float(scale if scale is not None else dim ** -0.5)
 
-    kernel = functools.partial(_gkernel, paged=paged, bs=bs, scale=scale,
-                               n_sel=n_sel, sliding_window=sliding_window)
+    kernel = functools.partial(_gkernel, paged=paged, quant=quant, bs=bs,
+                               bpp=bpp, scale=scale, n_sel=n_sel,
+                               sliding_window=sliding_window)
     if paged:
         def kv_map(i, h, j, bi, ln, pt):
             # clamp the -1 "exhausted" sentinel, then translate the logical
@@ -210,9 +228,9 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
             blk = jnp.maximum(bi[i, h, j], 0)
             return (pt[i, blk // bpp] * bpp + blk % bpp, h, 0)
         in_specs = [
-            pl.BlockSpec((1, 1, g, dim),
+            pl.BlockSpec((1, 1, g, kdim),
                          lambda i, h, j, bi, ln, pt: (i, h, 0, 0)),
-            pl.BlockSpec((bs, 1, dim), kv_map),
+            pl.BlockSpec((bs, 1, kdim), kv_map),
             pl.BlockSpec((bs, 1, dim), kv_map),
         ]
         o_map = lambda i, h, j, bi, ln, pt: (i, h, 0, 0)
@@ -224,13 +242,20 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
             # the kernel masks its contribution to zero
             return (i, jnp.maximum(bi[i, h, j], 0), h, 0)
         in_specs = [
-            pl.BlockSpec((1, 1, g, dim),
+            pl.BlockSpec((1, 1, g, kdim),
                          lambda i, h, j, bi, ln: (i, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, dim), kv_map),
+            pl.BlockSpec((1, bs, 1, kdim), kv_map),
             pl.BlockSpec((1, bs, 1, dim), kv_map),
         ]
         o_map = lambda i, h, j, bi, ln: (i, h, 0, 0)
         prefetch = (blk_idx.astype(jnp.int32), cur_len.astype(jnp.int32))
+    inputs = [q_hat, k_hat, v]
+    if quant:
+        # per-page f32 scale sidecars live whole in SMEM beside the table
+        in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM),
+                     pl.BlockSpec(memory_space=pltpu.SMEM)]
+        inputs += [k_scale.astype(jnp.float32).reshape(-1, 1),
+                   v_scale.astype(jnp.float32).reshape(-1, 1)]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -246,5 +271,5 @@ def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
         interpret=interpret,
-    )(*prefetch, q_hat, k_hat, v)
+    )(*prefetch, *inputs)
     return out

@@ -87,18 +87,22 @@ def loki_decode_fused(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
                       block_size: int = 128, scale=None,
                       local_window: int = 0, sliding_window: int = 0,
                       page_table=None, page_size: int = 0,
+                      k_scale=None, v_scale=None,
                       interpret: bool = False):
     """Single-pass fused decode (DESIGN.md §4): score, select and attend in
     one kernel; no score/selection tensor ever reaches HBM.
 
-    q_hat (B,Hkv,G,D) grouped PCA-basis queries; k_hat/v (B,S,Hkv,D) model-
-    native caches (or pooled (R,Hkv,D) with ``page_table``); cur_len (B,).
+    q_hat (B,Hkv,G,W) grouped PCA-basis queries (W = stored latent K width,
+    <= D); k_hat (B,S,Hkv,W) / v (B,S,Hkv,D) model-native caches (or pooled
+    (R,Hkv,·) with ``page_table``); cur_len (B,). Quantized PageLayouts pass
+    the pools' (n_pages,) f32 ``k_scale``/``v_scale`` sidecars (paged only).
     Returns (B,Hkv,G,D)."""
     return fused_loki_decode(q_hat, k_hat, v, cur_len, d=d,
                              k_blocks=k_blocks, block_size=block_size,
                              scale=scale, local_window=local_window,
                              sliding_window=sliding_window,
                              page_table=page_table, page_size=page_size,
+                             k_scale=k_scale, v_scale=v_scale,
                              interpret=interpret)
 
 
@@ -110,19 +114,22 @@ def loki_decode_two_kernel(q_hat, k_hat, v, cur_len, *, d: int,
                            k_blocks: int, block_size: int = 128, scale=None,
                            local_window: int = 0, sliding_window: int = 0,
                            page_table=None, page_size: int = 0,
+                           k_scale=None, v_scale=None,
                            interpret: bool = False):
     """Two-kernel fallback for shapes the single-pass kernel can't tile:
     fused score+select (scores stay in VMEM, only the (B,Hkv,kb) index rows
-    cross HBM) feeding the GQA-batched sparse-attention kernel."""
+    cross HBM) feeding the GQA-batched sparse-attention kernel. Latent
+    widths and per-page scale sidecars follow ``loki_decode_fused``."""
     blk_idx = select_blocks(q_hat, k_hat, cur_len, d=d, k_blocks=k_blocks,
                             block_size=block_size, scale=scale,
                             local_window=local_window,
                             sliding_window=sliding_window,
                             page_table=page_table, page_size=page_size,
-                            interpret=interpret)
+                            k_scale=k_scale, interpret=interpret)
     return block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len,
                                           block_size=block_size, scale=scale,
                                           sliding_window=sliding_window,
                                           page_table=page_table,
                                           page_size=page_size,
+                                          k_scale=k_scale, v_scale=v_scale,
                                           interpret=interpret)

@@ -8,6 +8,13 @@ Builds the serving engine with the selected attention policy
 transforms on the fly for Loki policies, and reports per-tick latency and
 throughput over a synthetic request stream.
 
+Every knob lives in :class:`ServeConfig`, a frozen dataclass with four
+sections — ``engine`` (arch / policy / backend / slots), ``pool`` (page
+size, pool size, prefill chunk), ``scheduler`` (policy, per-tick token
+budgets, prefix cache) and ``layout`` (the per-component PageLayout spec,
+e.g. ``int8:pca:r=32``) — consumed by both engine kinds and printed in
+full by ``--dryrun``. The argparse flags are thin aliases over its fields.
+
 ``--engine paged`` (default) serves from the paged KV-cache with the
 chunked-prefill scheduler (serving/scheduler.py). The allowed set is
 derived from the per-layer CacheSpec registry (serving/cache_spec.py), so
@@ -17,36 +24,190 @@ once at admission, and mixtral's sliding-window layers recycle pages that
 slide out of the window. Only policies whose caches cannot rebuild exact
 prefix attention (h2o, pcaattn) fall back to the dense slot engine.
 
-``--sched-policy`` picks the paged engine's SchedulerPolicy (fifo |
-priority), ``--prefill-budget``/``--decode-budget`` cap per-tick work in
-tokens (vLLM-style), and ``--prefix-cache`` toggles page-granular prompt
-prefix sharing (COW on the partial tail page; auto-bypassed for configs
-whose spec table marks components unshareable).
+``--layout`` selects the physical page layout (DESIGN.md §10): storage
+dtype (fp32 | fp16 | bf16 | int8 | fp8), storage basis (native | pca —
+keys written to pages already projected to the PCA basis, exact at full
+rank by Lemma 4.1), and an optional latent rank ``r=N`` truncating the
+stored key width. Quantized dtypes carry one f32 scale per physical page
+beside the page table; the decode kernels dequantize in their DMA
+epilogue.
 
 ``--dryrun`` prints the per-layer CacheSpec table for the chosen arch and
-policy (what state each layer holds, page budgets, recycle window), the
-scheduler policy + token budgets + prefix-cache config, and exits without
+policy (what state each layer holds, page budgets, recycle window, bytes
+per page under the layout), the full ServeConfig, and exits without
 touching the accelerator.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.configs.base import TrainConfig
+from repro.configs.base import ModelConfig, PageLayout, TrainConfig
 from repro.core import pca as PCA
 from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
 from repro.models import lm
 from repro.optim import adamw
 from repro.serving import cache_spec as CS
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Engine, Request, ServingEngine
 from repro.serving.scheduler import PAGED_POLICIES, PagedServingEngine
 from repro.training.step import TrainState, make_train_step
+
+
+# ------------------------------------------------------------ ServeConfig
+
+@dataclasses.dataclass(frozen=True)
+class EngineSection:
+    """What runs: model, attention policy, kernel backend, batch shape."""
+    arch: str = "qwen2.5-3b"
+    smoke: bool = True
+    kind: str = "paged"            # paged | dense
+    policy: str = "loki"
+    k_f: float = 0.25
+    d_f: float = 0.25
+    backend: str = "auto"          # auto | pallas | xla
+    n_slots: int = 4
+    smax: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSection:
+    """Paged-engine pool shape (0 = derive from the spec table)."""
+    page_size: int = 0             # tokens per page (0 = loki block_size)
+    n_pages: int = 0               # pool size (0 = fit all slots)
+    prefill_chunk: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSection:
+    """Tick policy: admission order, per-tick token budgets, sharing."""
+    policy: str = "fifo"           # fifo | priority
+    prefill_budget: int = 0        # prompt tok/tick (0 = one chunk)
+    decode_budget: int = 0         # live slots decoded/tick (0 = all)
+    prefix_cache: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSection:
+    """Physical page layout spec, ``PageLayout.parse`` syntax
+    (e.g. ``fp16``, ``fp32:pca``, ``int8:pca:r=32``); '' = default."""
+    spec: str = ""
+
+    def page_layout(self) -> PageLayout:
+        return PageLayout.parse(self.spec) if self.spec else PageLayout()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """One object holding every serving knob; the CLI flags are aliases.
+
+    ``resolve_model()`` folds the policy and layout into a ModelConfig and
+    ``build_engine()`` constructs whichever engine the spec table allows —
+    the rest of the launcher (and any harness) only talks to the
+    :class:`~repro.serving.engine.Engine` protocol it returns."""
+    engine: EngineSection = dataclasses.field(default_factory=EngineSection)
+    pool: PoolSection = dataclasses.field(default_factory=PoolSection)
+    scheduler: SchedulerSection = dataclasses.field(
+        default_factory=SchedulerSection)
+    layout: LayoutSection = dataclasses.field(default_factory=LayoutSection)
+    requests: int = 6
+    max_new: int = 16
+    warm_steps: int = 60
+
+    @classmethod
+    def from_args(cls, a: argparse.Namespace) -> "ServeConfig":
+        return cls(
+            engine=EngineSection(
+                arch=a.arch, smoke=a.smoke, kind=a.engine, policy=a.policy,
+                k_f=a.k_f, d_f=a.d_f, backend=a.backend,
+                n_slots=a.n_slots, smax=a.smax),
+            pool=PoolSection(page_size=a.page_size, n_pages=a.n_pages,
+                             prefill_chunk=a.prefill_chunk),
+            scheduler=SchedulerSection(
+                policy=a.sched_policy, prefill_budget=a.prefill_budget,
+                decode_budget=a.decode_budget,
+                prefix_cache=a.prefix_cache == "on"),
+            layout=LayoutSection(spec=a.layout),
+            requests=a.requests, max_new=a.max_new,
+            warm_steps=a.warm_steps)
+
+    def resolve_model(self) -> ModelConfig:
+        cfg = (get_smoke_config if self.engine.smoke
+               else get_config)(self.engine.arch)
+        policy = self.engine.policy
+        if cfg.family == "ssm" and policy != "full":
+            print(f"note: {self.engine.arch} has no KV cache; policy "
+                  "forced to full")
+            policy = "full"
+        if policy != "full":
+            cfg = cfg.with_policy(policy, k_f=self.engine.k_f,
+                                  d_f=self.engine.d_f)
+        lay = self.layout.page_layout()
+        if lay != PageLayout():
+            cfg = cfg.with_layout(lay)
+        return cfg
+
+    def build_engine(self, params, cfg: ModelConfig) -> Tuple[Engine, bool]:
+        """Construct the engine the spec table allows; (engine, paged?)."""
+        pageable, why = CS.pageable(cfg)
+        paged = self.engine.kind == "paged" and pageable
+        if self.engine.kind == "paged" and not paged:
+            print(f"note: {why}; falling back to the dense engine")
+        if paged:
+            eng = PagedServingEngine(
+                params, cfg, n_slots=self.engine.n_slots,
+                smax=self.engine.smax,
+                page_size=self.pool.page_size or None,
+                n_pages=self.pool.n_pages or None,
+                prefill_chunk=self.pool.prefill_chunk,
+                backend=self.engine.backend,
+                policy=self.scheduler.policy,
+                prefill_budget=self.scheduler.prefill_budget or None,
+                decode_budget=self.scheduler.decode_budget or None,
+                prefix_cache=self.scheduler.prefix_cache)
+        else:
+            eng = ServingEngine(params, cfg, n_slots=self.engine.n_slots,
+                                smax=self.engine.smax,
+                                backend=self.engine.backend)
+        return eng, paged
+
+    def describe(self, cfg: ModelConfig) -> str:
+        """The --dryrun report: every section, plus derived quantities."""
+        lay = cfg.page_layout
+        ps = self.pool.page_size or cfg.loki.block_size
+        lines = [CS.format_spec_table(cfg, self.engine.smax, ps)]
+        ok, why = CS.pageable(cfg)
+        lines.append("engine: paged" if ok and self.engine.kind == "paged"
+                     else "engine: dense" if self.engine.kind == "dense"
+                     else f"engine: dense fallback — {why}")
+        lines.append(
+            f"scheduler: policy={self.scheduler.policy} prefill_budget="
+            f"{self.scheduler.prefill_budget or self.pool.prefill_chunk} "
+            f"tok/tick decode_budget="
+            f"{self.scheduler.decode_budget or self.engine.n_slots} "
+            "tok/tick")
+        can_share, share_why = CS.prefix_shareable(cfg)
+        if not self.scheduler.prefix_cache:
+            lines.append("prefix-cache: off (by flag)")
+        elif can_share:
+            lines.append("prefix-cache: on (page-granular, COW tail, LRU "
+                         "eviction before preemption)")
+        else:
+            lines.append(f"prefix-cache: bypassed — {share_why}")
+        bpr = lay.bytes_per_page_row(cfg.resolved_head_dim, cfg.n_kv_heads)
+        lines.append(
+            f"layout: {lay.describe()} — {bpr * ps} B/page/layer"
+            + (" (per-page f32 scales beside the table)"
+               if lay.quantized else ""))
+        lines.append("paged-servable archs (default policy): "
+                     + ", ".join(CS.servable_archs()))
+        return "\n".join(lines)
 
 
 def _frames(cfg, seed: int, batch: int = 1):
@@ -57,7 +218,8 @@ def _frames(cfg, seed: int, batch: int = 1):
                              jnp.float32)
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """Thin aliases over ServeConfig's fields (see ServeConfig.from_args)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -99,40 +261,26 @@ def main():
                     help="share identical prompt-prefix pages across "
                          "requests (auto-bypassed for configs whose spec "
                          "table marks components unshareable)")
+    ap.add_argument("--layout", default="",
+                    help="PageLayout spec 'dtype[:basis][:r=N]' — dtype "
+                         "fp32|fp16|bf16|int8|fp8, basis native|pca, "
+                         "latent rank r (pca only); e.g. 'int8:pca:r=32'. "
+                         "Empty = fp32 native (bit-identical to PR 5)")
     ap.add_argument("--warm-steps", type=int, default=60,
                     help="brief training so generation has signal")
     ap.add_argument("--dryrun", action="store_true",
-                    help="print the per-layer CacheSpec table, scheduler "
-                         "policy, token budgets and prefix-cache config, "
-                         "then exit")
-    args = ap.parse_args()
+                    help="print the per-layer CacheSpec table and the "
+                         "full ServeConfig, then exit")
+    return ap
 
-    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
-    if cfg.family == "ssm" and args.policy != "full":
-        print(f"note: {args.arch} has no KV cache; policy forced to full")
-        args.policy = "full"
-    if args.policy != "full":
-        cfg = cfg.with_policy(args.policy, k_f=args.k_f, d_f=args.d_f)
+
+def main():
+    args = build_parser().parse_args()
+    sc = ServeConfig.from_args(args)
+    cfg = sc.resolve_model()
 
     if args.dryrun:
-        ps = args.page_size or cfg.loki.block_size
-        print(CS.format_spec_table(cfg, args.smax, ps))
-        ok, why = CS.pageable(cfg)
-        print("engine: paged" if ok else f"engine: dense fallback — {why}")
-        print(f"scheduler: policy={args.sched_policy} "
-              f"prefill_budget={args.prefill_budget or args.prefill_chunk} "
-              f"tok/tick decode_budget={args.decode_budget or args.n_slots} "
-              "tok/tick")
-        can_share, share_why = CS.prefix_shareable(cfg)
-        if args.prefix_cache == "off":
-            print("prefix-cache: off (by flag)")
-        elif can_share:
-            print("prefix-cache: on (page-granular, COW tail, LRU "
-                  "eviction before preemption)")
-        else:
-            print(f"prefix-cache: bypassed — {share_why}")
-        print("paged-servable archs (default policy): "
-              + ", ".join(CS.servable_archs()))
+        print(sc.describe(cfg))
         return
 
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=96, global_batch=8, seed=7,
@@ -146,18 +294,20 @@ def main():
         return batch
 
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    if args.warm_steps:
+    if sc.warm_steps:
         tcfg = TrainConfig(lr=3e-3, warmup_steps=5,
-                           total_steps=args.warm_steps)
+                           total_steps=sc.warm_steps)
         state = TrainState(params, adamw.init_state(params))
         step = jax.jit(make_train_step(cfg, tcfg))
-        for i in range(args.warm_steps):
+        for i in range(sc.warm_steps):
             state, m = step(state, batch_with_extras(i))
         params = state.params
-        print(f"warmed {args.warm_steps} steps, loss "
+        print(f"warmed {sc.warm_steps} steps, loss "
               f"{float(m['loss']):.3f}")
 
-    if args.policy in ("loki", "loki_block", "pcaattn"):
+    needs_pca = (cfg.attn_policy() in ("loki", "loki_block", "pcaattn")
+                 or cfg.page_layout.basis == "pca")
+    if needs_pca:
         batches = [jnp.asarray(data.batch_at(1000 + i)["tokens"])
                    for i in range(2)]
         frames = (_frames(cfg, 0, batches[0].shape[0])
@@ -166,52 +316,37 @@ def main():
         params = PCA.install_projections(params, calib, "pre")
         print("PCA calibration installed")
 
-    # allowed set from the CacheSpec registry, not a family allowlist
-    pageable, why = CS.pageable(cfg)
-    paged = args.engine == "paged" and pageable
-    if args.engine == "paged" and not paged:
-        print(f"note: {why}; falling back to the dense engine")
+    eng, paged = sc.build_engine(params, cfg)
     if paged:
-        eng = PagedServingEngine(
-            params, cfg, n_slots=args.n_slots, smax=args.smax,
-            page_size=args.page_size or None,
-            n_pages=args.n_pages or None,
-            prefill_chunk=args.prefill_chunk, backend=args.backend,
-            policy=args.sched_policy,
-            prefill_budget=args.prefill_budget or None,
-            decode_budget=args.decode_budget or None,
-            prefix_cache=args.prefix_cache == "on")
         extra = (f" window={eng.window} (recycling)" if eng.window else "")
         share = ("on" if eng.prefix_caching else
                  f"bypassed ({eng.prefix_cache_reason})"
-                 if args.prefix_cache == "on" else "off")
+                 if sc.scheduler.prefix_cache else "off")
         print(f"paged engine: page_size={eng.page_size} "
               f"pool={eng.pool.n_pages} pages "
               f"(budget {eng.req_budget}/request){extra} "
+              f"layout={cfg.page_layout.describe()} "
               f"policy={eng.policy.name} "
               f"budgets={eng.budget.prefill_tokens}p/"
               f"{eng.budget.decode_tokens}d tok/tick "
               f"prefix-cache={share}")
-    else:
-        eng = ServingEngine(params, cfg, n_slots=args.n_slots,
-                            smax=args.smax, backend=args.backend)
     # the priority policy needs classes to tell apart: spread the demo
     # stream over two of them (even rids are urgent)
     reqs = [Request(rid=i,
                     prompt=data.batch_at(4000 + i)["tokens"][0, :24 + 4 * i],
-                    max_new=args.max_new,
-                    priority=(i + 1) % 2 if args.sched_policy == "priority"
-                    else 0,
+                    max_new=sc.max_new,
+                    priority=(i + 1) % 2
+                    if sc.scheduler.policy == "priority" else 0,
                     frames=(np.asarray(_frames(cfg, 4000 + i)[0])
                             if cfg.is_encoder_decoder else None))
-            for i in range(args.requests)]
+            for i in range(sc.requests)]
     for r in reqs:
         eng.submit(r)
     t0 = time.time()
-    eng.run_until_done()
+    eng.drain()
     dt = time.time() - t0
     toks = sum(len(r.out) for r in reqs)
-    print(f"policy={args.policy} served {len(reqs)} requests "
+    print(f"policy={cfg.attn_policy()} served {len(reqs)} requests "
           f"({toks} tokens) in {eng.ticks} ticks, {dt:.1f}s "
           f"-> {toks/dt:.1f} tok/s, {1e3*dt/max(eng.ticks,1):.0f} ms/tick")
     if paged and eng.prefix_caching:

@@ -186,57 +186,91 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
         y = L.dot(out.reshape(b, cfg.q_dim), p["wo"].astype(x.dtype))
         return y, new_cache
 
+    lay = cfg.page_layout
     if policy in ("loki", "loki_block"):
         # cache keys live in the PCA basis (paper line 3-4)
         _, k_store = loki.project_qk(q, k, proj)
     elif policy == "pcaattn":
         d = cache["k"].shape[-1]
         k_store = jnp.einsum("bhd,hde->bhe", k, proj[..., :d].astype(k.dtype))
+    elif paged and lay.basis == "pca":
+        # latent-basis pages for non-Loki policies: store k̂ = k·P, rotate
+        # q at read time — exact at full rank (Lemma 4.1), back-projection
+        # folds into the epilogue (softmax weights are basis-free)
+        k_store = jnp.einsum("bhd,hde->bhe", k, proj.astype(k.dtype))
     else:
         k_store = k
     if paged:
         from repro.serving import paged_cache as PC
-        cache = {"k": PC.write_token_rows(cache["k"], k_store, page_table,
-                                          positions, page_size),
-                 "v": PC.write_token_rows(cache["v"], v, page_table,
-                                          positions, page_size)}
+        kw = lay.k_width(hd)
+        if kw < hd and policy != "pcaattn":
+            k_store = k_store[..., :kw]           # latent rank-r truncation
+        if lay.quantized:
+            kp, ks = PC.write_token_rows_q(
+                cache["k"], cache["k_scale"], k_store, page_table,
+                positions, page_size, qmax=lay.qmax)
+            vp, vs = PC.write_token_rows_q(
+                cache["v"], cache["v_scale"], v, page_table,
+                positions, page_size, qmax=lay.qmax)
+            cache = {"k": kp, "v": vp, "k_scale": ks, "v_scale": vs}
+        else:
+            cache = {"k": PC.write_token_rows(cache["k"], k_store,
+                                              page_table, positions,
+                                              page_size),
+                     "v": PC.write_token_rows(cache["v"], v, page_table,
+                                              positions, page_size)}
 
-        def view(arr):
-            return PC.gather_logical(arr, page_table, page_size)
+        def view(name):
+            return PC.gather_logical_dq(cache[name],
+                                        cache.get(name + "_scale"),
+                                        page_table, page_size)
     else:
         cache = {"k": _write_cache(cache["k"], k_store, pos_len),
                  "v": _write_cache(cache["v"], v, pos_len)}
 
-        def view(arr):
-            return arr
+        def view(name):
+            return cache[name]
+
+    # queries follow the storage basis; hd**-0.5 stays the logit scale even
+    # when the stored K width is the latent rank r < hd
+    q_read = q
+    if paged and lay.basis == "pca" and policy in ("full", "exact_topk"):
+        qg_r = q.reshape(b, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads,
+                         hd)
+        qh = jnp.einsum("bhgd,hde->bhge", qg_r, proj.astype(q.dtype))
+        q_read = qh[..., :lay.k_width(hd)].reshape(b, cfg.n_heads, -1)
 
     if policy == "full":
-        out = A.decode_full(q, view(cache["k"]), view(cache["v"]), cur_len,
-                            sliding_window=cfg.sliding_window)
+        out = A.decode_full(q_read, view("k"), view("v"), cur_len,
+                            sliding_window=cfg.sliding_window,
+                            logit_scale=hd ** -0.5)
     elif policy == "exact_topk":
-        out = baselines.exact_topk_decode(q, view(cache["k"]),
-                                          view(cache["v"]), cur_len,
-                                          cfg.loki)
+        out = baselines.exact_topk_decode(q_read, view("k"), view("v"),
+                                          cur_len, cfg.loki,
+                                          logit_scale=hd ** -0.5)
     elif policy == "loki":
         if cfg.loki.n_chunks:
             out = loki.loki_decode_chunked(
-                q, view(cache["k"]), view(cache["v"]), cur_len, proj,
+                q, view("k"), view("v"), cur_len, proj,
                 cfg.loki, sliding_window=cfg.sliding_window)
         else:
-            out = loki.loki_decode(q, view(cache["k"]), view(cache["v"]),
+            out = loki.loki_decode(q, view("k"), view("v"),
                                    cur_len, proj, cfg.loki,
                                    sliding_window=cfg.sliding_window)
     elif policy == "loki_block":
         # backend-dispatched: fused Pallas kernels on TPU (or when forced),
         # the jnp reference otherwise (core/dispatch.py). Paged caches pass
-        # through untouched — the kernels index the pool via the table.
+        # through untouched — the kernels index the pool via the table and
+        # dequantize quantized layouts in their DMA epilogue.
         out = dispatch.loki_block_decode(q, cache["k"], cache["v"], cur_len,
                                          proj, cfg.loki,
                                          sliding_window=cfg.sliding_window,
                                          page_table=page_table,
-                                         page_size=page_size)
+                                         page_size=page_size,
+                                         k_scale=cache.get("k_scale"),
+                                         v_scale=cache.get("v_scale"))
     elif policy == "pcaattn":
-        out = baselines.pcaattn_decode(q, view(cache["k"]), view(cache["v"]),
+        out = baselines.pcaattn_decode(q, view("k"), view("v"),
                                        cur_len, proj, cfg.loki)
     else:
         raise ValueError(f"unknown attention policy {policy!r}")
@@ -323,32 +357,48 @@ def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
 
     policy = cfg.attn_policy()
     proj = p["pca"]
-    if policy in ("loki", "loki_block"):
-        k_store = jnp.einsum("bshd,hde->bshe", k, proj.astype(k.dtype))
-    elif policy in ("full", "exact_topk"):
-        k_store = k
-    else:
+    lay = cfg.page_layout
+    hd = cfg.resolved_head_dim
+    kw = lay.k_width(hd)
+    if policy not in ("full", "exact_topk", "loki", "loki_block"):
         raise ValueError(f"policy {policy!r} cannot reconstruct exact "
                          "prefix attention from its cache; use the dense "
                          "engine's one-shot prefill")
-    cache = {"k": PC.write_chunk_rows(cache["k"], k_store[0], table_row,
-                                      pos_start, page_size,
-                                      n_valid=n_valid),
-             "v": PC.write_chunk_rows(cache["v"], v[0], table_row,
-                                      pos_start, page_size,
-                                      n_valid=n_valid)}
+    pca_store = policy in ("loki", "loki_block") or lay.basis == "pca"
+    k_store = (jnp.einsum("bshd,hde->bshe", k, proj.astype(k.dtype))
+               if pca_store else k)
+    if kw < hd:
+        k_store = k_store[..., :kw]                # latent rank-r storage
+    if lay.quantized:
+        kp, ks = PC.write_chunk_rows_q(
+            cache["k"], cache["k_scale"], k_store[0], table_row, pos_start,
+            page_size, n_valid=n_valid, qmax=lay.qmax)
+        vp, vs = PC.write_chunk_rows_q(
+            cache["v"], cache["v_scale"], v[0], table_row, pos_start,
+            page_size, n_valid=n_valid, qmax=lay.qmax)
+        cache = {"k": kp, "v": vp, "k_scale": ks, "v_scale": vs}
+    else:
+        cache = {"k": PC.write_chunk_rows(cache["k"], k_store[0], table_row,
+                                          pos_start, page_size,
+                                          n_valid=n_valid),
+                 "v": PC.write_chunk_rows(cache["v"], v[0], table_row,
+                                          pos_start, page_size,
+                                          n_valid=n_valid)}
 
-    klog = PC.gather_logical(cache["k"], table_row[None], page_size)
-    vlog = PC.gather_logical(cache["v"], table_row[None], page_size)
+    klog = PC.gather_logical_dq(cache["k"], cache.get("k_scale"),
+                                table_row[None], page_size)
+    vlog = PC.gather_logical_dq(cache["v"], cache.get("v_scale"),
+                                table_row[None], page_size)
     sl = klog.shape[1]
     n_kv = cfg.n_kv_heads
-    hd = cfg.resolved_head_dim
     scale = hd ** -0.5
     qg = A._group(q, n_kv)                                 # (1,C,Hkv,G,D)
-    if policy in ("loki", "loki_block"):
+    if pca_store:
         q_pref = jnp.einsum("bchgd,hde->bchge", qg, proj.astype(q.dtype))
     else:
         q_pref = qg
+    if kw < hd:
+        q_pref = q_pref[..., :kw]       # scores against rank-r cached keys
     # prefix scores against the cached (storage-basis) keys ...
     scores = jnp.einsum("bchgd,bshd->bhgcs", q_pref * scale, klog,
                         preferred_element_type=jnp.float32)

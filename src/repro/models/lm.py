@@ -294,27 +294,55 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
       CrossAttnStatic -> per-slot encoder K/V (n_slots, enc_seq, Hkv, D)
           written once at admission.
 
-    Pool memory scales with the page budget, not n_slots × smax."""
+    Pool memory scales with the page budget, not n_slots × smax.
+
+    Physical layout is the component's ``PageLayout``: storage dtype, K
+    feature width (latent rank under basis="pca") and — for quantized
+    dtypes — per-page f32 ``k_scale``/``v_scale`` sidecars (one slot per
+    physical page) living next to the pools. CrossAttnStatic carries one
+    scale per *slot* (written once at admission). The ``dtype`` argument
+    keeps its historical meaning for StateSlot components and for the
+    default layout, so existing callers are bit-identical."""
+    from repro.serving import paged_cache as PC
     CS.assert_pageable(cfg)
     specs = CS.layer_specs(cfg)
     r = n_pages * page_size
+
+    def pool_dtype(lay):
+        # the default layout defers to the caller's dtype argument
+        if lay == CS.PageLayout():
+            return dtype
+        return PC.STORAGE_DTYPE[lay.dtype]
 
     def one(spec: CS.LayerSpec) -> Dict[str, Any]:
         c: Dict[str, Any] = {}
         for name, comp in spec.components:
             if isinstance(comp, (CS.PagedAttn, CS.WindowPagedAttn)):
+                lay = comp.layout
+                pdt = pool_dtype(lay)
                 c["attn"] = {
-                    "k": jnp.zeros((r, comp.n_kv_heads, comp.head_dim),
-                                   dtype),
+                    "k": jnp.zeros((r, comp.n_kv_heads, comp.k_width),
+                                   pdt),
                     "v": jnp.zeros((r, comp.n_kv_heads, comp.head_dim),
-                                   dtype)}
+                                   pdt)}
+                if lay.quantized:
+                    c["attn"]["k_scale"] = jnp.zeros((n_pages,),
+                                                     jnp.float32)
+                    c["attn"]["v_scale"] = jnp.zeros((n_pages,),
+                                                     jnp.float32)
             elif isinstance(comp, CS.StateSlot):
                 c["ssm"] = CS.state_slot_init(cfg, comp, n_slots, dtype)
             elif isinstance(comp, CS.CrossAttnStatic):
+                lay = comp.layout
                 c["cross_k"] = jnp.zeros(
                     (n_slots, comp.enc_seq, comp.n_kv_heads,
-                     comp.head_dim), dtype)
+                     comp.head_dim), pool_dtype(lay))
                 c["cross_v"] = jnp.zeros_like(c["cross_k"])
+                if lay.quantized:
+                    c["cross_k_scale"] = jnp.zeros((n_slots,),
+                                                   jnp.float32)
+                    c["cross_v_scale"] = jnp.zeros((n_slots,),
+                                                   jnp.float32)
         return c
 
     if uses_scan(cfg):
@@ -358,8 +386,13 @@ def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
             h = L.norm_apply(p["ln_x"], x)
             from repro.core.attention import decode_full
             q, _, _ = B._qkv(p["xattn"], h[:, None], cfg)
-            o = decode_full(q[:, 0], c["cross_k"], c["cross_v"],
-                            jnp.int32(c["cross_k"].shape[1]))
+            ck, cv = c["cross_k"], c["cross_v"]
+            if "cross_k_scale" in c:      # quantized CrossAttnStatic pages
+                ck = ck.astype(jnp.float32) \
+                    * c["cross_k_scale"][:, None, None, None]
+                cv = cv.astype(jnp.float32) \
+                    * c["cross_v_scale"][:, None, None, None]
+            o = decode_full(q[:, 0], ck, cv, jnp.int32(ck.shape[1]))
             x = x + L.dot(o.reshape(x.shape[0], cfg.q_dim),
                           p["xattn"]["wo"].astype(x.dtype))
         h = L.norm_apply(p["ln2"], x)
@@ -602,8 +635,14 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
                            L.norm_apply(p["ln_ssm"], sy))
             x = x + a
             if kind == "dec" and cfg.is_encoder_decoder:
-                ek = slot_take(cc["cross_k"]).astype(x.dtype)
-                ev = slot_take(cc["cross_v"]).astype(x.dtype)
+                ek = slot_take(cc["cross_k"])
+                ev = slot_take(cc["cross_v"])
+                if "cross_k_scale" in cc:
+                    ek = ek.astype(jnp.float32) \
+                        * slot_take(cc["cross_k_scale"])[:, None, None, None]
+                    ev = ev.astype(jnp.float32) \
+                        * slot_take(cc["cross_v_scale"])[:, None, None, None]
+                ek, ev = ek.astype(x.dtype), ev.astype(x.dtype)
                 hx = L.norm_apply(p["ln_x"], x)
                 q, _, _ = B._qkv(p["xattn"], hx, cfg)
                 from repro.core.attention import cross_attention
@@ -662,8 +701,13 @@ def copy_cache_page(cfg: ModelConfig, cache, src_page, dst_page,
     dst = jnp.asarray(dst_page, jnp.int32)
 
     def cp(attn):
-        return {"k": PC.copy_page_rows(attn["k"], src, dst, page_size),
-                "v": PC.copy_page_rows(attn["v"], src, dst, page_size)}
+        out = {"k": PC.copy_page_rows(attn["k"], src, dst, page_size),
+               "v": PC.copy_page_rows(attn["v"], src, dst, page_size)}
+        if "k_scale" in attn:   # quantized layout: the codes only stay a
+            # faithful dequant of the donor if the scale rides along
+            out["k_scale"] = PC.copy_page_scale(attn["k_scale"], src, dst)
+            out["v_scale"] = PC.copy_page_scale(attn["v_scale"], src, dst)
+        return out
 
     if uses_scan(cfg):
         layers = dict(cache["layers"])

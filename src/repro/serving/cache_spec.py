@@ -45,7 +45,7 @@ from typing import Any, Dict, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PageLayout
 
 # policies whose caches cannot rebuild exact prefix attention (h2o keeps its
 # own budgeted structure; pcaattn stores lossy d-dim keys) — they serve
@@ -85,10 +85,21 @@ class PagedAttn:
 
     ``shareable``: a full page's K/V depends only on the token prefix (and
     the fixed params/policy), so identical prompt prefixes may alias the
-    same physical pages — this is the component prefix caching rides on."""
+    same physical pages — this is the component prefix caching rides on.
+
+    ``layout`` is the single source of truth for the component's physical
+    pages: storage dtype, key basis (native vs PCA-latent) and latent rank
+    (see configs.base.PageLayout). Page allocation (lm.init_paged_cache),
+    the store path (blocks.attn_prefill_chunk / attn_decode) and every
+    read path (XLA views + Pallas kernels) all derive from it."""
     n_kv_heads: int
     head_dim: int
+    layout: PageLayout = dataclasses.field(default_factory=PageLayout)
     shareable = True
+
+    @property
+    def k_width(self) -> int:
+        return self.layout.k_width(self.head_dim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,7 +114,12 @@ class WindowPagedAttn:
     n_kv_heads: int
     head_dim: int
     window: int
+    layout: PageLayout = dataclasses.field(default_factory=PageLayout)
     shareable = False
+
+    @property
+    def k_width(self) -> int:
+        return self.layout.k_width(self.head_dim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,10 +141,16 @@ class CrossAttnStatic:
 
     Not shareable: the decoder's self-attention K/V depends on the
     request's encoder output (frames) through cross-attention, so equal
-    token prefixes do *not* imply equal cached K/V across requests."""
+    token prefixes do *not* imply equal cached K/V across requests.
+
+    ``layout``: storage dtype is honored (quantized cross K/V carry one
+    scale per slot — written once at admission, so no RMW is needed), but
+    the basis is forced native: PCA calibration covers self-attention
+    keys only, and cross K/V are not paged."""
     enc_seq: int
     n_kv_heads: int
     head_dim: int
+    layout: PageLayout = dataclasses.field(default_factory=PageLayout)
     shareable = False
 
 
@@ -165,13 +187,19 @@ class LayerSpec:
 # --------------------------------------------------------------- registry
 
 def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
-    """The spec table: one LayerSpec per decoder layer."""
+    """The spec table: one LayerSpec per decoder layer. Every paged
+    component carries ``cfg.page_layout`` (cross-attention with the basis
+    forced native); StateSlot stays full-precision native."""
     hd = cfg.resolved_head_dim
+    lay = cfg.page_layout
+    if lay.rank > hd:
+        raise ValueError(f"page_layout rank {lay.rank} > head_dim {hd}")
+    cross_lay = dataclasses.replace(lay, basis="native", rank=0)
     attn: Component
     if cfg.sliding_window:
-        attn = WindowPagedAttn(cfg.n_kv_heads, hd, cfg.sliding_window)
+        attn = WindowPagedAttn(cfg.n_kv_heads, hd, cfg.sliding_window, lay)
     else:
-        attn = PagedAttn(cfg.n_kv_heads, hd)
+        attn = PagedAttn(cfg.n_kv_heads, hd, lay)
 
     def one(i: int) -> LayerSpec:
         kind = layer_kind(cfg, i)
@@ -186,7 +214,8 @@ def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
             comps.append(("ssm", StateSlot("slstm")))
         if kind == "dec" and cfg.is_encoder_decoder:
             comps.append(("cross", CrossAttnStatic(cfg.enc_seq,
-                                                   cfg.n_kv_heads, hd)))
+                                                   cfg.n_kv_heads, hd,
+                                                   cross_lay)))
         return LayerSpec(kind, tuple(comps))
 
     return tuple(one(i) for i in range(cfg.n_layers))
@@ -357,18 +386,27 @@ def reset_slot_state(layers, fresh, slot, scan: bool):
 
 # ------------------------------------------------------------ spec table
 
+def _fmt_layout(comp: Component) -> str:
+    lay = getattr(comp, "layout", None)
+    if lay is None or lay == PageLayout():
+        return ""
+    return f", layout={lay.describe()}"
+
+
 def _fmt_component(name: str, comp: Component, smax: int,
                    page_size: int) -> str:
     if isinstance(comp, WindowPagedAttn):
         return (f"{name}=WindowPagedAttn(window={comp.window}, "
-                f"<= {window_page_budget(comp.window, page_size)} pages)")
+                f"<= {window_page_budget(comp.window, page_size)} pages"
+                f"{_fmt_layout(comp)})")
     if isinstance(comp, PagedAttn):
-        return f"{name}=PagedAttn(<= {-(-smax // page_size)} pages)"
+        return (f"{name}=PagedAttn(<= {-(-smax // page_size)} pages"
+                f"{_fmt_layout(comp)})")
     if isinstance(comp, StateSlot):
         return f"{name}=StateSlot({comp.state})"
     if isinstance(comp, CrossAttnStatic):
         return (f"{name}=CrossAttnStatic(enc_seq={comp.enc_seq}, "
-                "written at admission)")
+                f"written at admission{_fmt_layout(comp)})")
     return f"{name}={comp!r}"
 
 
@@ -389,8 +427,12 @@ def format_spec_table(cfg: ModelConfig, smax: int, page_size: int) -> str:
     budget = request_page_budget(cfg, smax, page_size)
     ok, why = prefix_shareable(cfg)
     share = "prefix_shareable" if ok else f"prefix_unshareable ({why})"
+    lay = cfg.page_layout
+    bpr = lay.bytes_per_page_row(cfg.resolved_head_dim, cfg.n_kv_heads)
     head = (f"CacheSpec[{cfg.arch}] smax={smax} page_size={page_size} "
             f"budget={budget} pages/request"
             + (f" recycle_window={recycle_window(cfg)}"
-               if recycle_window(cfg) else "") + f" {share}")
+               if recycle_window(cfg) else "")
+            + f" layout={lay.describe()}"
+            f" ({bpr * page_size} B/page/layer) {share}")
     return "\n".join([head] + rows)

@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import (Any, Callable, Dict, List, Optional, Protocol,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +52,23 @@ def context_cap(smax: int, gen_tokens: int) -> int:
     max_new is guaranteed for max_new <= smax//2). Shared by both engines
     so their admitted context — and therefore greedy outputs — agree."""
     return max(smax - min(gen_tokens, smax // 2), 1)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What a serving engine looks like to harnesses (benchmarks, serve
+    CLI, tests): submit requests, advance ticks, drain to completion, and
+    report counters — one surface across the dense and paged engines, so
+    callers never branch on the engine kind."""
+
+    def submit(self, req: "Request") -> None: ...
+
+    def tick(self, rng: Optional[jax.Array] = None) -> None: ...
+
+    def drain(self, max_ticks: int = 10_000,
+              rng: Optional[jax.Array] = None) -> None: ...
+
+    def stats(self) -> Dict[str, Any]: ...
 
 
 def sample_next(logits, *, greedy: bool, rng, ticks: int):
@@ -208,3 +226,16 @@ class ServingEngine:
             if rng is not None:
                 rng, sub = jax.random.split(rng)
             self.tick(sub)
+
+    # ------------------------------------------- Engine protocol surface
+
+    def drain(self, max_ticks: int = 10_000,
+              rng: Optional[jax.Array] = None) -> None:
+        """Engine protocol: run ticks until no request is queued or live."""
+        self.run_until_done(max_ticks, rng)
+
+    def stats(self) -> Dict[str, Any]:
+        """Engine protocol: serving counters. The dense engine has no pool,
+        so pool-specific keys are simply absent — shared keys match the
+        paged engine's."""
+        return {"engine": "dense", "ticks": self.ticks}

@@ -58,6 +58,11 @@ TRASH_PAGE = 0
 
 _UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
 
+#: PageLayout.dtype -> jnp storage dtype of the physical pool
+STORAGE_DTYPE = {"fp32": jnp.float32, "fp16": jnp.float16,
+                 "bf16": jnp.bfloat16, "int8": jnp.int8,
+                 "fp8": jnp.float8_e4m3fn}
+
 # chain-hash root: the "prefix" before a prompt's first page
 ROOT_KEY = b""
 
@@ -128,6 +133,122 @@ def write_chunk_rows(pool, new, table_row, pos_start, page_size: int, *,
     return _scatter_rows(pool, rows, new)
 
 
+# ------------------------------------------------- quantized page helpers
+#
+# Quantized PageLayouts store pool rows in int8/fp8 with one f32 amax scale
+# per physical page (kept in a (n_pages,) sidecar next to the page table,
+# one per pool — K and V scales are independent). Serving writes are
+# strictly sequential per request, so a page's valid rows are always a
+# prefix [0, n_valid): every write re-derives the page scale from exactly
+# that prefix. A rewrite at an unchanged scale is bit-exact (the amax row
+# quantizes to +-qmax, every other row reproduces its code), so the
+# read-modify-write below is idempotent and only loses precision when the
+# page's amax actually grows.
+
+QUANT_EPS = 1e-8      # scale floor: all-zero (fresh) pages divide safely
+
+
+def quantize_rows(x, scale, dtype, qmax: float):
+    """f32 rows -> quantized codes at a given (scalar) page scale."""
+    y = x / scale
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        y = jnp.clip(jnp.round(y), -qmax, qmax)
+    return y.astype(dtype)
+
+
+def _page_scale(rows_f32, n_valid, qmax: float):
+    """amax/qmax over the valid prefix of one page's dequantized rows."""
+    m = jnp.arange(rows_f32.shape[0]) < n_valid
+    amax = jnp.max(jnp.abs(rows_f32) * m[:, None, None])
+    return jnp.maximum(amax, QUANT_EPS) / qmax
+
+
+def gather_scales(scales, page_table, page_size: int):
+    """Per logical-row dequant scale. scales (n_pages,) f32;
+    page_table (B, max_pages) -> (B, max_pages * page_size)."""
+    s = scales[page_table]                       # (B, max_pages)
+    return jnp.repeat(s, page_size, axis=1)
+
+
+def gather_logical_dq(pool, scales, page_table, page_size: int):
+    """``gather_logical`` + dequantization: the f32 logical view of a
+    quantized pool (``scales=None`` falls through to the plain gather, so
+    callers hold one code path per layout)."""
+    rows = gather_logical(pool, page_table, page_size)
+    if scales is None:
+        return rows
+    s = gather_scales(scales, page_table, page_size)
+    return rows.astype(jnp.float32) * s[:, :, None, None]
+
+
+def write_token_rows_q(pool, scales, new, page_table, pos, page_size: int,
+                       *, qmax: float):
+    """Quantized decode-step write: RMW of each slot's current page.
+
+    pool (R, H, W) int8/fp8; scales (n_pages,) f32; new (B, H, W);
+    pos (B,) logical positions. Each slot's touched page is dequantized at
+    its old scale, the new row overlaid, the scale re-derived over the
+    valid prefix [0, pos%ps + 1) and the page re-quantized. Slots of dead
+    requests point at the trash page (page 0) and harmlessly RMW it."""
+    ps = page_size
+    h, w = pool.shape[1], pool.shape[2]
+
+    def body(i, carry):
+        pool, scales = carry
+        page = page_table[i, pos[i] // ps]
+        start = page * ps
+        old = jax.lax.dynamic_slice(pool, (start, 0, 0), (ps, h, w))
+        dq = old.astype(jnp.float32) * scales[page]
+        off = pos[i] % ps
+        dq = jax.lax.dynamic_update_slice(
+            dq, new[i][None].astype(jnp.float32), (off, 0, 0))
+        scale = _page_scale(dq, off + 1, qmax)
+        q = quantize_rows(dq, scale, pool.dtype, qmax)
+        pool = jax.lax.dynamic_update_slice(pool, q, (start, 0, 0))
+        return pool, scales.at[page].set(scale)
+
+    return jax.lax.fori_loop(0, new.shape[0], body, (pool, scales))
+
+
+def write_chunk_rows_q(pool, scales, new, table_row, pos_start,
+                       page_size: int, *, n_valid=None, qmax: float):
+    """Quantized chunked-prefill write (one request): RMW of every page
+    the chunk touches. new (C, H, W) at logical ``pos_start + [0, C)``;
+    rows at or past ``n_valid`` (final-chunk padding) are never written.
+    A spanned page that receives no valid row is diverted to the trash
+    page so live pages are never re-quantized gratuitously."""
+    ps = page_size
+    c = new.shape[0]
+    h, w = pool.shape[1], pool.shape[2]
+    nv = c if n_valid is None else n_valid
+    max_pages = table_row.shape[0]
+    span = (c + ps - 1) // ps + 1                # static page-span bound
+
+    def body(j, carry):
+        pool, scales = carry
+        lpage = pos_start // ps + j
+        in_range = lpage < max_pages
+        page = jnp.where(
+            in_range, table_row[jnp.minimum(lpage, max_pages - 1)],
+            TRASH_PAGE)
+        g0 = lpage * ps                          # page's logical start
+        ci = g0 + jnp.arange(ps) - pos_start     # page row -> chunk row
+        take = (ci >= 0) & (ci < nv)
+        page = jnp.where(take.any() & in_range, page, TRASH_PAGE)
+        start = page * ps
+        old = jax.lax.dynamic_slice(pool, (start, 0, 0), (ps, h, w))
+        dq = old.astype(jnp.float32) * scales[page]
+        rows = new[jnp.clip(ci, 0, c - 1)].astype(jnp.float32)
+        dq = jnp.where(take[:, None, None], rows, dq)
+        nv_page = jnp.clip(pos_start + nv - g0, 0, ps)
+        scale = _page_scale(dq, nv_page, qmax)
+        q = quantize_rows(dq, scale, pool.dtype, qmax)
+        pool = jax.lax.dynamic_update_slice(pool, q, (start, 0, 0))
+        return pool, scales.at[page].set(scale)
+
+    return jax.lax.fori_loop(0, span, body, (pool, scales))
+
+
 def copy_page_rows(pool, src_page, dst_page, page_size: int):
     """Copy-on-write: duplicate one physical page's rows inside a pool.
 
@@ -140,6 +261,13 @@ def copy_page_rows(pool, src_page, dst_page, page_size: int):
                                         page_size, axis=0)
     return jax.lax.dynamic_update_slice_in_dim(pool, rows,
                                                dst_page * page_size, axis=0)
+
+
+def copy_page_scale(scales, src_page, dst_page):
+    """COW of a quantized page's sidecar scale: codes are copied verbatim
+    by ``copy_page_rows``, so the copy only stays a faithful dequant of
+    the donor if its scale rides along."""
+    return scales.at[dst_page].set(scales[src_page])
 
 
 # --------------------------------------------------------- host allocator
@@ -201,6 +329,7 @@ class PagePool:
         self.n_hits = 0
         self.n_hit_tokens = 0
         self.n_evicted = 0
+        self._priv_ctr = 0          # unique private-entry keys
 
     # ------------------------------------------------------- accounting
 
@@ -238,11 +367,16 @@ class PagePool:
         content ceases to exist and a copy would preserve data nobody
         else references. Unreferenced cached pages are reclaimed through
         ``_evict_one`` instead."""
-        e = self._by_page.pop(page, None)
+        e = self._by_page.get(page)
         if e is None:
             return
         if self._ref.get(page, 0) <= 0:
             raise ValueError(f"deregister of unheld page {page}")
+        self._drop_entry(e)
+
+    def _drop_entry(self, e: CacheEntry) -> None:
+        """Remove an entry from all three index views (page stays as-is)."""
+        del self._by_page[e.page]
         del self._index[e.key]
         sibs = self._children[e.parent]
         sibs.remove(e)
@@ -319,12 +453,7 @@ class PagePool:
         """Reclaim the least-recently-released cached page: drop its index
         entry and hand the physical page to the free list."""
         page, _ = self._lru.popitem(last=False)
-        e = self._by_page.pop(page)
-        del self._index[e.key]
-        sibs = self._children[e.parent]
-        sibs.remove(e)
-        if not sibs:
-            del self._children[e.parent]
+        self._drop_entry(self._by_page[page])
         self._free.append(page)
         self.n_evicted += 1
 
@@ -398,6 +527,58 @@ class PagePool:
             self.n_hits += 1
         self.n_hit_tokens += n
         return pages, n, tail, parent
+
+    # ---------------------------------------------------- private entries
+
+    def register_private(self, page: int) -> bytes:
+        """Index a *held* page under a unique private key.
+
+        Private entries give a page the cached-page lifecycle (release ->
+        LRU, evictable under pressure, reclaimable by key) without ever
+        being shareable: the key is a counter tag, so it can never collide
+        with a chain hash and ``match_prefix`` can never walk into it.
+        Preemption uses this to retain a hybrid request's own K/V pages —
+        whose content depends on that request's recurrent state, not just
+        its tokens — so a state snapshot plus reclaimed pages can resume
+        it without recompute."""
+        if self._ref.get(page, 0) <= 0:
+            raise ValueError(f"register_private of unheld page {page}")
+        if page in self._by_page:
+            raise ValueError(f"page {page} is already registered")
+        self._priv_ctr += 1
+        key = b"priv:%d" % self._priv_ctr
+        e = CacheEntry(page, key, key, np.empty(0, np.int32))
+        self._index[key] = e
+        self._children.setdefault(key, []).append(e)
+        self._by_page[page] = e
+        return key
+
+    def reclaim_private(self, keys) -> Optional[List[int]]:
+        """All-or-nothing reclaim of ``register_private`` entries.
+
+        If every key survived eviction: re-acquire each page (ref 0 -> 1,
+        out of the LRU), drop the private index entries (the pages go back
+        to plain held pages) and return them in key order. If *any* page
+        was evicted the retained set is useless — the snapshot's state
+        covers exactly the full prefix — so the survivors are dropped from
+        the index and freed immediately; returns None (caller recomputes)."""
+        if any(k not in self._index for k in keys):
+            for k in keys:
+                e = self._index.get(k)
+                if e is None:
+                    continue
+                self._drop_entry(e)
+                if e.page in self._lru:
+                    self._lru.pop(e.page)
+                    self._free.append(e.page)
+            return None
+        pages = []
+        for k in keys:
+            e = self._index[k]
+            self._acquire_one(e.page)
+            self._drop_entry(e)
+            pages.append(e.page)
+        return pages
 
     @staticmethod
     def pages_for(n_tokens: int, page_size: int) -> int:

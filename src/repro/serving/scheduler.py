@@ -194,11 +194,15 @@ class PagedServingEngine:
         self._arrival: Dict[int, int] = {}
         self._arrival_seq = 0
         # host snapshots of preempted StateSlot state: id(req) ->
-        # (tokens consumed, batch-1 state tree); restore-eligible only for
-        # pure-state families (paged K/V cannot be snapshotted away — its
-        # pages were released), recompute stays the fallback
+        # (tokens consumed, batch-1 state tree). Pure-state families
+        # restore unconditionally; hybrids (state + paged K/V, e.g. hymba)
+        # additionally park their own K/V pages as private pool entries
+        # (``_page_snap``) and restore only when the *whole* retained set
+        # survived the interim — recompute stays the fallback
         self._state_snap: Dict[int, Tuple[int, Any]] = {}
-        self._snap_eligible = self.has_state and not self.has_pages
+        self._page_snap: Dict[
+            int, Tuple[List[Optional[int]], List[bytes]]] = {}
+        self._snap_eligible = self.has_state
         self._last_decoded = np.zeros((n_slots,), np.int64)
         self.ticks = 0
         self.n_preempted = 0
@@ -237,19 +241,50 @@ class PagedServingEngine:
             self.cache["layers"], self._fresh_state, slot,
             lm.uses_scan(self.cfg))}
 
+    def _drop_page_snap(self, psnap) -> None:
+        """Discard a retained-page set: reclaim whatever private entries
+        still exist and return their pages to the free list."""
+        if psnap is None:
+            return
+        pages = self.pool.reclaim_private(psnap[1])
+        if pages:
+            self.pool.release(pages)
+
     def _try_restore_state(self, slot: int, req: Request,
                            n_pre: int) -> Optional[int]:
         """Snapshot-on-preemption restore: write the host snapshot back
         into the slot and return the number of prompt tokens it already
-        folded in, or None when recompute must run (no snapshot, or the
-        model also has paged K/V whose pages were released — rebuilding
-        those recomputes the state anyway)."""
+        folded in, or None when recompute must run. Pure-state families
+        need only the snapshot; hybrids also reclaim their retained K/V
+        pages — all-or-nothing, since a state snapshot over a partial K/V
+        prefix would attend garbage."""
         snap = self._state_snap.get(id(req))
+        psnap = self._page_snap.pop(id(req), None)
         if snap is None or not self._snap_eligible:
+            self._drop_page_snap(psnap)
             return None
         consumed, tree = snap
         if not 1 <= consumed <= n_pre:
+            self._drop_page_snap(psnap)
             return None
+        if self.has_pages:
+            if psnap is None:
+                return None
+            pages_list, keys = psnap
+            if self.pool.reclaim_private(keys) is None:
+                # pool pressure evicted part of the retained set while we
+                # were queued: the snapshot is unusable, recompute instead
+                return None
+            self.slot_pages[slot] = list(pages_list)
+            row = np.zeros((self.max_pages,), np.int32)
+            for i, pg in enumerate(pages_list):
+                if pg is not None:
+                    row[i] = pg
+            self.page_table = self.page_table.at[slot].set(
+                jnp.asarray(row))
+            self.peak_slot_pages = max(
+                self.peak_slot_pages,
+                sum(p is not None for p in pages_list))
         self.cache = {"layers": CS.reset_slot_state(
             self.cache["layers"], jax.tree.map(jnp.asarray, tree), slot,
             lm.uses_scan(self.cfg))}
@@ -262,10 +297,31 @@ class PagedServingEngine:
         ck, cv = self._encode_cross(self.params,
                                     jnp.asarray(frames)[None])
         layers = self.cache["layers"]
+        upd = {}
+        if "cross_k_scale" in layers:
+            # quantized CrossAttnStatic: one scale per (layer, slot),
+            # written once here — the slot is never rewritten, so no RMW
+            qmax = self.cfg.page_layout.qmax
+
+            def quantize(x, dst):
+                amax = jnp.max(jnp.abs(x),
+                               axis=tuple(range(1, x.ndim)))      # (L,)
+                s = jnp.maximum(amax, PC.QUANT_EPS) / qmax
+                codes = PC.quantize_rows(
+                    x, s.reshape((-1,) + (1,) * (x.ndim - 1)),
+                    dst.dtype, qmax)
+                return codes, s
+
+            ck, ks = quantize(ck, layers["cross_k"])
+            cv, vs = quantize(cv, layers["cross_v"])
+            upd["cross_k_scale"] = _dus(layers["cross_k_scale"],
+                                        ks[:, None], slot, 1)
+            upd["cross_v_scale"] = _dus(layers["cross_v_scale"],
+                                        vs[:, None], slot, 1)
         self.cache = {"layers": {
             **layers,
             "cross_k": _dus(layers["cross_k"], ck, slot, 1),
-            "cross_v": _dus(layers["cross_v"], cv, slot, 1)}}
+            "cross_v": _dus(layers["cross_v"], cv, slot, 1), **upd}}
 
     # ------------------------------------------------------------ admin
 
@@ -372,15 +428,37 @@ class PagedServingEngine:
         self._prefill_at.pop(slot, None)
         self._admit_order.remove(slot)
 
+    def _retain_slot_pages(self, slot: int, req: Request) -> None:
+        """Hybrid preemption (StateSlot + paged K/V, e.g. hymba): park the
+        slot's own K/V pages as *private* pool entries so re-admission can
+        apply the state snapshot instead of recomputing the folded prompt.
+        Private entries are unreachable from prefix matching; once the
+        slot releases its references they sit unreferenced, so under
+        pressure the pool evicts them like any cached page and the restore
+        falls back to recompute (``_try_restore_state`` is all-or-nothing:
+        a partial K/V prefix is useless to the snapshot)."""
+        keys, ok = [], True
+        for p in self.slot_pages[slot]:
+            if p is None:
+                continue
+            try:
+                keys.append(self.pool.register_private(p))
+            except ValueError:
+                ok = False      # page already published (shared): the
+                break           # retained set cannot be made whole
+        if ok and keys:
+            self._page_snap[id(req)] = (list(self.slot_pages[slot]), keys)
+        elif keys:
+            self._drop_page_snap(([], keys))
+
     def _preempt(self, slot: int) -> None:
         """Recompute-preemption: fold generated tokens into the prompt and
         requeue; greedy decoding reproduces the rest. A preempted request
         *releases* its references — shared pages are never freed out from
-        under their other readers. Pure-state families additionally
+        under their other readers. State-carrying families additionally
         snapshot the slot's recurrent state to host so re-admission can
-        skip re-running the folded prompt (paged families keep recompute:
-        their released K/V pages must be rebuilt anyway, which rebuilds
-        the state for free)."""
+        skip re-running the folded prompt; hybrids park their K/V pages
+        beside the snapshot (pure-paged families keep recompute)."""
         req = self.slot_req[slot]
         consumed = self._prefill_at.get(slot)
         folded = self._folded.get(id(req), 0)
@@ -399,6 +477,8 @@ class PagedServingEngine:
                 self.cache["layers"], self._fresh_state, slot,
                 lm.uses_scan(self.cfg))
             self._state_snap[id(req)] = (consumed, jax.device_get(snap))
+            if self.has_pages:
+                self._retain_slot_pages(slot, req)
         self._release(slot, done=False)
         self._queue.appendleft(req)
         self.n_preempted += 1
@@ -703,3 +783,26 @@ class PagedServingEngine:
             if rng is not None:
                 rng, sub = jax.random.split(rng)
             self.tick(sub)
+
+    # ------------------------------------------- Engine protocol surface
+
+    def drain(self, max_ticks: int = 10_000,
+              rng: Optional[jax.Array] = None) -> None:
+        """Engine protocol: run ticks until no request is queued or live."""
+        self.run_until_done(max_ticks, rng)
+
+    def stats(self) -> Dict[str, Any]:
+        """Engine protocol: one flat dict of serving counters, keyed the
+        same across engine kinds so harnesses never branch on the type."""
+        return {
+            "engine": "paged",
+            "ticks": self.ticks,
+            "layout": self.cfg.page_layout.describe(),
+            "n_preempted": self.n_preempted,
+            "n_recycled_pages": self.n_recycled_pages,
+            "n_cow_copies": self.n_cow_copies,
+            "n_state_restores": self.n_state_restores,
+            "peak_slot_pages": self.peak_slot_pages,
+            "n_prefill_computed_tokens": self.n_prefill_computed_tokens,
+            "prefix_hit_rate": self.prefix_hit_rate(),
+        }

@@ -1,0 +1,325 @@
+"""PageLayout API: latent-basis + quantized KV pages (DESIGN.md §10).
+
+Locks the seam from four sides: the PageLayout dataclass itself
+(parse/describe/footprint), the quantized page read-modify-write path
+(token + chunk writes, dequantized logical views, COW of the sidecar
+scales), the acceptance parity matrix (latent-basis storage at full rank
+is greedy-identical to native pages across llama2 / mixtral / whisper ×
+full / loki / loki_block), and the hybrid preemption path that now
+retains its pages as private pool entries instead of recomputing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import PageLayout
+from repro.models import lm
+from repro.serving import paged_cache as PC
+from repro.serving.engine import Engine, Request, ServingEngine
+from repro.serving.scheduler import PagedServingEngine
+
+
+def _cfg(arch, policy, layout=None):
+    cfg = get_smoke_config(arch)
+    if policy != "full":
+        cfg = cfg.with_policy(policy, k_f=0.5, d_f=0.5, block_size=8,
+                              local_window=4, min_k=4)
+    return cfg.with_layout(layout) if layout else cfg
+
+
+def _frames(cfg, i):
+    if not cfg.is_encoder_decoder:
+        return None
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(100 + i),
+                                        (cfg.enc_seq, cfg.d_model)),
+                      np.float32)
+
+
+def _reqs(cfg, prompts, max_new):
+    return [Request(rid=i, prompt=p.copy(), max_new=max_new,
+                    frames=_frames(cfg, i))
+            for i, p in enumerate(prompts)]
+
+
+def _paged_outs(params, cfg, prompts, max_new=4, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("smax", 48)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    eng = PagedServingEngine(params, cfg, **kw)
+    reqs = _reqs(cfg, prompts, max_new)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(2000)
+    assert all(r.done for r in reqs)
+    return [r.out for r in reqs], eng
+
+
+# ===================================================================
+# PageLayout dataclass
+# ===================================================================
+
+def test_layout_parse_describe_roundtrip():
+    for spec in ("fp16", "fp32:pca", "int8:pca:r=32", "fp8:native", "bf16"):
+        lay = PageLayout.parse(spec)
+        assert PageLayout.parse(lay.describe()) == lay
+    assert PageLayout.parse("int8:pca:r=32") == PageLayout(
+        dtype="int8", basis="pca", rank=32)
+    # default layout is the pre-layout engine, bit for bit
+    assert PageLayout.parse("") == PageLayout()
+    assert PageLayout().describe() == "fp32:native"
+
+
+def test_layout_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        PageLayout.parse("int4")                 # unknown dtype
+    with pytest.raises(ValueError):
+        PageLayout.parse("fp16:wat")             # unknown token
+    with pytest.raises(ValueError):
+        PageLayout(dtype="fp16", rank=16)        # rank needs basis=pca
+    with pytest.raises(ValueError):
+        PageLayout(scale_granularity="tensor")   # only per-page scales
+
+
+def test_layout_footprint_and_widths():
+    hd, n_kv = 64, 4
+    fp16 = PageLayout.parse("fp16")
+    int8 = PageLayout.parse(f"int8:pca:r={hd // 2}")
+    assert fp16.k_width(hd) == hd
+    assert int8.k_width(hd) == hd // 2
+    assert int8.k_width(16) == 16                # rank clamps to head_dim
+    assert fp16.bytes_per_page_row(hd, n_kv) == 2 * n_kv * 2 * hd
+    # the acceptance ratio: int8 latent at r=D/2 is >= 2x smaller
+    ratio = fp16.bytes_per_page_row(hd, n_kv) / int8.bytes_per_page_row(
+        hd, n_kv)
+    assert ratio >= 2.0
+    assert int8.quantized and int8.qmax == 127
+    assert PageLayout.parse("fp8").qmax == 448
+    assert not fp16.quantized
+
+
+# ===================================================================
+# Quantized page RMW: token writes, chunk writes, dequantized views
+# ===================================================================
+
+def _quant_pool(n_pages=4, ps=8, h=2, w=6, dtype=jnp.int8):
+    pool = jnp.zeros((n_pages * ps, h, w), dtype)
+    scales = jnp.full((n_pages,), PC.QUANT_EPS, jnp.float32)
+    return pool, scales
+
+
+@pytest.mark.parametrize("dtype,qmax", [(jnp.int8, 127.0),
+                                        (jnp.float8_e4m3fn, 448.0)])
+def test_token_write_roundtrip(dtype, qmax):
+    """Sequential decode appends re-quantize the page's written prefix
+    exactly: the dequantized view tracks the f32 reference within the
+    step size of the page's final scale."""
+    ps, h, w = 8, 2, 6
+    pool, scales = _quant_pool(ps=ps, h=h, w=w, dtype=dtype)
+    table = jnp.asarray([[1, 2]], jnp.int32)     # one slot, pages 1..2
+    rng = np.random.default_rng(0)
+    ref = jnp.asarray(rng.normal(size=(12, h, w)) *
+                      np.linspace(0.5, 4.0, 12)[:, None, None],
+                      jnp.float32)               # growing amax: RMW rescales
+    for t in range(12):
+        pool, scales = PC.write_token_rows_q(
+            pool, scales, ref[t][None], table, jnp.asarray([t], jnp.int32),
+            ps, qmax=qmax)
+    view = PC.gather_logical_dq(pool, scales, table, ps)[0, :12]
+    amax = float(jnp.max(jnp.abs(ref)))
+    # each append re-quantizes the page's written prefix under the (grown)
+    # scale, so early rows absorb up to a half-step per rescale: the bound
+    # is ps half-steps of the final scale, not one
+    tol = (amax / qmax * 0.51 * ps if dtype == jnp.int8
+           else amax * 0.25)             # fp8 e4m3: 2^-4 relative/step
+    np.testing.assert_allclose(np.asarray(view), np.asarray(ref), atol=tol)
+    # both touched pages got real scales; untouched pages kept the floor
+    s = np.asarray(scales)
+    assert (s[1] > PC.QUANT_EPS) and (s[2] > PC.QUANT_EPS)
+    assert s[3] == np.float32(PC.QUANT_EPS)
+
+
+def test_chunk_write_roundtrip_with_padding():
+    """A padded final chunk never writes rows at or past n_valid, and a
+    spanned page receiving no valid row keeps its scale untouched."""
+    ps, h, w = 8, 2, 4
+    pool, scales = _quant_pool(ps=ps, h=h, w=w)
+    table_row = jnp.asarray([1, 2, 3], jnp.int32)
+    rng = np.random.default_rng(1)
+    chunk = jnp.asarray(rng.normal(size=(8, h, w)) * 3.0, jnp.float32)
+    # 5 valid rows at logical 6..10: spans pages 0 (rows 6,7) and 1
+    pool, scales = PC.write_chunk_rows_q(pool, scales, chunk,
+                                         table_row, 6, ps, n_valid=5,
+                                         qmax=127.0)
+    view = PC.gather_logical_dq(pool, scales, table_row[None], ps)[0]
+    amax = float(jnp.max(jnp.abs(chunk[:5])))
+    np.testing.assert_allclose(np.asarray(view[6:11]),
+                               np.asarray(chunk[:5]),
+                               atol=amax / 127 * 0.51)
+    # logical 11.. (the padding) and page 3 (never spanned) stayed zero
+    assert float(jnp.abs(view[11:]).max()) == 0.0
+    assert np.asarray(scales)[3] == np.float32(PC.QUANT_EPS)
+
+
+def test_cow_scale_divergence_keeps_donor_intact():
+    """COW of a quantized page: the fork re-quantizes under its own scale
+    as it appends, while the donor's codes AND scale stay byte-identical —
+    the shared-prefix reader keeps dequantizing the same values."""
+    ps, h, w = 8, 2, 4
+    pool, scales = _quant_pool(ps=ps, h=h, w=w)
+    table = jnp.asarray([[1]], jnp.int32)
+    rng = np.random.default_rng(2)
+    donor_rows = jnp.asarray(rng.normal(size=(5, h, w)), jnp.float32)
+    for t in range(5):
+        pool, scales = PC.write_token_rows_q(
+            pool, scales, donor_rows[t][None], table,
+            jnp.asarray([t], jnp.int32), ps, qmax=127.0)
+    donor_codes = np.asarray(pool[ps:2 * ps]).copy()
+    donor_scale = float(scales[1])
+
+    # fork: copy page 1 -> page 2 (rows + scale), then diverge with a row
+    # 50x larger than anything the donor holds (forces a rescale)
+    pool = PC.copy_page_rows(pool, jnp.int32(1), jnp.int32(2), ps)
+    scales = PC.copy_page_scale(scales, jnp.int32(1), jnp.int32(2))
+    fork_table = jnp.asarray([[2]], jnp.int32)
+    big = jnp.full((1, h, w), 50.0 * float(jnp.abs(donor_rows).max()),
+                   jnp.float32)
+    pool, scales = PC.write_token_rows_q(pool, scales, big, fork_table,
+                                         jnp.asarray([5], jnp.int32), ps,
+                                         qmax=127.0)
+    # donor untouched, scale included
+    assert np.array_equal(np.asarray(pool[ps:2 * ps]), donor_codes)
+    assert float(scales[1]) == donor_scale
+    assert float(scales[2]) > donor_scale        # fork rescaled for the row
+    # the fork's shared prefix still dequantizes to the donor's values,
+    # within the fork's (coarser) step size
+    fork_view = PC.gather_logical_dq(pool, scales, fork_table, ps)[0, :5]
+    np.testing.assert_allclose(np.asarray(fork_view),
+                               np.asarray(donor_rows),
+                               atol=float(scales[2]) * 0.51)
+
+
+# ===================================================================
+# Acceptance parity matrix: latent basis at full rank == native pages
+# ===================================================================
+
+PARITY = [(a, p)
+          for a in ("llama2-7b", "mixtral-8x22b", "whisper-small")
+          for p in ("full", "loki", "loki_block")]
+
+
+@pytest.mark.parametrize("arch,policy", PARITY,
+                         ids=[f"{a}-{p}" for a, p in PARITY])
+def test_latent_full_rank_matches_native_pages(arch, policy):
+    """basis=pca at r=D stores K rotated by an orthogonal P: scores are
+    unchanged (Lemma 4.1), so greedy outputs must match the native-layout
+    paged engine token for token — fp16 storage included (the acceptance
+    layout)."""
+    cfg = _cfg(arch, policy)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompts = [(np.arange(6 + 5 * i) * 7 + i) % cfg.vocab for i in range(2)]
+    base, _ = _paged_outs(params, cfg, prompts)
+    for spec in ("fp32:pca", "fp16:pca"):
+        outs, _ = _paged_outs(params, cfg.with_layout(spec), prompts)
+        assert outs == base, (arch, policy, spec, outs, base)
+
+
+def test_quantized_latent_serves_and_frees_pool():
+    """int8 latent pages at r=D/2 — approximate by design, so no parity
+    assert; the engine must drain the stream, produce in-vocab tokens and
+    return every page."""
+    cfg = _cfg("llama2-7b", "loki_block",
+               layout=f"int8:pca:r={get_smoke_config('llama2-7b').resolved_head_dim // 2}")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompts = [(np.arange(6 + 5 * i) * 7 + i) % cfg.vocab for i in range(2)]
+    outs, eng = _paged_outs(params, cfg, prompts, prefix_cache=False)
+    assert all(0 <= t < cfg.vocab for out in outs for t in out)
+    assert eng.pool.free_pages == eng.pool.n_pages - 1
+    assert eng.stats()["layout"].startswith("int8:pca")
+
+
+def test_rank_truncation_divergence_is_bounded():
+    """r < D drops trailing basis dims: chunked-prefill logits must move
+    (the approximation is real) but stay bounded, while r = D stays
+    numerically on top of the native layout."""
+    cfg = _cfg("llama2-7b", "full")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompt = (np.arange(19) * 7 + 3) % cfg.vocab
+    hd = cfg.resolved_head_dim
+
+    def chunk_logits(c):
+        ps, smax = 8, 32
+        cache = lm.init_paged_cache(c, smax // ps + 2, ps, jnp.float32,
+                                    n_slots=1)
+        table = jnp.arange(1, smax // ps + 1, dtype=jnp.int32)[None]
+        lg = None
+        for start in range(0, len(prompt), 4):
+            nv = min(4, len(prompt) - start)
+            buf = np.zeros((1, 4), np.int32)
+            buf[0, :nv] = prompt[start:start + nv]
+            lg, cache = lm.prefill_chunk(params, c, cache,
+                                         jnp.asarray(buf),
+                                         jnp.int32(start), jnp.int32(nv),
+                                         table, ps, slot=jnp.int32(0))
+        return np.asarray(lg)
+
+    ref = chunk_logits(cfg)
+    full_rank = chunk_logits(cfg.with_layout("fp32:pca"))
+    half_rank = chunk_logits(cfg.with_layout(f"fp32:pca:r={hd // 2}"))
+    np.testing.assert_allclose(full_rank, ref, atol=1e-4)
+    err = float(np.abs(half_rank - ref).max())
+    assert np.isfinite(half_rank).all()
+    assert err > 1e-4                    # truncation genuinely bites
+    assert err < 50.0                    # ...but stays bounded
+
+
+# ===================================================================
+# Hybrid preemption retains its pages (satellite of DESIGN.md §10)
+# ===================================================================
+
+def test_hybrid_preemption_restores_retained_pages():
+    """The tight-pool hymba stream from the recompute-era test, now pinned
+    to the retention path: preemptions materialize, every re-admission
+    restores the state snapshot onto its retained private pages (restores
+    == preemptions would be too strict under eviction, but on this stream
+    none are evicted), and greedy outputs still match the dense truth."""
+    cfg = get_smoke_config("hymba-1.5b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompts = [(np.arange(9 + i) * 5 + i) % cfg.vocab for i in range(4)]
+    truth = []
+    for i, p in enumerate(prompts):
+        eng = ServingEngine(params, cfg, n_slots=1, smax=32)
+        r = Request(rid=0, prompt=p.copy(), max_new=14)
+        eng.submit(r)
+        eng.drain(800)
+        truth.append(r.out)
+    outs, eng = _paged_outs(params, cfg, prompts, max_new=14,
+                            smax=32, n_pages=6)
+    assert eng.n_preempted > 0
+    assert eng.n_state_restores > 0      # retention, not recompute
+    assert outs == truth
+    assert eng.pool.free_pages == eng.pool.n_pages - 1
+
+
+# ===================================================================
+# Engine protocol
+# ===================================================================
+
+def test_both_engines_satisfy_protocol():
+    cfg = get_smoke_config("llama2-7b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    dense = ServingEngine(params, cfg, n_slots=1, smax=32)
+    paged = PagedServingEngine(params, cfg, n_slots=1, smax=32,
+                               page_size=8)
+    for eng, kind in ((dense, "dense"), (paged, "paged")):
+        assert isinstance(eng, Engine)
+        r = Request(rid=0, prompt=np.arange(5, dtype=np.int64) % cfg.vocab,
+                    max_new=2)
+        eng.submit(r)
+        eng.drain(100)
+        assert r.done
+        st = eng.stats()
+        assert st["engine"] == kind and st["ticks"] > 0
+    assert paged.stats()["layout"] == "fp32:native"
