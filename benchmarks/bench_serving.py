@@ -42,8 +42,23 @@ the fp16 page footprint; asserted):
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke \\
         --workload layout
 
-Results land in ``BENCH_serving.json`` at the repo root (the shared-prefix
-and layout rows merge into the existing report).
+``--workload chaos`` is the robustness acceptance run (DESIGN.md §11):
+the same stream twice through the paged engine, fault-free and under a
+seeded FaultPlan with the per-tick invariant auditor on. Requests that
+finish DONE under faults must be bit-identical to the fault-free run,
+every request must end in a correct terminal status, and the pool must
+drain back to its baseline accounting — all asserted, then reported as
+lifecycle/fault counters:
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke \\
+        --workload chaos
+
+``--profile device`` scales the standard workload to device-sized pools
+(larger smax / pool / stream) and adds an estimated decode bytes-moved
+upper bound per engine row — the number to watch on a real accelerator.
+
+Results land in ``BENCH_serving.json`` at the repo root (the shared-prefix,
+layout and chaos rows merge into the existing report).
 """
 from __future__ import annotations
 
@@ -63,6 +78,8 @@ import jax.numpy as jnp  # noqa: E402
 from benchmarks import common  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.models import lm  # noqa: E402
+from repro.serving import faults as FI  # noqa: E402
+from repro.serving import lifecycle as LC  # noqa: E402
 from repro.serving.engine import Request, ServingEngine  # noqa: E402
 from repro.serving.scheduler import PagedServingEngine  # noqa: E402
 
@@ -266,6 +283,78 @@ def layout_workload(data, *, n_slots, smax, page_size, chunk, max_new,
     return rows
 
 
+DEFAULT_CHAOS = ("seed=3,nan_logits=0.04,alloc_fail=0.05,"
+                 "pool_exhaustion=0.03,kernel_fail=0.02")
+
+
+def chaos_workload(params, cfg, data, *, n_slots, smax, page_size, chunk,
+                   max_new, n_req, spec=""):
+    """Robustness acceptance: one stream, fault-free then under a seeded
+    FaultPlan with the invariant auditor on every tick. Asserts the §11
+    acceptance bar — DONE outputs bit-identical to the fault-free run,
+    every request in a legal terminal status, pool accounting back to
+    baseline after drain — and reports the lifecycle/fault counters."""
+    def stream():
+        return _requests(data, n_req, max_new, vocab=cfg.vocab)
+
+    def pool_at_baseline(eng):
+        # after a full drain nothing may hold a reference: every page is
+        # either free or an unreferenced cached (LRU) page
+        free = len(eng.pool.free_page_ids())
+        lru = len(eng.pool.lru_page_ids())
+        return free + lru == eng.pool.n_pages - 1
+
+    base_eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                  page_size=page_size, prefill_chunk=chunk,
+                                  audit=True)
+    base = stream()
+    r_base = _drain(base_eng, base)
+    assert pool_at_baseline(base_eng), "fault-free run leaked pages"
+    truth = {r.rid: r.out for r in base}
+
+    spec = spec or DEFAULT_CHAOS
+    plan = FI.FaultPlan.parse(spec)
+    eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                             page_size=page_size, prefill_chunk=chunk,
+                             faults=plan, audit=True, shed_after=8)
+    rs = stream()
+    for r in rs:
+        eng.submit(r)
+    t0 = time.time()
+    eng.drain(max_ticks=20_000)
+    dt = time.time() - t0
+
+    not_terminal = [r.rid for r in rs if not LC.is_terminal(r)]
+    assert not not_terminal, f"requests left live: {not_terminal}"
+    mismatch = [r.rid for r in rs if r.done and r.out != truth[r.rid]]
+    assert not mismatch, \
+        f"DONE outputs diverged from the fault-free run: {mismatch}"
+    assert pool_at_baseline(eng), \
+        "chaos drain did not return the pool to baseline accounting"
+
+    st = eng.stats()
+    done = sum(r.done for r in rs)
+    rows = {
+        "fault_spec": plan.describe(),
+        "requests": n_req,
+        "wall_s": round(dt, 3),
+        "ticks": st["ticks"],
+        "lifecycle": LC.summarize(rs),
+        "faults_injected": dict(plan.counts),
+        "n_preempted": eng.n_preempted,
+        "n_quarantined": eng.n_quarantined,
+        "n_shed": eng.n_shed,
+        "n_backend_fallbacks": eng.n_backend_fallbacks,
+        "done_bit_identical": done,
+        "fault_free_tok_per_s": r_base["tok_per_s"],
+        "auditor": "green",       # every tick audited, none raised
+    }
+    print(f"[chaos] {plan.describe()}: {LC.summarize(rs)}, "
+          f"faults {dict(plan.counts)}, auditor green, "
+          f"{done} DONE bit-identical")
+    return rows
+
+
 def _write_merged(path, update):
     """Update the report in place: each invocation owns its sections
     (standard / families / shared_prefix) and must not erase the others'."""
@@ -294,12 +383,25 @@ def main():
                          "tiny config each through paged vs dense: "
                          + ",".join(FAMILY_ARCHS))
     ap.add_argument("--workload", default="standard",
-                    choices=["standard", "shared-prefix", "layout"],
+                    choices=["standard", "shared-prefix", "layout",
+                             "chaos"],
                     help="shared-prefix: N requests over one long system "
                          "prompt, prefix cache on vs off (hit rate, TTFT, "
                          "tok/s). layout: the same stream under each "
-                         "--layouts PageLayout (bytes/page, tok/s). Both "
-                         "merge into the existing JSON report")
+                         "--layouts PageLayout (bytes/page, tok/s). chaos: "
+                         "the same stream fault-free vs under a seeded "
+                         "FaultPlan with the invariant auditor on "
+                         "(DESIGN.md §11 acceptance). All merge into the "
+                         "existing JSON report")
+    ap.add_argument("--faults", default="",
+                    help="FaultPlan spec for --workload chaos "
+                         f"(default: {DEFAULT_CHAOS})")
+    ap.add_argument("--profile", default="",
+                    choices=["", "device"],
+                    help="device: device-sized pool (smax=512, 32-token "
+                         "pages, longer stream) + estimated decode "
+                         "bytes-moved per row — explicit size flags still "
+                         "override")
     ap.add_argument("--layouts", default="",
                     help="comma list of PageLayout specs for --workload "
                          "layout (default: fp16, fp16:pca:r=D/2, "
@@ -307,7 +409,14 @@ def main():
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
-    if args.smoke:
+    if args.profile == "device":
+        n_slots = args.n_slots or 4
+        smax = args.smax or 512
+        page_size = args.page_size or 32
+        chunk = args.prefill_chunk or 64
+        max_new = args.max_new or 32
+        n_req = args.requests or 4 * n_slots
+    elif args.smoke:
         n_slots = args.n_slots or 2
         smax = args.smax or 64
         page_size = args.page_size or 16
@@ -345,6 +454,16 @@ def main():
         print(f"\nwrote {args.out}")
         return
 
+    if args.workload == "chaos":
+        rows = chaos_workload(
+            params, cfg, data, n_slots=n_slots, smax=smax,
+            page_size=page_size, chunk=chunk, max_new=max_new,
+            n_req=n_req, spec=args.faults)
+        _write_merged(args.out, {"chaos": rows})
+        print(json.dumps({"chaos": rows}, indent=2))
+        print(f"\nwrote {args.out}")
+        return
+
     dense = ServingEngine(params, cfg, n_slots=n_slots, smax=smax)
     r_dense = _drain(dense, _requests(data, n_req, max_new))
     r_dense["cache_bytes"] = _cache_bytes(cfg, n_slots * smax)
@@ -355,6 +474,18 @@ def main():
     r_paged["cache_bytes"] = _cache_bytes(cfg, paged.pool.n_pages * page_size)
     r_paged["preempted"] = paged.n_preempted
     r_paged["peak_pages"] = paged.pool.n_pages - 1
+    if args.profile == "device":
+        # upper bound on decode-phase HBM reads: each generated token
+        # scans at most its slot's peak page span of K+V rows — the
+        # number to compare against kernel counters on real hardware
+        bpr = cfg.page_layout.bytes_per_page_row(cfg.resolved_head_dim,
+                                                 cfg.n_kv_heads)
+        for row, eng_ in ((r_dense, None), (r_paged, paged)):
+            rows_per_tok = (smax if eng_ is None
+                            else eng_.peak_slot_pages * page_size)
+            row["est_decode_read_bytes_ub"] = (
+                row["generated_tokens"] * cfg.n_layers * bpr
+                * rows_per_tok)
 
     # tight pool: the structural win — the same stream served from half the
     # pages (but always >= one full request), via continuous recycling

@@ -30,14 +30,44 @@ from repro.kernels import ops, tuning
 
 BACKENDS = ("auto", "pallas", "xla")
 
+# Backends disabled at runtime after a failure (graceful degradation,
+# DESIGN.md §11): when a fused-Pallas decode aborts mid-serving, the
+# engine reports it here and every subsequent ``resolve_backend`` routes
+# to the XLA path instead — the process keeps serving on the slow-but-
+# sound implementation rather than dying or flapping. Process-wide on
+# purpose: a kernel that aborted once on this host will abort again.
+_DISABLED: dict = {}          # backend -> reason
+
+
+def disable_backend(backend: str, reason: str = "") -> None:
+    """Mark a backend failed; resolve_backend avoids it from now on."""
+    if backend not in BACKENDS or backend == "auto":
+        raise ValueError(f"cannot disable backend {backend!r}")
+    _DISABLED[backend] = reason or "runtime failure"
+
+
+def enable_backend(backend: str) -> None:
+    """Clear a failure mark (tests, or operator-driven recovery)."""
+    _DISABLED.pop(backend, None)
+
+
+def backend_disabled(backend: str) -> Optional[str]:
+    """The failure reason if ``backend`` is disabled, else None."""
+    return _DISABLED.get(backend)
+
 
 def resolve_backend(backend: str, platform: Optional[str] = None) -> str:
-    """'auto' | 'pallas' | 'xla' -> the concrete backend for this host."""
+    """'auto' | 'pallas' | 'xla' -> the concrete backend for this host,
+    skipping backends disabled by an earlier runtime failure (the XLA
+    reference path is never disabled — it is the floor of the
+    degradation ladder)."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown loki backend {backend!r}; have {BACKENDS}")
     if backend == "auto":
         platform = platform or jax.default_backend()
-        return "pallas" if platform == "tpu" else "xla"
+        backend = "pallas" if platform == "tpu" else "xla"
+    if backend == "pallas" and "pallas" in _DISABLED:
+        return "xla"
     return backend
 
 

@@ -55,7 +55,9 @@ from repro.data.synthetic import DataConfig, SyntheticLM, jax_batch
 from repro.models import lm
 from repro.optim import adamw
 from repro.serving import cache_spec as CS
+from repro.serving import faults as FI
 from repro.serving.engine import Engine, Request, ServingEngine
+from repro.serving.lifecycle import Deadline, summarize
 from repro.serving.scheduler import PAGED_POLICIES, PagedServingEngine
 from repro.training.step import TrainState, make_train_step
 
@@ -94,6 +96,26 @@ class SchedulerSection:
 
 
 @dataclasses.dataclass(frozen=True)
+class LifecycleSection:
+    """Request-lifecycle hardening knobs (DESIGN.md §11)."""
+    admission: str = "strict"      # strict | lenient (oversized requests)
+    faults: str = ""               # FaultPlan.parse spec; '' = off
+    audit: bool = False            # per-tick invariant auditor
+    shed_after: int = 0            # preemptions before SHED (0 = never)
+    ttft_deadline: float = 0.0     # s to first token (0 = none)
+    total_deadline: float = 0.0    # s to completion (0 = none)
+
+    def fault_plan(self) -> Optional[FI.FaultPlan]:
+        return FI.FaultPlan.parse(self.faults) if self.faults else None
+
+    def request_deadline(self) -> Optional[Deadline]:
+        if not (self.ttft_deadline or self.total_deadline):
+            return None
+        return Deadline(ttft=self.ttft_deadline or None,
+                        total=self.total_deadline or None)
+
+
+@dataclasses.dataclass(frozen=True)
 class LayoutSection:
     """Physical page layout spec, ``PageLayout.parse`` syntax
     (e.g. ``fp16``, ``fp32:pca``, ``int8:pca:r=32``); '' = default."""
@@ -116,6 +138,8 @@ class ServeConfig:
     scheduler: SchedulerSection = dataclasses.field(
         default_factory=SchedulerSection)
     layout: LayoutSection = dataclasses.field(default_factory=LayoutSection)
+    lifecycle: LifecycleSection = dataclasses.field(
+        default_factory=LifecycleSection)
     requests: int = 6
     max_new: int = 16
     warm_steps: int = 60
@@ -134,6 +158,10 @@ class ServeConfig:
                 decode_budget=a.decode_budget,
                 prefix_cache=a.prefix_cache == "on"),
             layout=LayoutSection(spec=a.layout),
+            lifecycle=LifecycleSection(
+                admission=a.admission, faults=a.faults, audit=a.audit,
+                shed_after=a.shed_after, ttft_deadline=a.ttft_deadline,
+                total_deadline=a.total_deadline),
             requests=a.requests, max_new=a.max_new,
             warm_steps=a.warm_steps)
 
@@ -159,6 +187,7 @@ class ServeConfig:
         paged = self.engine.kind == "paged" and pageable
         if self.engine.kind == "paged" and not paged:
             print(f"note: {why}; falling back to the dense engine")
+        lc = self.lifecycle
         if paged:
             eng = PagedServingEngine(
                 params, cfg, n_slots=self.engine.n_slots,
@@ -170,11 +199,15 @@ class ServeConfig:
                 policy=self.scheduler.policy,
                 prefill_budget=self.scheduler.prefill_budget or None,
                 decode_budget=self.scheduler.decode_budget or None,
-                prefix_cache=self.scheduler.prefix_cache)
+                prefix_cache=self.scheduler.prefix_cache,
+                admission=lc.admission,
+                shed_after=lc.shed_after or None,
+                faults=lc.fault_plan(), audit=lc.audit)
         else:
             eng = ServingEngine(params, cfg, n_slots=self.engine.n_slots,
                                 smax=self.engine.smax,
-                                backend=self.engine.backend)
+                                backend=self.engine.backend,
+                                admission=lc.admission)
         return eng, paged
 
     def describe(self, cfg: ModelConfig) -> str:
@@ -205,6 +238,17 @@ class ServeConfig:
             f"layout: {lay.describe()} — {bpr * ps} B/page/layer"
             + (" (per-page f32 scales beside the table)"
                if lay.quantized else ""))
+        lc = self.lifecycle
+        plan = lc.fault_plan()
+        lines.append(
+            f"lifecycle: admission={lc.admission}"
+            + (f" shed_after={lc.shed_after}" if lc.shed_after else "")
+            + (f" ttft_deadline={lc.ttft_deadline}s" if lc.ttft_deadline
+               else "")
+            + (f" total_deadline={lc.total_deadline}s" if lc.total_deadline
+               else "")
+            + (f" faults=[{plan.describe()}]" if plan is not None else "")
+            + (" audit=per-tick" if lc.audit else ""))
         lines.append("paged-servable archs (default policy): "
                      + ", ".join(CS.servable_archs()))
         return "\n".join(lines)
@@ -266,6 +310,29 @@ def build_parser() -> argparse.ArgumentParser:
                          "fp32|fp16|bf16|int8|fp8, basis native|pca, "
                          "latent rank r (pca only); e.g. 'int8:pca:r=32'. "
                          "Empty = fp32 native (bit-identical to PR 5)")
+    ap.add_argument("--admission", default="strict",
+                    choices=["strict", "lenient"],
+                    help="strict FAILs requests whose prompt + max_new "
+                         "can never fit smax at submit(); lenient keeps "
+                         "the legacy truncate/cap degraded modes")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault-injection spec "
+                         "(serving/faults.py), e.g. "
+                         "'seed=3,nan_logits=0.05,kernel_fail@7'; sites: "
+                         + ", ".join(FI.FaultPlan.SITES))
+    ap.add_argument("--audit", action="store_true",
+                    help="run the pool/slot/table invariant auditor after "
+                         "every tick (raises AuditError on violation)")
+    ap.add_argument("--shed-after", type=int, default=0,
+                    help="preemptions a request survives before being "
+                         "shed (terminal SHED + retry-after hint); "
+                         "0 = never shed")
+    ap.add_argument("--ttft-deadline", type=float, default=0.0,
+                    help="per-request seconds-to-first-token budget "
+                         "(0 = none)")
+    ap.add_argument("--total-deadline", type=float, default=0.0,
+                    help="per-request total wall budget in seconds "
+                         "(0 = none)")
     ap.add_argument("--warm-steps", type=int, default=60,
                     help="brief training so generation has signal")
     ap.add_argument("--dryrun", action="store_true",
@@ -332,11 +399,13 @@ def main():
               f"prefix-cache={share}")
     # the priority policy needs classes to tell apart: spread the demo
     # stream over two of them (even rids are urgent)
+    deadline = sc.lifecycle.request_deadline()
     reqs = [Request(rid=i,
                     prompt=data.batch_at(4000 + i)["tokens"][0, :24 + 4 * i],
                     max_new=sc.max_new,
                     priority=(i + 1) % 2
                     if sc.scheduler.policy == "priority" else 0,
+                    deadline=deadline,
                     frames=(np.asarray(_frames(cfg, 4000 + i)[0])
                             if cfg.is_encoder_decoder else None))
             for i in range(sc.requests)]
@@ -349,6 +418,18 @@ def main():
     print(f"policy={cfg.attn_policy()} served {len(reqs)} requests "
           f"({toks} tokens) in {eng.ticks} ticks, {dt:.1f}s "
           f"-> {toks/dt:.1f} tok/s, {1e3*dt/max(eng.ticks,1):.0f} ms/tick")
+    st = eng.stats()
+    line = f"lifecycle: {summarize(reqs)}"
+    for k in ("n_stalled", "n_shed", "n_quarantined",
+              "n_backend_fallbacks"):
+        if st.get(k):
+            line += f" {k}={st[k]}"
+    if st.get("faults"):
+        line += f" faults={st['faults']}"
+    print(line)
+    for r in reqs:
+        if str(r.status) not in ("done",):
+            print(f"  req{r.rid}: {r.status} — {r.detail}")
     if paged and eng.prefix_caching:
         print(f"prefix cache: {eng.n_prefix_hit_tokens} hit tokens, "
               f"{eng.n_prefill_computed_tokens} computed "

@@ -24,6 +24,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import lm
 from repro.serving import cache_spec as CS
+from repro.serving import lifecycle as LC
+from repro.serving.lifecycle import Deadline, Status
 
 
 @dataclasses.dataclass
@@ -32,17 +34,28 @@ class Request:
     prompt: np.ndarray            # (S_p,) int32
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+    done: bool = False            # finished *normally* (== status DONE)
     # scheduling class: higher is more urgent. FIFO ignores it; the paged
     # engine's priority policy admits (and, for strictly higher classes,
     # preempts) by it. Ties fall back to arrival order.
     priority: int = 0
     t_submit: float = 0.0         # set by submit(); for latency reporting
     t_first: float = 0.0          # first generated token (TTFT reporting)
-    t_done: float = 0.0           # set when the request finishes
+    t_done: float = 0.0           # set at any terminal status
     # encoder-decoder (whisper): precomputed frame embeddings (enc_seq,
     # d_model); the engine runs the encoder once at admission
     frames: Optional[np.ndarray] = None
+    # lifecycle (serving/lifecycle.py): where the request is, why it
+    # ended (terminal detail), and its wall budgets on the engine clock
+    status: Status = Status.QUEUED
+    detail: str = ""
+    deadline: Optional[Deadline] = None
+    # SHED only: the scheduler's estimate (in ticks) of when resubmitting
+    # is worth trying — the backlog it shed this request to clear
+    retry_after: float = 0.0
+    # times this request lost its slot to preemption (scheduler-stamped;
+    # feeds the shed policy's churn tie-break)
+    n_preempts: int = 0
 
 
 def context_cap(smax: int, gen_tokens: int) -> int:
@@ -57,18 +70,38 @@ def context_cap(smax: int, gen_tokens: int) -> int:
 @runtime_checkable
 class Engine(Protocol):
     """What a serving engine looks like to harnesses (benchmarks, serve
-    CLI, tests): submit requests, advance ticks, drain to completion, and
-    report counters — one surface across the dense and paged engines, so
-    callers never branch on the engine kind."""
+    CLI, tests): submit requests, advance ticks, cancel mid-flight, drain
+    to completion, and report counters — one surface across the dense and
+    paged engines, so callers never branch on the engine kind."""
 
     def submit(self, req: "Request") -> None: ...
 
     def tick(self, rng: Optional[jax.Array] = None) -> None: ...
 
+    def cancel(self, rid: int, detail: str = "client cancel") -> bool: ...
+
     def drain(self, max_ticks: int = 10_000,
               rng: Optional[jax.Array] = None) -> None: ...
 
     def stats(self) -> Dict[str, Any]: ...
+
+
+def oversized_reason(prompt_len: int, max_new: int,
+                     smax: int) -> Optional[str]:
+    """Why a request can never be held whole in an ``smax``-row context,
+    or None if it fits. Shared by both engines' strict admission so a
+    doomed request FAILs at ``submit()`` with a clear reason instead of
+    being silently truncated (prompt) or capped (generation) deep inside
+    admission (a request with ``prompt + max_new == smax`` exactly fills
+    the context: its last token lands at row smax - 1)."""
+    if prompt_len < 1:
+        return "empty prompt"
+    if max_new < 1:
+        return f"max_new={max_new} < 1"
+    if prompt_len + max_new > smax:
+        return (f"prompt ({prompt_len}) + max_new ({max_new}) exceeds "
+                f"context capacity {smax}; shorten one or raise smax")
+    return None
 
 
 def sample_next(logits, *, greedy: bool, rng, ticks: int):
@@ -82,17 +115,38 @@ def sample_next(logits, *, greedy: bool, rng, ticks: int):
 
 
 class ServingEngine:
+    """Dense slot engine.
+
+    admission  'strict' (default) FAILs requests whose prompt + max_new
+               can never fit the smax-row context at ``submit()``;
+               'lenient' keeps the legacy degraded modes (prompt
+               truncated to the most recent context, generation capped
+               at capacity)
+    clock      zero-arg wall clock (default time.time) stamping
+               t_submit/t_first/t_done and driving Request.deadline
+               expiry — inject lifecycle.ManualClock for determinism
+    """
+
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  smax: int = 512, eos_id: Optional[int] = None,
-                 greedy: bool = True, backend: Optional[str] = None):
+                 greedy: bool = True, backend: Optional[str] = None,
+                 admission: str = "strict", clock=None):
         if backend is not None:
             # route the decode hot path through the chosen kernel backend
             # (core/dispatch.py): "pallas" | "xla" | "auto"
             cfg = cfg.replace(
                 loki=dataclasses.replace(cfg.loki, backend=backend))
+        if admission not in ("strict", "lenient"):
+            raise ValueError(f"admission={admission!r}; "
+                             "use 'strict' or 'lenient'")
         self.params, self.cfg = params, cfg
         self.n_slots, self.smax = n_slots, smax
         self.eos_id, self.greedy = eos_id, greedy
+        self.admission = admission
+        self._clock = clock or time.time
+        self.lifecycle_counts: Dict[str, int] = {}
+        self.n_stalled = 0
+        self.stalled_rids: List[int] = []
         self.cache = lm.init_cache(cfg, n_slots, smax, jnp.float32)
         # recurrent-state families only: batch-1 init values so an
         # admission that skips prefill (1-token prompt) can reset its
@@ -115,10 +169,65 @@ class ServingEngine:
         self._queue: List[Request] = []
         self.ticks = 0
 
+    # -------------------------------------------------------- lifecycle
+
+    def _terminal(self, req: Request, status: Status,
+                  detail: str = "") -> None:
+        """Move a request to a terminal status with the shared stamps."""
+        LC.transition(req, status, detail)
+        req.t_done = self._clock()
+        self.lifecycle_counts[str(status)] = \
+            self.lifecycle_counts.get(str(status), 0) + 1
+
+    def _evict_slot(self, slot: int) -> None:
+        """Drop a slot's occupant without a DONE transition (cancel /
+        timeout): the stale cache rows beyond a future occupant's
+        position are unreachable, so clearing the bookkeeping is enough."""
+        self.live[slot] = False
+        self.slot_req[slot] = None
+
+    def cancel(self, rid: int, detail: str = "client cancel") -> bool:
+        """Terminate a request by id, queued or mid-generation. Returns
+        False when no live request has this rid (already terminal ids
+        are not resurrected)."""
+        for i, req in enumerate(self._queue):
+            if req.rid == rid:
+                del self._queue[i]
+                self._terminal(req, Status.CANCELLED, detail)
+                return True
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is not None and req.rid == rid:
+                self._terminal(req, Status.CANCELLED, detail)
+                self._evict_slot(slot)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        now = self._clock()
+        for req in [r for r in self._queue
+                    if LC.breach(r.deadline, now, r.t_submit, bool(r.out))]:
+            why = LC.breach(req.deadline, now, req.t_submit, bool(req.out))
+            self._queue.remove(req)
+            self._terminal(req, Status.TIMED_OUT, why)
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            why = LC.breach(req.deadline, now, req.t_submit, bool(req.out))
+            if why:
+                self._terminal(req, Status.TIMED_OUT, why)
+                self._evict_slot(slot)
+
     # ------------------------------------------------------------ admin
 
     def submit(self, req: Request) -> None:
-        req.t_submit = time.time()
+        req.t_submit = self._clock()
+        if self.admission == "strict":
+            why = oversized_reason(len(req.prompt), req.max_new, self.smax)
+            if why:
+                self._terminal(req, Status.FAILED, f"oversized: {why}")
+                return
         self._queue.append(req)
 
     def _admit(self) -> None:
@@ -135,6 +244,7 @@ class ServingEngine:
         slot's cache rows only — live slots are untouched. (The previous
         token-by-token fill ran a full batched decode step per prompt token,
         rewriting every live slot's cache at its current position.)"""
+        LC.transition(req, Status.PREFILL)
         toks = req.prompt.astype(np.int32)
         # cache can hold smax rows; keep the most recent context AND leave
         # generation headroom — truncating to smax itself left pos at
@@ -170,6 +280,7 @@ class ServingEngine:
         self.last_tok = self.last_tok.at[slot].set(int(toks[-1]))
         self.slot_req[slot] = req
         self.live[slot] = True
+        LC.transition(req, Status.DECODE)
 
     def _write_slot(self, slot: int, one) -> None:
         """Overwrite one slot's cache slice with a (batch-1) cache tree."""
@@ -182,6 +293,7 @@ class ServingEngine:
     # ------------------------------------------------------------- tick
 
     def tick(self, rng: Optional[jax.Array] = None) -> None:
+        self._expire_deadlines()
         self._admit()
         if not self.live.any():
             return
@@ -200,15 +312,13 @@ class ServingEngine:
             tok = int(nxt_np[slot])
             req.out.append(tok)
             if len(req.out) == 1:
-                req.t_first = time.time()
+                req.t_first = self._clock()
             finished = (len(req.out) >= req.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
                         or int(pos_np[slot]) >= self.smax - 1)
             if finished:
-                req.done = True
-                req.t_done = time.time()
-                self.live[slot] = False
-                self.slot_req[slot] = None
+                self._terminal(req, Status.DONE)
+                self._evict_slot(slot)
             else:
                 self.last_tok = self.last_tok.at[slot].set(tok)
         self.ticks += 1
@@ -218,7 +328,12 @@ class ServingEngine:
         """Drive ticks to completion. ``rng`` (non-greedy sampling): split a
         fresh subkey per tick — without it every run re-derives
         PRNGKey(tick) and two engines sampling the same tick draw identical
-        tokens."""
+        tokens.
+
+        Hitting ``max_ticks`` with work still pending is a *stall*, and it
+        is reported instead of silently returned from: every still-queued
+        or still-running request is marked TIMED_OUT and counted in
+        ``stats()['n_stalled']`` so hangs show up in tests and benches."""
         for _ in range(max_ticks):
             if not self._queue and not self.live.any():
                 return
@@ -226,6 +341,23 @@ class ServingEngine:
             if rng is not None:
                 rng, sub = jax.random.split(rng)
             self.tick(sub)
+        self._report_stall()
+
+    def _report_stall(self) -> None:
+        detail = "stalled: drain hit max_ticks"
+        for req in list(self._queue):
+            self._queue.remove(req)
+            self._terminal(req, Status.TIMED_OUT, detail)
+            self.n_stalled += 1
+            self.stalled_rids.append(req.rid)
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            self._terminal(req, Status.TIMED_OUT, detail)
+            self._evict_slot(slot)
+            self.n_stalled += 1
+            self.stalled_rids.append(req.rid)
 
     # ------------------------------------------- Engine protocol surface
 
@@ -238,4 +370,7 @@ class ServingEngine:
         """Engine protocol: serving counters. The dense engine has no pool,
         so pool-specific keys are simply absent — shared keys match the
         paged engine's."""
-        return {"engine": "dense", "ticks": self.ticks}
+        return {"engine": "dense", "ticks": self.ticks,
+                "lifecycle": dict(self.lifecycle_counts),
+                "n_stalled": self.n_stalled,
+                "stalled_rids": list(self.stalled_rids)}

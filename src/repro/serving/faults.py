@@ -1,0 +1,244 @@
+"""Deterministic fault injection + the per-tick pool invariant auditor.
+
+Robustness claims are worthless untested: this module gives the serving
+stack a **seeded FaultPlan** that the page pool, the scheduler, and the
+kernel dispatch layer consult at well-defined sites, so every failure mode
+the engine claims to survive can be reproduced bit-exactly in CI.
+
+Fault sites (``FaultPlan.SITES``):
+
+  pool_exhaustion  PagePool.available_pages reads 0 this tick — admission
+                   and growth see a full pool, driving the preemption /
+                   shedding machinery exactly as sustained pressure would.
+  alloc_fail       PagePool.alloc returns None (as if the free list ran
+                   dry mid-operation) even when pages exist — exercises
+                   every caller's contended-allocation path.
+  nan_logits       the decode step's logits row for one slot is poisoned
+                   to NaN, as a numerically-failing backend would — the
+                   engine must quarantine that slot (FAIL it) without
+                   poisoning the rest of the batch.
+  slot_corrupt     one live slot's host page bookkeeping is silently
+                   corrupted (its tail entry repointed at another held
+                   page). Nothing crashes by itself — the point is that
+                   the **auditor** turns this into a loud AuditError
+                   instead of cross-request cache corruption.
+  kernel_fail      the fused-Pallas decode raises this tick — the engine
+                   must fall back to the XLA path (core/dispatch.py) and
+                   keep serving.
+
+A site fires deterministically from ``blake2b(seed, site, tick, unit)``
+compared against its configured rate — no RNG state, so two runs with the
+same plan and schedule inject identical faults — plus an explicit
+``at={site: {(tick, unit), ...}}`` schedule for point injections in tests.
+``FaultPlan.parse`` reads the CLI spec, e.g.
+``"seed=3,nan_logits=0.05,alloc_fail=0.1,slot_corrupt@17"``.
+
+The **auditor** (:func:`audit_engine`) re-derives the pool's accounting
+from scratch every tick and cross-checks it against the scheduler's
+per-slot state and the device page table. Invariants (DESIGN.md §11):
+
+  A. partition      every non-trash physical page is in exactly one of
+                    {free list, cached LRU, held (refcount >= 1)}
+  B. holder balance every held page's refcount equals the number of slot
+                    page-table references to it (pages retained private
+                    across preemption sit in the LRU at refcount 0)
+  C. no wild refs   no slot references the trash page, an out-of-range
+                    page, or a page the pool considers free
+  D. share safety   a page referenced by two slots is registered in the
+                    public prefix index — never private, never anonymous
+  E. table mirror   the device page table rows equal the host
+                    ``slot_pages`` lists (0 where recycled / unmapped)
+  F. LRU sanity     every LRU page is registered and unreferenced
+
+Any violation raises :class:`AuditError` naming the invariant — silent
+corruption becomes a loud, attributable failure at the tick it happened.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import Counter
+from typing import Dict, Iterable, Optional, Set, Tuple
+
+import numpy as np
+
+
+class FaultInjected(RuntimeError):
+    """Raised by injection shims standing in for a real failure (e.g. a
+    Pallas kernel abort) so recovery paths can be driven in tests."""
+
+
+class AuditError(AssertionError):
+    """A serving invariant does not hold. AssertionError subclass so test
+    harnesses that expect assertion semantics treat it naturally, but it
+    is raised unconditionally (``python -O`` keeps the guard)."""
+
+
+class FaultPlan:
+    """Seeded, deterministic fault schedule.
+
+    rates  {site: probability in [0, 1]} — site fires at a tick/unit when
+           the hash of (seed, site, tick, unit) falls below the rate.
+    at     {site: {tick, ... | (tick, unit), ...}} — point schedule; a
+           bare tick fires for every unit that consults the site then.
+
+    ``advance(tick)`` is called by the engine at the top of each tick;
+    ``hit(site, unit)`` is what the instrumented sites consult. Each
+    distinct (site, tick, unit) is counted at most once in ``counts`` no
+    matter how often it is consulted within the tick, so the counters
+    read as "faults injected", not "times asked".
+    """
+
+    SITES = ("pool_exhaustion", "alloc_fail", "nan_logits",
+             "slot_corrupt", "kernel_fail")
+
+    def __init__(self, seed: int = 0,
+                 rates: Optional[Dict[str, float]] = None,
+                 at: Optional[Dict[str, Iterable]] = None):
+        rates = dict(rates or {})
+        at = {k: set(v) for k, v in (at or {}).items()}
+        for site in list(rates) + list(at):
+            if site not in self.SITES:
+                raise ValueError(f"unknown fault site {site!r}; "
+                                 f"have {self.SITES}")
+        self.seed = int(seed)
+        self.rates = rates
+        self.at = at
+        self.counts: Counter = Counter()
+        self._tick = 0
+        self._fired: Set[Tuple[str, int, int]] = set()
+
+    def advance(self, tick: int) -> None:
+        self._tick = int(tick)
+
+    def _u(self, site: str, tick: int, unit: int) -> float:
+        h = hashlib.blake2b(
+            f"{self.seed}:{site}:{tick}:{unit}".encode(), digest_size=8)
+        return int.from_bytes(h.digest(), "big") / 2.0 ** 64
+
+    def hit(self, site: str, unit: int = 0) -> bool:
+        """Does ``site`` fire for ``unit`` at the current tick?"""
+        tick = self._tick
+        fires = False
+        sched = self.at.get(site)
+        if sched and (tick in sched or (tick, unit) in sched):
+            fires = True
+        rate = self.rates.get(site, 0.0)
+        if not fires and rate > 0.0:
+            fires = self._u(site, tick, unit) < rate
+        if fires:
+            key = (site, tick, unit)
+            if key not in self._fired:
+                self._fired.add(key)
+                self.counts[site] += 1
+        return fires
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """CLI spec -> plan. Comma-separated terms: ``seed=N``,
+        ``site=rate`` and/or ``site@tick`` (repeatable)."""
+        seed, rates, at = 0, {}, {}
+        for term in (t.strip() for t in spec.split(",") if t.strip()):
+            if term.startswith("seed="):
+                seed = int(term[5:])
+            elif "@" in term:
+                site, tick = term.split("@", 1)
+                at.setdefault(site, set()).add(int(tick))
+            elif "=" in term:
+                site, rate = term.split("=", 1)
+                rates[site] = float(rate)
+            else:
+                raise ValueError(f"bad fault term {term!r} in {spec!r}")
+        return cls(seed, rates, at)
+
+    def describe(self) -> str:
+        parts = [f"seed={self.seed}"]
+        parts += [f"{s}={r}" for s, r in sorted(self.rates.items())]
+        parts += [f"{s}@{t}" for s, ts in sorted(self.at.items())
+                  for t in sorted(ts, key=str)]
+        return ",".join(parts)
+
+
+# ----------------------------------------------------------------- audit
+
+def _fail(invariant: str, msg: str):
+    raise AuditError(f"[invariant {invariant}] {msg}")
+
+
+def audit_pool(pool) -> None:
+    """Invariants A + F on the pool alone (no scheduler context)."""
+    n = pool.n_pages
+    free = set(pool.free_page_ids())
+    lru = set(pool.lru_page_ids())
+    held = pool.holders()
+    for name, s in (("free list", free), ("LRU", lru), ("held", held)):
+        bad = [p for p in s if not 1 <= p < n]
+        if bad:
+            _fail("A", f"{name} contains out-of-range pages {bad}")
+    if free & lru or free & set(held) or lru & set(held):
+        _fail("A", "free/LRU/held page sets overlap: "
+                   f"free&lru={free & lru} free&held={free & set(held)} "
+                   f"lru&held={lru & set(held)}")
+    every = free | lru | set(held)
+    missing = set(range(1, n)) - every
+    if missing:
+        _fail("A", f"pages {sorted(missing)} leaked: neither free, "
+                   "cached, nor held")
+    zero = [p for p, r in held.items() if r <= 0]
+    if zero:
+        _fail("A", f"held pages with non-positive refcount {zero}")
+    for p in lru:
+        if not pool.is_registered(p):
+            _fail("F", f"LRU page {p} is not registered")
+
+
+def audit_engine(engine) -> None:
+    """Full per-tick audit of a PagedServingEngine: pool invariants plus
+    the scheduler's slot bookkeeping and the device page table. O(pages +
+    slots * max_pages) host work plus one device->host table transfer —
+    cheap at serving scale, and priceless when something corrupts."""
+    pool = engine.pool
+    audit_pool(pool)
+    n = pool.n_pages
+    held = pool.holders()
+    free = set(pool.free_page_ids())
+
+    # B + C: slot references, counted against refcounts
+    holders: Counter = Counter()
+    for slot, pages in enumerate(engine.slot_pages):
+        for p in pages:
+            if p is None:
+                continue
+            if not isinstance(p, (int, np.integer)) or not 1 <= p < n:
+                _fail("C", f"slot {slot} references wild page {p!r}")
+            if p in free:
+                _fail("C", f"slot {slot} references page {p} which is "
+                           "on the free list")
+            holders[int(p)] += 1
+    for p, cnt in holders.items():
+        if held.get(p, 0) != cnt:
+            _fail("B", f"page {p}: refcount {held.get(p, 0)} != "
+                       f"{cnt} slot reference(s)")
+    unheld = [p for p in held if holders.get(p, 0) == 0]
+    if unheld:
+        _fail("B", f"pages {sorted(unheld)} hold references but no slot "
+                   "lists them")
+
+    # D: multi-slot pages must be publicly registered (prefix-shareable)
+    for p, cnt in holders.items():
+        if cnt > 1:
+            if not pool.is_registered(p):
+                _fail("D", f"page {p} shared by {cnt} slots but not "
+                           "registered in the prefix index")
+            if pool.is_private(p):
+                _fail("D", f"page {p} shared by {cnt} slots is a "
+                           "*private* retained entry")
+
+    # E: device table mirrors host bookkeeping
+    table = np.asarray(engine.page_table)
+    for slot, pages in enumerate(engine.slot_pages):
+        want = np.zeros((engine.max_pages,), np.int32)
+        for i, p in enumerate(pages):
+            want[i] = 0 if p is None else p
+        if not np.array_equal(table[slot], want):
+            _fail("E", f"slot {slot} device table {table[slot].tolist()} "
+                       f"!= host pages {want.tolist()}")

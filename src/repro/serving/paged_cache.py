@@ -315,6 +315,9 @@ class PagePool:
             raise ValueError("need >= 2 pages (page 0 is reserved)")
         self.n_pages = n_pages
         self.page_size = page_size
+        # seeded fault plan (serving/faults.py) this pool consults at its
+        # injection sites; None = no faults (production default)
+        self._faults = None
         self._free: List[int] = list(range(1, n_pages))
         self._ref: Dict[int, int] = {}
         # prefix-cache index over *full* prompt pages
@@ -331,6 +334,17 @@ class PagePool:
         self.n_evicted = 0
         self._priv_ctr = 0          # unique private-entry keys
 
+    # --------------------------------------------------- fault injection
+
+    def set_faults(self, plan) -> None:
+        """Attach a serving/faults.py FaultPlan; the pool consults it at
+        ``alloc`` (alloc_fail) and ``available_pages`` (pool_exhaustion).
+        The engine owns advancing the plan's tick."""
+        self._faults = plan
+
+    def _fault(self, site: str, unit: int = 0) -> bool:
+        return self._faults is not None and self._faults.hit(site, unit)
+
     # ------------------------------------------------------- accounting
 
     @property
@@ -345,7 +359,12 @@ class PagePool:
 
     @property
     def available_pages(self) -> int:
-        """What ``alloc`` can produce: free plus evictable cached pages."""
+        """What ``alloc`` can produce: free plus evictable cached pages.
+        An injected ``pool_exhaustion`` fault reads as 0 for the whole
+        tick — callers see a full pool and exercise their pressure
+        paths — without touching any real accounting."""
+        if self._fault("pool_exhaustion"):
+            return 0
         return len(self._free) + len(self._lru)
 
     @property
@@ -359,6 +378,26 @@ class PagePool:
 
     def is_registered(self, page: int) -> bool:
         return page in self._by_page
+
+    def is_private(self, page: int) -> bool:
+        """Is this page a ``register_private`` retained entry (never
+        shareable — the auditor's invariant D checks no slot pair ever
+        aliases one)?"""
+        e = self._by_page.get(page)
+        return e is not None and e.key.startswith(b"priv:")
+
+    # read-only views for the invariant auditor (serving/faults.py): the
+    # auditor re-derives accounting from these instead of groping private
+    # state, so the pool can change representation without breaking it
+    def free_page_ids(self) -> List[int]:
+        return list(self._free)
+
+    def lru_page_ids(self) -> List[int]:
+        return list(self._lru)
+
+    def holders(self) -> Dict[int, int]:
+        """page -> refcount for every currently-held page (a copy)."""
+        return dict(self._ref)
 
     def deregister(self, page: int) -> None:
         """Drop a *held* page's index entry (no-op if unregistered). The
@@ -393,6 +432,8 @@ class PagePool:
         returns ``[]`` without touching the free list."""
         if n == 0:
             return []
+        if self._fault("alloc_fail", n):
+            return None       # injected: as if the free list ran dry
         if n > self.available_pages:
             return None
         while len(self._free) < n:

@@ -72,6 +72,14 @@ class SchedulerPolicy:
     def decode_key(self, req, arrival: int, last_tick: int):
         return (0, last_tick, arrival)
 
+    def shed_key(self, req, arrival: int, n_preempts: int):
+        """Load-shedding order under sustained pool pressure: the engine
+        sheds the *maximum* of this key — the least-urgent request, ties
+        broken toward the one that has already churned through the most
+        preemptions (its progress is the cheapest to abandon, and it is
+        the one feeding the preemption livelock being broken)."""
+        return (self.sort_key(req, arrival), n_preempts)
+
 
 class FifoPolicy(SchedulerPolicy):
     pass

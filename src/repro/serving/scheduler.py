@@ -50,6 +50,22 @@ Decode numerics are the dense engine's: the jnp policies read the gathered
 logical view (bit-compatible with a dense cache of the same logical
 length), the ``loki_block`` Pallas path indexes the pool directly through
 the page table (DESIGN.md §7, §8).
+
+**Request lifecycle + fault tolerance** (DESIGN.md §11): every request
+walks the serving/lifecycle.py status machine (QUEUED -> PREFILL ->
+DECODE -> DONE | CANCELLED | TIMED_OUT | FAILED | SHED), with per-request
+deadlines on the engine's injected clock, a ``cancel(rid)`` that frees
+refcounted pages / COW tails / state snapshots mid-generation without
+disturbing shared-prefix readers, and a degradation ladder under faults
+(serving/faults.py): NaN-poisoned slots are quarantined and FAILed
+individually instead of poisoning the batch; a fused-Pallas decode
+failure disables the backend (core/dispatch.py) and re-runs the tick on
+the XLA path; sustained pool pressure sheds the least-urgent request
+(terminal SHED + retry-after hint) once it has churned through
+``shed_after`` preemptions, instead of livelocking on recompute churn.
+An optional per-tick invariant auditor (``audit=True``) cross-checks the
+pool's refcounts, the slots' page lists and the device page table after
+every tick, turning silent corruption into a loud ``AuditError``.
 """
 from __future__ import annotations
 
@@ -63,10 +79,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import dispatch
 from repro.models import lm
 from repro.serving import cache_spec as CS
+from repro.serving import faults as FI
+from repro.serving import lifecycle as LC
 from repro.serving import paged_cache as PC
-from repro.serving.engine import Request, context_cap, sample_next
+from repro.serving.engine import (Request, context_cap, oversized_reason,
+                                  sample_next)
+from repro.serving.lifecycle import Status
 from repro.serving.paged_cache import PagePool
 from repro.serving.policy import SchedulerPolicy, TickBudget, make_policy
 
@@ -94,6 +115,22 @@ class PagedServingEngine:
     decode_budget  live slots decoded per tick (default: all of them)
     prefix_cache   share identical prompt-prefix pages across requests
                    (auto-bypassed for configs with unshareable components)
+    admission      'strict' (default) FAILs requests whose prompt +
+                   max_new can never fit smax at submit(); 'lenient'
+                   keeps the legacy truncate/cap degraded modes
+    clock          zero-arg wall clock (default time.time) stamping
+                   request times and driving deadline expiry — inject
+                   lifecycle.ManualClock for deterministic tests
+    shed_after     preemptions a request survives before the scheduler
+                   sheds it (terminal SHED + retry-after hint) instead of
+                   requeueing — anti-churn under sustained pool pressure;
+                   None (default) never sheds
+    faults         serving/faults.py FaultPlan consulted by the pool,
+                   this scheduler and the decode dispatch; None = off
+    audit          run the serving/faults.py invariant auditor after
+                   every tick (raises AuditError on violation)
+    nan_guard      quarantine slots whose decode logits go non-finite
+                   (FAIL that request alone, keep the batch serving)
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
@@ -103,7 +140,10 @@ class PagedServingEngine:
                  backend: Optional[str] = None,
                  policy="fifo", prefill_budget: Optional[int] = None,
                  decode_budget: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, admission: str = "strict",
+                 clock=None, shed_after: Optional[int] = None,
+                 faults: Optional[FI.FaultPlan] = None,
+                 audit: bool = False, nan_guard: bool = True):
         if backend is not None:
             cfg = cfg.replace(
                 loki=dataclasses.replace(cfg.loki, backend=backend))
@@ -155,7 +195,25 @@ class PagedServingEngine:
                 f"({self._req_pages_hard} pages); raise n_pages or lower "
                 "smax")
 
+        if admission not in ("strict", "lenient"):
+            raise ValueError(f"admission={admission!r}; "
+                             "use 'strict' or 'lenient'")
+        self.admission = admission
+        self._clock = clock or time.time
+        self.shed_after = shed_after
+        self._faults = faults
+        self.audit = audit
+        self.nan_guard = nan_guard
+        self.lifecycle_counts: Dict[str, int] = {}
+        self.n_stalled = 0
+        self.stalled_rids: List[int] = []
+        self.n_quarantined = 0
+        self.n_shed = 0
+        self.n_backend_fallbacks = 0
+
         self.pool = PagePool(n_pages, self.page_size)
+        if faults is not None:
+            self.pool.set_faults(faults)
         self.cache = lm.init_paged_cache(cfg, n_pages, self.page_size,
                                          jnp.float32, n_slots=n_slots)
         self._fresh_state = CS.fresh_state_tree(cfg, jnp.float32)
@@ -212,7 +270,14 @@ class PagedServingEngine:
         self.n_cow_copies = 0
         self.n_state_restores = 0
 
-        ps = self.page_size
+        self._build_programs()
+
+    def _build_programs(self) -> None:
+        """(Re-)jit the engine's compiled closures. Called once at
+        construction and again by the backend-fallback path: after
+        ``dispatch.disable_backend('pallas')`` a fresh jit retraces, and
+        the retrace resolves to the XLA path."""
+        cfg, ps = self.cfg, self.page_size
         self._decode = jax.jit(
             lambda p, c, t, pl, pt, lv: lm.decode_step(
                 p, cfg, c, t, pl, page_table=pt, page_size=ps, live=lv))
@@ -323,13 +388,81 @@ class PagedServingEngine:
             "cross_k": _dus(layers["cross_k"], ck, slot, 1),
             "cross_v": _dus(layers["cross_v"], cv, slot, 1), **upd}}
 
+    # -------------------------------------------------------- lifecycle
+
+    def _terminal(self, req: Request, status: Status, detail: str = "",
+                  retry_after: float = 0.0) -> None:
+        """Move a request to a terminal status and drop every piece of
+        engine state keyed to it — fold bookkeeping, arrival order, host
+        state snapshots and privately-retained pages — so a terminated
+        request leaks nothing no matter how it ended."""
+        LC.transition(req, status, detail)
+        req.t_done = self._clock()
+        req.retry_after = retry_after
+        self.lifecycle_counts[str(status)] = \
+            self.lifecycle_counts.get(str(status), 0) + 1
+        self._folded.pop(id(req), None)
+        self._arrival.pop(id(req), None)
+        self._state_snap.pop(id(req), None)
+        self._drop_page_snap(self._page_snap.pop(id(req), None))
+
+    def _retry_after_hint(self) -> float:
+        """SHED hint: ticks to drain the current backlog at the decode
+        budget — roughly when resubmitting stops being hopeless."""
+        live = [r for r in self.slot_req if r is not None]
+        rem = sum(max(r.max_new - len(r.out), 1)
+                  for r in list(self._queue) + live)
+        return float(-(-rem // max(self.budget.decode_tokens, 1)))
+
+    def cancel(self, rid: int, detail: str = "client cancel") -> bool:
+        """Terminate a request by id — queued, mid-prefill, or
+        mid-decode. A running request's references are released exactly
+        like a finished one's: shared prefix pages survive for their
+        other readers, sole-owned pages (incl. a COW'd tail) return to
+        the pool, and any preemption snapshot is dropped. Returns False
+        when no live request carries this rid."""
+        for i, req in enumerate(self._queue):
+            if req.rid == rid:
+                del self._queue[i]
+                self._terminal(req, Status.CANCELLED, detail)
+                return True
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is not None and req.rid == rid:
+                self._terminal(req, Status.CANCELLED, detail)
+                self._release_slot(slot)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Tick phase 0: expire breached deadlines, queued or running."""
+        now = self._clock()
+        for req in list(self._queue):
+            why = LC.breach(req.deadline, now, req.t_submit, bool(req.out))
+            if why:
+                self._queue.remove(req)
+                self._terminal(req, Status.TIMED_OUT, why)
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            why = LC.breach(req.deadline, now, req.t_submit, bool(req.out))
+            if why:
+                self._terminal(req, Status.TIMED_OUT, why)
+                self._release_slot(slot)
+
     # ------------------------------------------------------------ admin
 
     def submit(self, req: Request) -> None:
         if self.is_encdec and req.frames is None:
             raise ValueError("encoder-decoder serving needs Request.frames "
                              "(enc_seq, d_model)")
-        req.t_submit = time.time()
+        req.t_submit = self._clock()
+        if self.admission == "strict":
+            why = oversized_reason(len(req.prompt), req.max_new, self.smax)
+            if why:
+                self._terminal(req, Status.FAILED, f"oversized: {why}")
+                return
         self._arrival[id(req)] = self._arrival_seq
         self._arrival_seq += 1
         self._queue.append(req)
@@ -345,6 +478,7 @@ class PagedServingEngine:
         return req
 
     def _admit_into(self, slot: int, req: Request) -> None:
+        LC.transition(req, Status.PREFILL)
         toks = req.prompt.astype(np.int32)
         if not req.out:
             cap = context_cap(self.smax, req.max_new)
@@ -395,20 +529,18 @@ class PagedServingEngine:
 
     def _ready(self, slot: int) -> None:
         """Prefill finished: the slot joins the decode batch."""
-        toks = self.slot_req[slot].prompt
+        req = self.slot_req[slot]
+        LC.transition(req, Status.DECODE)
+        toks = req.prompt
         self._prefill_at.pop(slot, None)
         self.pos = self.pos.at[slot].set(len(toks) - 1)
         self.last_tok = self.last_tok.at[slot].set(int(toks[-1]))
         self.live[slot] = True
 
-    def _release(self, slot: int, *, done: bool) -> None:
-        req = self.slot_req[slot]
-        if done:
-            req.done = True
-            req.t_done = time.time()
-            self._folded.pop(id(req), None)
-            self._arrival.pop(id(req), None)
-            self._state_snap.pop(id(req), None)
+    def _release_slot(self, slot: int) -> None:
+        """Return a slot to the pool — pure page/slot bookkeeping, no
+        request-status side effects (callers pair this with ``_terminal``
+        or a requeue, which own the status transition)."""
         # recycled (None) entries were released the moment they slid out
         # of the window; everything else drops one reference — a shared
         # page another request (or the prefix index) still needs survives,
@@ -458,8 +590,25 @@ class PagedServingEngine:
         under their other readers. State-carrying families additionally
         snapshot the slot's recurrent state to host so re-admission can
         skip re-running the folded prompt; hybrids park their K/V pages
-        beside the snapshot (pure-paged families keep recompute)."""
+        beside the snapshot (pure-paged families keep recompute).
+
+        With ``shed_after`` set, a request that has already churned
+        through that many preemptions is **shed** instead of requeued:
+        terminal SHED with a retry-after hint, its pages released. Under
+        sustained pressure this converts recompute livelock into an
+        explicit, client-visible admission-control signal."""
         req = self.slot_req[slot]
+        req.n_preempts += 1
+        if (self.shed_after is not None
+                and req.n_preempts >= self.shed_after):
+            self.n_preempted += 1
+            self.n_shed += 1
+            self._terminal(
+                req, Status.SHED,
+                f"pool pressure: preempted {req.n_preempts}x",
+                retry_after=self._retry_after_hint())
+            self._release_slot(slot)
+            return
         consumed = self._prefill_at.get(slot)
         folded = self._folded.get(id(req), 0)
         fresh = req.out[folded:]
@@ -479,7 +628,8 @@ class PagedServingEngine:
             self._state_snap[id(req)] = (consumed, jax.device_get(snap))
             if self.has_pages:
                 self._retain_slot_pages(slot, req)
-        self._release(slot, done=False)
+        LC.transition(req, Status.QUEUED, "preempted")
+        self._release_slot(slot)
         self._queue.appendleft(req)
         self.n_preempted += 1
 
@@ -510,9 +660,15 @@ class PagedServingEngine:
             gainful = [s for s in candidates
                        if any(p is not None and self.pool.refcount(p) == 1
                               for p in self.slot_pages[s])]
+            # victim order: the policy's shed key — least urgent first,
+            # ties toward the most-churned request, which is also the one
+            # shed_after retires when pressure is sustained
             self._preempt(max(
                 gainful or candidates,
-                key=lambda s: self._key(self.slot_req[s])))
+                key=lambda s: self.policy.shed_key(
+                    self.slot_req[s],
+                    self._arrival[id(self.slot_req[s])],
+                    self.slot_req[s].n_preempts)))
         return True
 
     def _grow_to(self, slot: int, n_tokens: int) -> bool:
@@ -526,6 +682,8 @@ class PagedServingEngine:
         if not self._make_room(need, protect=slot):
             return False
         pages = self.pool.alloc(need)
+        if pages is None:
+            return False        # injected alloc_fail: contended this tick
         base = len(self.slot_pages[slot])
         self.page_table = self.page_table.at[
             slot, base:base + need].set(jnp.asarray(pages, jnp.int32))
@@ -560,7 +718,10 @@ class PagedServingEngine:
             self.pool.deregister(old)
             self._cow_pending.pop(slot)
             return True
-        new = self.pool.alloc(1)[0]
+        got = self.pool.alloc(1)
+        if got is None:
+            return False        # injected alloc_fail: contended this tick
+        new = got[0]
         self.cache = self._copy_page(self.cache, old, new)
         self.page_table = self.page_table.at[slot, idx].set(new)
         self.slot_pages[slot][idx] = new
@@ -730,10 +891,16 @@ class PagedServingEngine:
         # components must not advance (``live`` mask)
         sel_dev = jnp.asarray(sel)
         pt = self.page_table * sel_dev.astype(jnp.int32)[:, None]
-        logits, self.cache = self._decode(
-            self.params, self.cache, self.last_tok, self.pos, pt,
-            sel_dev if self.has_state else None)
+        logits, self.cache = self._run_decode(pt, sel_dev)
         self.pos = self.pos + sel_dev.astype(jnp.int32)
+        if self._faults is not None:
+            bad = [s for s in np.flatnonzero(sel)
+                   if self._faults.hit("nan_logits", int(s))]
+            if bad:
+                logits = logits.at[jnp.asarray(bad, jnp.int32)].set(
+                    jnp.nan)
+        finite = np.asarray(jnp.isfinite(logits).all(axis=-1)) \
+            if self.nan_guard else None
         nxt_np = np.asarray(sample_next(logits, greedy=self.greedy,
                                         rng=rng, ticks=self.ticks))
         self._last_decoded[sel] = self.ticks
@@ -741,26 +908,89 @@ class PagedServingEngine:
             req = self.slot_req[slot]
             if req is None or not sel[slot]:
                 continue
+            if finite is not None and not finite[slot]:
+                # numerically-failed slot: quarantine this request alone
+                # (its pages go back to the pool; the rest of the batch
+                # saw its own rows only and keeps serving untouched)
+                self.n_quarantined += 1
+                self._terminal(req, Status.FAILED,
+                               "non-finite logits (slot quarantined)")
+                self._release_slot(slot)
+                continue
             tok = int(nxt_np[slot])
             req.out.append(tok)
             if len(req.out) == 1:
-                req.t_first = time.time()
+                req.t_first = self._clock()
             finished = (len(req.out) >= req.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
                         or int(pos_np[slot]) + 1 >= self.smax - 1)
             if finished:
-                self._release(slot, done=True)
+                self._terminal(req, Status.DONE)
+                self._release_slot(slot)
             else:
                 self.last_tok = self.last_tok.at[slot].set(tok)
         return True
 
+    def _run_decode(self, pt, sel_dev):
+        """One batched decode step through the degradation ladder: when
+        the fused-Pallas path raises (for real, or via the ``kernel_fail``
+        injection site), disable the backend process-wide, re-jit so the
+        retrace resolves to XLA, and re-run the *same* step — the tick
+        completes on the reference path and every later step stays there.
+        Failures on the XLA floor propagate: there is nothing left to
+        fall back to."""
+        lv = sel_dev if self.has_state else None
+        on_pallas = dispatch.resolve_backend(
+            self.cfg.loki.backend) == "pallas"
+        try:
+            if (on_pallas and self._faults is not None
+                    and self._faults.hit("kernel_fail")):
+                raise FI.FaultInjected("injected fused-kernel abort")
+            return self._decode(self.params, self.cache, self.last_tok,
+                                self.pos, pt, lv)
+        except Exception as e:
+            if not on_pallas:
+                raise
+            dispatch.disable_backend("pallas", f"decode step failed: {e}")
+            self._build_programs()
+            self.n_backend_fallbacks += 1
+            return self._decode(self.params, self.cache, self.last_tok,
+                                self.pos, pt, lv)
+
+    def _inject_corruption(self) -> None:
+        """``slot_corrupt`` site: silently repoint one live slot's tail
+        page entry at a page some *other* slot holds — the kind of
+        bookkeeping bug that would alias two requests' caches. Nothing
+        fails here by design; the per-tick auditor is what must catch
+        it (invariant B/E)."""
+        if self._faults is None:
+            return
+        for slot in range(self.n_slots):
+            pages = self.slot_pages[slot]
+            tail = [i for i, p in enumerate(pages) if p is not None]
+            if (self.slot_req[slot] is None or not tail
+                    or not self._faults.hit("slot_corrupt", slot)):
+                continue
+            mine = {p for p in pages if p is not None}
+            foreign = sorted(
+                {p for s in range(self.n_slots) if s != slot
+                 for p in self.slot_pages[s]
+                 if p is not None and p not in mine})
+            pages[tail[-1]] = foreign[0] if foreign else 0
+
     # ------------------------------------------------------------- tick
 
     def tick(self, rng: Optional[jax.Array] = None) -> None:
+        if self._faults is not None:
+            self._faults.advance(self.ticks)
+        self._expire_deadlines()
         self._admission_phase()
         self._prefill_phase()
         self._decode_phase(rng)
+        self._inject_corruption()
         self.ticks += 1
+        if self.audit:
+            FI.audit_engine(self)
 
     @property
     def n_prefix_hit_tokens(self) -> int:
@@ -783,6 +1013,28 @@ class PagedServingEngine:
             if rng is not None:
                 rng, sub = jax.random.split(rng)
             self.tick(sub)
+        self._report_stall(max_ticks)
+
+    def _report_stall(self, max_ticks: int) -> None:
+        """Drain exhausted its tick budget with requests still live: a
+        stall is an *answer*, not a silent return. Every remaining
+        request is marked TIMED_OUT (its pages released, pool back to
+        baseline) and recorded in ``stalled_rids`` / ``stats()`` so
+        harnesses and operators see exactly who starved."""
+        detail = f"stalled: drain hit max_ticks={max_ticks}"
+        for req in list(self._queue):
+            self._queue.remove(req)
+            self._terminal(req, Status.TIMED_OUT, detail)
+            self.n_stalled += 1
+            self.stalled_rids.append(req.rid)
+        for slot in range(self.n_slots):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            self._terminal(req, Status.TIMED_OUT, detail)
+            self._release_slot(slot)
+            self.n_stalled += 1
+            self.stalled_rids.append(req.rid)
 
     # ------------------------------------------- Engine protocol surface
 
@@ -794,7 +1046,7 @@ class PagedServingEngine:
     def stats(self) -> Dict[str, Any]:
         """Engine protocol: one flat dict of serving counters, keyed the
         same across engine kinds so harnesses never branch on the type."""
-        return {
+        out = {
             "engine": "paged",
             "ticks": self.ticks,
             "layout": self.cfg.page_layout.describe(),
@@ -805,4 +1057,13 @@ class PagedServingEngine:
             "peak_slot_pages": self.peak_slot_pages,
             "n_prefill_computed_tokens": self.n_prefill_computed_tokens,
             "prefix_hit_rate": self.prefix_hit_rate(),
+            "lifecycle": dict(self.lifecycle_counts),
+            "n_stalled": self.n_stalled,
+            "stalled_rids": list(self.stalled_rids),
+            "n_shed": self.n_shed,
+            "n_quarantined": self.n_quarantined,
+            "n_backend_fallbacks": self.n_backend_fallbacks,
         }
+        if self._faults is not None:
+            out["faults"] = dict(self._faults.counts)
+        return out

@@ -1,0 +1,328 @@
+"""Deterministic fault injection + the invariant auditor
+(serving/faults.py): plan determinism, every fault site's degradation
+path, load shedding under sustained pressure, and the chaos acceptance
+matrix (DONE outputs bit-identical to a fault-free run)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import dispatch
+from repro.models import lm
+from repro.serving import faults as FI
+from repro.serving import lifecycle as LC
+from repro.serving.engine import Request
+from repro.serving.lifecycle import Status
+from repro.serving.scheduler import PagedServingEngine
+
+
+def _model():
+    cfg = get_smoke_config("qwen2.5-3b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _reqs(cfg, n, max_new, base=5, salt=0):
+    return [Request(rid=i,
+                    prompt=(np.arange(base + 2 * i) * 7 + i + salt)
+                    % cfg.vocab,
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _pool_at_baseline(eng):
+    free = len(eng.pool.free_page_ids()) + len(eng.pool.lru_page_ids())
+    return free == eng.pool.n_pages - 1
+
+
+# ===================================================================
+# FaultPlan (pure)
+# ===================================================================
+
+
+def test_fault_plan_is_deterministic_and_seeded():
+    a = FI.FaultPlan(seed=3, rates={"alloc_fail": 0.3})
+    b = FI.FaultPlan(seed=3, rates={"alloc_fail": 0.3})
+    c = FI.FaultPlan(seed=4, rates={"alloc_fail": 0.3})
+    fires = []
+    for plan in (a, b, c):
+        f = []
+        for t in range(64):
+            plan.advance(t)
+            f.append(plan.hit("alloc_fail"))
+        fires.append(f)
+    assert fires[0] == fires[1]              # same seed: identical
+    assert fires[0] != fires[2]              # seed matters
+    assert 0 < sum(fires[0]) < 64            # rate neither 0 nor 1
+
+
+def test_fault_plan_point_schedule_and_counts():
+    plan = FI.FaultPlan(at={"nan_logits": {(5, 1)}, "kernel_fail": {7}})
+    plan.advance(5)
+    assert plan.hit("nan_logits", 1)
+    assert plan.hit("nan_logits", 1)         # consulted twice...
+    assert not plan.hit("nan_logits", 0)     # wrong unit
+    plan.advance(7)
+    assert plan.hit("kernel_fail")           # bare tick: any unit
+    assert plan.hit("kernel_fail", 3)
+    assert plan.counts["nan_logits"] == 1    # ...counted once
+    assert plan.counts["kernel_fail"] == 2   # two distinct units
+
+
+def test_fault_plan_parse_round_trip_and_validation():
+    plan = FI.FaultPlan.parse("seed=9,nan_logits=0.05,slot_corrupt@17")
+    assert plan.seed == 9
+    assert plan.rates == {"nan_logits": 0.05}
+    assert plan.at == {"slot_corrupt": {17}}
+    assert FI.FaultPlan.parse(plan.describe()).describe() == plan.describe()
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FI.FaultPlan(rates={"bogus": 0.5})
+    with pytest.raises(ValueError, match="bad fault term"):
+        FI.FaultPlan.parse("nan_logits")
+
+
+# ===================================================================
+# Auditor catches silent corruption (slot_corrupt site)
+# ===================================================================
+
+
+def test_auditor_catches_injected_slot_corruption():
+    """slot_corrupt silently repoints a slot's tail page entry; nothing
+    crashes on its own — the per-tick auditor must turn it into a loud
+    AuditError at that very tick."""
+    params, cfg = _model()
+    plan = FI.FaultPlan(at={"slot_corrupt": {2}})
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, faults=plan, audit=True)
+    for r in _reqs(cfg, 2, 8):
+        eng.submit(r)
+    with pytest.raises(FI.AuditError, match=r"invariant [BCE]"):
+        eng.drain(max_ticks=50)
+    assert plan.counts["slot_corrupt"] >= 1
+
+
+def test_auditor_green_on_healthy_engine():
+    params, cfg = _model()
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, audit=True)
+    reqs = _reqs(cfg, 4, 6)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_ticks=300)                 # audits every tick
+    assert all(r.done for r in reqs)
+    FI.audit_engine(eng)                     # and once more after drain
+
+
+# ===================================================================
+# NaN quarantine (nan_logits site)
+# ===================================================================
+
+
+def test_nan_logits_quarantines_one_slot_not_the_batch():
+    """Poisoning one slot's logits FAILs that request alone; every other
+    request finishes DONE with output bit-identical to a fault-free run."""
+    params, cfg = _model()
+    clean = _reqs(cfg, 4, 6)
+    base = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                              prefill_chunk=4)
+    for r in clean:
+        base.submit(r)
+    base.drain(max_ticks=300)
+    truth = {r.rid: r.out for r in clean}
+
+    plan = FI.FaultPlan(at={"nan_logits": {(3, 0)}})   # slot 0, tick 3
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, faults=plan, audit=True)
+    reqs = _reqs(cfg, 4, 6)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_ticks=300)
+    failed = [r for r in reqs if r.status is Status.FAILED]
+    assert len(failed) == 1
+    assert "non-finite" in failed[0].detail
+    assert eng.n_quarantined == 1
+    for r in reqs:
+        if r.done:
+            assert r.out == truth[r.rid], r.rid
+    assert sum(r.done for r in reqs) == 3
+    assert _pool_at_baseline(eng)
+
+
+def test_nan_guard_off_lets_poison_through():
+    """nan_guard=False preserves the old behavior (the NaN row samples
+    *something*) — the guard, not luck, is what contains the blast."""
+    params, cfg = _model()
+    plan = FI.FaultPlan(at={"nan_logits": {(3, 0)}})
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
+                             prefill_chunk=4, faults=plan, nan_guard=False)
+    req = _reqs(cfg, 1, 6)[0]
+    eng.submit(req)
+    eng.drain(max_ticks=100)
+    assert req.done and eng.n_quarantined == 0
+
+
+# ===================================================================
+# Pool faults (alloc_fail / pool_exhaustion): degrade, don't corrupt
+# ===================================================================
+
+
+@pytest.mark.parametrize("site,rate", [("alloc_fail", 0.25),
+                                       ("pool_exhaustion", 0.6)])
+def test_pool_faults_degrade_gracefully(site, rate):
+    """Transient allocation failures slow serving down (retries and
+    preemptions) but every request still finishes DONE with bit-identical
+    output, the auditor green throughout."""
+    params, cfg = _model()
+    clean = _reqs(cfg, 4, 8)
+    base = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                              prefill_chunk=4)
+    for r in clean:
+        base.submit(r)
+    base.drain(max_ticks=500)
+    truth = {r.rid: r.out for r in clean}
+
+    plan = FI.FaultPlan(seed=5, rates={site: rate})
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, faults=plan, audit=True)
+    reqs = _reqs(cfg, 4, 8)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_ticks=2000)
+    assert plan.counts[site] >= 1, "fault never actually fired"
+    for r in reqs:
+        assert r.done and r.out == truth[r.rid], (r.rid, str(r.status))
+    assert _pool_at_baseline(eng)
+
+
+# ===================================================================
+# Backend fallback (kernel_fail site)
+# ===================================================================
+
+
+def test_kernel_fail_falls_back_to_xla_and_keeps_serving():
+    """A fused-Pallas decode failure disables the backend process-wide
+    (core/dispatch.py), the engine re-jits onto the XLA path mid-stream,
+    and the stream finishes with the outputs an all-XLA engine produces."""
+    params, cfg = _model()
+    dispatch.enable_backend("pallas")
+    try:
+        ref = PagedServingEngine(params, cfg, n_slots=2, smax=32,
+                                 page_size=8, prefill_chunk=4,
+                                 backend="xla")
+        clean = _reqs(cfg, 3, 8)
+        for r in clean:
+            ref.submit(r)
+        ref.drain(max_ticks=300)
+        truth = {r.rid: r.out for r in clean}
+
+        plan = FI.FaultPlan(at={"kernel_fail": {4}})
+        eng = PagedServingEngine(params, cfg, n_slots=2, smax=32,
+                                 page_size=8, prefill_chunk=4,
+                                 backend="pallas", faults=plan, audit=True)
+        reqs = _reqs(cfg, 3, 8)
+        for r in reqs:
+            eng.submit(r)
+        eng.drain(max_ticks=300)
+        assert eng.n_backend_fallbacks == 1
+        assert dispatch.backend_disabled("pallas") is not None
+        assert dispatch.resolve_backend("pallas") == "xla"
+        for r in reqs:
+            assert r.done and r.out == truth[r.rid], r.rid
+        assert _pool_at_baseline(eng)
+    finally:
+        dispatch.enable_backend("pallas")    # don't leak into other tests
+
+
+def test_disable_backend_validates():
+    with pytest.raises(ValueError):
+        dispatch.disable_backend("auto")
+    with pytest.raises(ValueError):
+        dispatch.disable_backend("bogus")
+    assert dispatch.backend_disabled("xla") is None
+
+
+# ===================================================================
+# Load shedding under sustained pressure (shed_after)
+# ===================================================================
+
+
+def test_sustained_pressure_sheds_lowest_priority():
+    """A pool too small for the stream churns preemptions; with
+    shed_after set, the most-churned / least-urgent requests exit SHED
+    with a retry-after hint instead of livelocking, and the rest DONE."""
+    params, cfg = _model()
+    prompts = [(np.arange(9 + i) * 5 + i) % cfg.vocab for i in range(4)]
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, n_pages=6, shed_after=2,
+                             audit=True)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=14)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_ticks=2000)
+    shed = [r for r in reqs if r.status is Status.SHED]
+    assert shed, "pressure never shed anybody"
+    for r in shed:
+        assert r.retry_after > 0 and "pool pressure" in r.detail
+        assert r.n_preempts >= 2
+    assert all(LC.is_terminal(r) for r in reqs)
+    assert any(r.done for r in reqs)         # shedding unblocked the rest
+    assert eng.n_shed == len(shed)
+    assert eng.stats()["lifecycle"]["shed"] == len(shed)
+    assert _pool_at_baseline(eng)
+
+
+def test_no_shedding_without_shed_after():
+    """shed_after=None (default) preserves PR 5 behavior exactly: the
+    same pressured stream drains fully via recompute-preemption."""
+    params, cfg = _model()
+    prompts = [(np.arange(9 + i) * 5 + i) % cfg.vocab for i in range(4)]
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, n_pages=6, audit=True)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=14)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_ticks=2000)
+    assert all(r.done for r in reqs)
+    assert eng.n_shed == 0
+
+
+# ===================================================================
+# Chaos acceptance matrix (the ISSUE's bar, in miniature)
+# ===================================================================
+
+
+def test_chaos_matrix_done_outputs_bit_identical():
+    """Multiple fault sites at once, auditor on every tick: every request
+    ends terminal, DONE outputs match the fault-free run bit-for-bit, and
+    the pool drains back to baseline accounting."""
+    params, cfg = _model()
+    clean = _reqs(cfg, 6, 8)
+    base = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                              prefill_chunk=4)
+    for r in clean:
+        base.submit(r)
+    base.drain(max_ticks=1000)
+    truth = {r.rid: r.out for r in clean}
+
+    plan = FI.FaultPlan(seed=7, rates={"nan_logits": 0.03,
+                                       "alloc_fail": 0.1,
+                                       "pool_exhaustion": 0.05})
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, faults=plan, audit=True,
+                             shed_after=8)
+    reqs = _reqs(cfg, 6, 8)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_ticks=5000)
+    assert sum(plan.counts.values()) >= 3, "chaos too quiet to mean much"
+    assert all(LC.is_terminal(r) for r in reqs)
+    for r in reqs:
+        if r.done:
+            assert r.out == truth[r.rid], r.rid
+    assert any(r.done for r in reqs)
+    assert _pool_at_baseline(eng)
+    st = eng.stats()
+    assert st["faults"] == dict(plan.counts)
+    assert sum(st["lifecycle"].values()) == len(reqs)

@@ -1,0 +1,278 @@
+"""Request lifecycle (serving/lifecycle.py + engine wiring): the status
+machine, strict admission, cancellation (incl. under prefix sharing),
+deadlines on an injected clock, and stall reporting."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import faults as FI
+from repro.serving import lifecycle as LC
+from repro.serving.engine import Request, ServingEngine, oversized_reason
+from repro.serving.lifecycle import Deadline, ManualClock, Status
+from repro.serving.scheduler import PagedServingEngine
+
+
+def _model():
+    cfg = get_smoke_config("qwen2.5-3b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompt(n, cfg, salt=1):
+    return (np.arange(n) * 3 + salt) % cfg.vocab
+
+
+# ===================================================================
+# Status machine (pure)
+# ===================================================================
+
+
+def test_status_machine_legal_path():
+    req = Request(rid=0, prompt=np.arange(4), max_new=2)
+    for to in (Status.PREFILL, Status.DECODE, Status.DONE):
+        LC.transition(req, to)
+    assert req.done and LC.is_terminal(req)
+
+
+def test_status_machine_rejects_illegal_edges():
+    req = Request(rid=0, prompt=np.arange(4), max_new=2)
+    with pytest.raises(LC.LifecycleError):
+        LC.transition(req, Status.DECODE)        # skipped PREFILL
+    LC.transition(req, Status.PREFILL)
+    LC.transition(req, Status.QUEUED)            # preemption edge is legal
+    LC.transition(req, Status.PREFILL)
+    LC.transition(req, Status.DECODE)
+    LC.transition(req, Status.CANCELLED, "test")
+    assert req.detail == "test" and not req.done
+    with pytest.raises(LC.LifecycleError):       # terminal is sticky
+        LC.transition(req, Status.QUEUED)
+
+
+def test_deadline_breach_rules():
+    d = Deadline(ttft=1.0, total=5.0)
+    assert LC.breach(None, 99.0, 0.0, False) is None
+    assert LC.breach(d, 0.5, 0.0, False) is None
+    assert LC.breach(d, 1.5, 0.0, False) == "ttft deadline"
+    assert LC.breach(d, 1.5, 0.0, True) is None   # ttft moot after 1st tok
+    assert LC.breach(d, 6.0, 0.0, True) == "total deadline"
+
+
+# ===================================================================
+# Strict admission (satellite a)
+# ===================================================================
+
+
+def test_oversized_reason_capacity_arithmetic():
+    assert oversized_reason(4, 4, 8) is None          # exactly fills
+    assert oversized_reason(5, 4, 8) is not None
+    assert oversized_reason(0, 4, 8) == "empty prompt"
+    assert oversized_reason(4, 0, 8) is not None
+
+
+@pytest.mark.parametrize("engine_cls,kw", [
+    (ServingEngine, {}),
+    (PagedServingEngine, dict(page_size=8, prefill_chunk=4)),
+])
+def test_strict_submit_rejects_oversized(engine_cls, kw):
+    """A request whose prompt + max_new can never fit smax FAILs at
+    submit() with a clear reason, instead of being silently truncated."""
+    params, cfg = _model()
+    eng = engine_cls(params, cfg, n_slots=1, smax=16, **kw)
+    req = Request(rid=0, prompt=_prompt(14, cfg), max_new=8)
+    eng.submit(req)
+    assert req.status is Status.FAILED
+    assert "oversized" in req.detail and "14" in req.detail
+    assert not req.done and req.t_done > 0
+    # never queued: the engine drains instantly and no token was produced
+    eng.drain(max_ticks=50)
+    assert req.out == []
+    assert eng.stats()["lifecycle"] == {"failed": 1}
+    # a request that exactly fills the context is NOT oversized
+    ok = Request(rid=1, prompt=_prompt(10, cfg), max_new=6)
+    eng.submit(ok)
+    eng.drain(max_ticks=200)
+    assert ok.done and len(ok.out) == 6
+
+
+# ===================================================================
+# Cancellation
+# ===================================================================
+
+
+def test_cancel_queued_and_unknown_rid():
+    params, cfg = _model()
+    eng = ServingEngine(params, cfg, n_slots=1, smax=32)
+    r1 = Request(rid=1, prompt=_prompt(4, cfg), max_new=4)
+    r2 = Request(rid=2, prompt=_prompt(5, cfg, 2), max_new=4)
+    eng.submit(r1)
+    eng.submit(r2)                      # waits behind r1 (1 slot)
+    assert eng.cancel(2)
+    assert r2.status is Status.CANCELLED and not r2.done
+    assert not eng.cancel(99)           # unknown rid
+    eng.drain(max_ticks=100)
+    assert r1.done
+    assert not eng.cancel(1)            # terminal ids are not resurrected
+
+
+def test_paged_cancel_mid_decode_frees_all_pages():
+    """Cancelling a running request releases 100% of its held pages: the
+    pool returns to baseline accounting after the drain."""
+    params, cfg = _model()
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
+                             prefill_chunk=4, audit=True)
+    victim = Request(rid=0, prompt=_prompt(9, cfg), max_new=20)
+    other = Request(rid=1, prompt=_prompt(7, cfg, 5), max_new=6)
+    eng.submit(victim)
+    eng.submit(other)
+    while len(victim.out) < 3:          # decode genuinely underway
+        eng.tick()
+    assert eng.cancel(0, "user hit stop")
+    assert victim.status is Status.CANCELLED
+    assert victim.detail == "user hit stop"
+    n_out = len(victim.out)
+    eng.drain(max_ticks=200)
+    assert len(victim.out) == n_out     # generation really stopped
+    assert other.done
+    free = len(eng.pool.free_page_ids()) + len(eng.pool.lru_page_ids())
+    assert free == eng.pool.n_pages - 1
+    FI.audit_engine(eng)
+
+
+def test_paged_cancel_under_sharing_keeps_donor_exact():
+    """Satellite (c): cancel a request sharing prefix pages (and a COW
+    tail) mid-decode; the surviving reader's output stays bit-identical
+    to serving it alone, and the auditor is green on every tick."""
+    params, cfg = _model()
+    shared = _prompt(20, cfg)           # 2.5 pages at page_size=8
+    tail_a = np.asarray([3, 7], np.int32)
+    tail_b = np.asarray([11], np.int32)
+    p_donor = np.concatenate([shared, tail_a])
+    p_victim = np.concatenate([shared, tail_b])
+
+    solo = PagedServingEngine(params, cfg, n_slots=1, smax=64, page_size=8,
+                              prefill_chunk=4)
+    alone = Request(rid=0, prompt=p_donor.copy(), max_new=8)
+    solo.submit(alone)
+    solo.run_until_done(200)
+
+    eng = PagedServingEngine(params, cfg, n_slots=2, smax=64, page_size=8,
+                             prefill_chunk=4, audit=True)
+    donor = Request(rid=0, prompt=p_donor.copy(), max_new=8)
+    victim = Request(rid=1, prompt=p_victim.copy(), max_new=8)
+    eng.submit(donor)
+    while not donor.out:                # donor's prompt pages registered
+        eng.tick()
+    eng.submit(victim)                  # admission matches those pages
+    for _ in range(200):                # audit=True checks every tick
+        eng.tick()
+        if len(victim.out) >= 2:
+            break
+    assert len(victim.out) >= 2, "victim never reached decode"
+    assert eng.n_prefix_hit_tokens > 0, "prefix sharing never materialized"
+    assert eng.cancel(1)
+    FI.audit_engine(eng)                # release left invariants intact
+    eng.drain(max_ticks=300)
+    assert donor.done and donor.out == alone.out
+    free = len(eng.pool.free_page_ids()) + len(eng.pool.lru_page_ids())
+    assert free == eng.pool.n_pages - 1
+
+
+# ===================================================================
+# Deadlines (injected clock)
+# ===================================================================
+
+
+def test_ttft_deadline_expires_queued_request():
+    params, cfg = _model()
+    clk = ManualClock()
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
+                             prefill_chunk=4, clock=clk, audit=True)
+    runner = Request(rid=0, prompt=_prompt(6, cfg), max_new=10)
+    waiter = Request(rid=1, prompt=_prompt(6, cfg, 9), max_new=4,
+                     deadline=Deadline(ttft=1.0))
+    eng.submit(runner)
+    eng.submit(waiter)                  # stuck behind runner (1 slot)
+    eng.tick()
+    clk.advance(2.0)                    # waiter's ttft budget blows
+    eng.tick()
+    assert waiter.status is Status.TIMED_OUT
+    assert waiter.detail == "ttft deadline"
+    eng.drain(max_ticks=100)
+    assert runner.done and len(runner.out) == 10
+
+
+def test_total_deadline_expires_running_request_and_frees_pages():
+    params, cfg = _model()
+    clk = ManualClock()
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
+                             prefill_chunk=4, clock=clk, audit=True)
+    req = Request(rid=0, prompt=_prompt(6, cfg), max_new=26,
+                  deadline=Deadline(total=5.0))
+    eng.submit(req)
+    for _ in range(3):
+        eng.tick()
+        clk.advance(1.0)
+    assert req.out and req.status is Status.DECODE      # mid-generation
+    clk.advance(10.0)
+    eng.tick()
+    assert req.status is Status.TIMED_OUT
+    assert req.detail == "total deadline"
+    free = len(eng.pool.free_page_ids()) + len(eng.pool.lru_page_ids())
+    assert free == eng.pool.n_pages - 1
+
+
+def test_deadline_not_breached_is_harmless():
+    params, cfg = _model()
+    clk = ManualClock()
+    eng = ServingEngine(params, cfg, n_slots=1, smax=32, clock=clk)
+    req = Request(rid=0, prompt=_prompt(5, cfg), max_new=4,
+                  deadline=Deadline(ttft=100.0, total=100.0))
+    eng.submit(req)
+    eng.drain(max_ticks=100)
+    assert req.done and len(req.out) == 4
+
+
+# ===================================================================
+# Stall reporting (satellite b)
+# ===================================================================
+
+
+@pytest.mark.parametrize("engine_cls,kw", [
+    (ServingEngine, {}),
+    (PagedServingEngine, dict(page_size=8, prefill_chunk=4)),
+])
+def test_drain_hitting_max_ticks_reports_stall(engine_cls, kw):
+    """run_until_done exhausting max_ticks is an answer, not a silent
+    return: still-live requests become TIMED_OUT and show in stats()."""
+    params, cfg = _model()
+    eng = engine_cls(params, cfg, n_slots=1, smax=32, **kw)
+    r1 = Request(rid=0, prompt=_prompt(5, cfg), max_new=20)
+    r2 = Request(rid=1, prompt=_prompt(5, cfg, 4), max_new=20)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.drain(max_ticks=2)              # nowhere near enough
+    st = eng.stats()
+    assert st["n_stalled"] == 2 and sorted(st["stalled_rids"]) == [0, 1]
+    assert r1.status is Status.TIMED_OUT and "max_ticks" in r1.detail
+    assert r2.status is Status.TIMED_OUT
+    assert st["lifecycle"]["timed_out"] == 2
+    if engine_cls is PagedServingEngine:
+        free = len(eng.pool.free_page_ids()) + len(eng.pool.lru_page_ids())
+        assert free == eng.pool.n_pages - 1
+        FI.audit_engine(eng)
+
+
+def test_clean_drain_reports_no_stall():
+    params, cfg = _model()
+    eng = ServingEngine(params, cfg, n_slots=2, smax=32)
+    reqs = [Request(rid=i, prompt=_prompt(4 + i, cfg), max_new=3)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_ticks=200)
+    st = eng.stats()
+    assert st["n_stalled"] == 0 and st["stalled_rids"] == []
+    assert st["lifecycle"] == {"done": 3}
+    assert LC.summarize(reqs) == {"done": 3}

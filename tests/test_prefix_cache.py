@@ -195,9 +195,10 @@ def test_preemption_with_shared_pages_stays_exact():
     prompts = [np.concatenate([base, (np.arange(3 + i) * 7 + i) % cfg.vocab])
                for i in range(4)]
     eng_on, outs_on = _serve(params, cfg, prompts, cache=True, max_new=14,
-                             smax=32, n_pages=6)
+                             smax=32, n_pages=6, admission="lenient")
     eng_off, outs_off = _serve(params, cfg, prompts, cache=False,
-                               max_new=14, smax=32, n_pages=6)
+                               max_new=14, smax=32, n_pages=6,
+                               admission="lenient")
     assert eng_on.n_preempted > 0 and eng_off.n_preempted > 0
     assert outs_on == outs_off
     # every reference was returned: nothing is still marked in use

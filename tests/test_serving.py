@@ -18,11 +18,13 @@ def _model():
     return params, cfg
 
 
-def _sequential_dense(params, cfg, prompts, max_new, smax):
+def _sequential_dense(params, cfg, prompts, max_new, smax,
+                      admission="strict"):
     """Ground truth: each prompt served alone by the dense engine."""
     outs = []
     for p in prompts:
-        eng = ServingEngine(params, cfg, n_slots=1, smax=smax)
+        eng = ServingEngine(params, cfg, n_slots=1, smax=smax,
+                            admission=admission)
         r = Request(rid=0, prompt=p.copy(), max_new=max_new)
         eng.submit(r)
         eng.run_until_done(500)
@@ -134,9 +136,12 @@ def test_late_admission_does_not_disturb_live_slot():
 
 def test_overlong_prompt_truncates_instead_of_crashing():
     """A prompt longer than smax keeps the most recent context and still
-    serves, instead of aborting the batched step with a shape error."""
+    serves (lenient admission), instead of aborting the batched step with
+    a shape error. (Strict admission — the default — FAILs it at submit
+    instead; see tests/test_lifecycle.py.)"""
     params, cfg = _model()
-    eng = ServingEngine(params, cfg, n_slots=1, smax=16)
+    eng = ServingEngine(params, cfg, n_slots=1, smax=16,
+                        admission="lenient")
     req = Request(rid=0, prompt=(np.arange(25) * 3 + 1) % cfg.vocab,
                   max_new=2)
     eng.submit(req)
@@ -152,7 +157,8 @@ def test_overlong_prompt_still_generates_full_max_new():
     for n_slots, engine_cls, kw in [
             (1, ServingEngine, {}),
             (1, PagedServingEngine, dict(page_size=8, prefill_chunk=4))]:
-        eng = engine_cls(params, cfg, n_slots=n_slots, smax=16, **kw)
+        eng = engine_cls(params, cfg, n_slots=n_slots, smax=16,
+                         admission="lenient", **kw)
         req = Request(rid=0, prompt=(np.arange(40) * 3 + 1) % cfg.vocab,
                       max_new=6)
         eng.submit(req)
@@ -248,9 +254,11 @@ def test_paged_preemption_in_capacity_regime_keeps_context():
     preemption timing. The folded context must survive intact."""
     params, cfg = _model()
     prompts = [(np.arange(16) * 3 + i) % cfg.vocab for i in range(3)]
-    truth = _sequential_dense(params, cfg, prompts, max_new=100, smax=32)
+    truth = _sequential_dense(params, cfg, prompts, max_new=100, smax=32,
+                              admission="lenient")
     eng = PagedServingEngine(params, cfg, n_slots=2, smax=32, page_size=8,
-                             prefill_chunk=8, n_pages=6)
+                             prefill_chunk=8, n_pages=6,
+                             admission="lenient")
     reqs = [Request(rid=i, prompt=p.copy(), max_new=100)
             for i, p in enumerate(prompts)]
     for r in reqs:
@@ -273,7 +281,8 @@ def test_paged_eos_mid_stream_frees_pages():
     probe.run_until_done(100)
     eos = r0.out[0]
     eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
-                             prefill_chunk=4, eos_id=eos)
+                             prefill_chunk=4, eos_id=eos,
+                             admission="lenient")
     req = Request(rid=1, prompt=prompt.copy(), max_new=50)
     eng.submit(req)
     eng.run_until_done(300)
@@ -288,7 +297,7 @@ def test_paged_request_outliving_its_pages_finishes_at_cap():
     params, cfg = _model()
     prompt = (np.arange(5) * 3 + 2) % cfg.vocab
     eng = PagedServingEngine(params, cfg, n_slots=1, smax=32, page_size=8,
-                             prefill_chunk=4)
+                             prefill_chunk=4, admission="lenient")
     req = Request(rid=0, prompt=prompt.copy(), max_new=1000)
     eng.submit(req)
     eng.run_until_done(500)
