@@ -287,6 +287,31 @@ DEFAULT_CHAOS = ("seed=3,nan_logits=0.04,alloc_fail=0.05,"
                  "pool_exhaustion=0.03,kernel_fail=0.02")
 
 
+def donation_workload(params, cfg, data, *, n_slots, smax, page_size,
+                      chunk, max_new, n_req):
+    """Buffer donation A/B: the identical stream through the paged engine
+    with ``donate_argnums`` disabled vs enabled on every cache-updating
+    jitted program (decode_step / prefill_chunk / copy_cache_page).
+    Donation lets XLA update the cache in place instead of materialising
+    a second copy — on CPU it is a silent no-op, so the two rows bounding
+    each other is itself the assertion; on a device the 'after' row is
+    the one to watch alongside the halved peak cache footprint."""
+    rows = {}
+    for key, don in (("donate_off", False), ("donate_on", True)):
+        eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                 page_size=page_size, prefill_chunk=chunk,
+                                 donate=don)
+        rows[key] = _drain(eng, _requests(data, n_req, max_new,
+                                          vocab=cfg.vocab))
+    rows["steady_state_tok_per_s"] = {
+        "before": rows["donate_off"]["tok_per_s"],
+        "after": rows["donate_on"]["tok_per_s"],
+    }
+    print(f"[donation] tok/s before={rows['donate_off']['tok_per_s']} "
+          f"after={rows['donate_on']['tok_per_s']}")
+    return rows
+
+
 def chaos_workload(params, cfg, data, *, n_slots, smax, page_size, chunk,
                    max_new, n_req, spec=""):
     """Robustness acceptance: one stream, fault-free then under a seeded
@@ -384,7 +409,7 @@ def main():
                          + ",".join(FAMILY_ARCHS))
     ap.add_argument("--workload", default="standard",
                     choices=["standard", "shared-prefix", "layout",
-                             "chaos"],
+                             "chaos", "donation"],
                     help="shared-prefix: N requests over one long system "
                          "prompt, prefix cache on vs off (hit rate, TTFT, "
                          "tok/s). layout: the same stream under each "
@@ -451,6 +476,16 @@ def main():
             page_size=page_size, chunk=chunk, max_new=max_new, n_req=n_req)
         _write_merged(args.out, {"shared_prefix": rows})
         print(json.dumps({"shared_prefix": rows}, indent=2))
+        print(f"\nwrote {args.out}")
+        return
+
+    if args.workload == "donation":
+        rows = donation_workload(
+            params, cfg, data, n_slots=n_slots, smax=smax,
+            page_size=page_size, chunk=chunk, max_new=max_new,
+            n_req=n_req)
+        _write_merged(args.out, {"donation": rows})
+        print(json.dumps({"donation": rows}, indent=2))
         print(f"\nwrote {args.out}")
         return
 

@@ -1,0 +1,24 @@
+"""Static contract checking for the repro codebase (DESIGN.md §12).
+
+Four passes, one CLI (``python -m repro.analysis``):
+
+  lint              AST rules over src/repro: host syncs in the serving
+                    hot path, forbidden ops in Pallas kernel bodies,
+                    tracer-valued Python branches in jitted code,
+                    wall-clock/random in serving/, frozen-dataclass
+                    mutation, missing buffer donation
+  kernel-contracts  abstract-eval of every registered kernel entry point
+                    across the tuning-table plans × PageLayout dtypes
+  resource-flow     alloc/acquire ↔ release pairing on all paths through
+                    the scheduler, and lifecycle-edge legality at every
+                    transition() call site
+  trace-guard       runtime sentinels (retrace detection, page-table
+                    sanitizer) used by tests/engines, not the CLI
+
+Findings carry per-rule ids and file:line locations; a committed baseline
+(analysis_baseline.json) holds accepted findings, and ``--strict`` fails
+on anything unbaselined.
+"""
+from repro.analysis.common import Finding, load_baseline, fingerprint
+
+__all__ = ["Finding", "load_baseline", "fingerprint"]

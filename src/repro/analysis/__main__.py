@@ -1,0 +1,4 @@
+"""Entry point: ``python -m repro.analysis``."""
+from repro.analysis.cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,113 @@
+"""``python -m repro.analysis`` — run the static passes over the repo.
+
+Exit codes: 0 clean (or all findings baselined / non-strict), 1 at least
+one unbaselined finding under ``--strict``, 2 usage error.
+
+Baseline workflow: findings are identified by line-number-independent
+fingerprints (rule + file + function + offending source text). A
+committed ``analysis_baseline.json`` at the repo root lists accepted
+fingerprints; ``--update-baseline`` rewrites it from the current run.
+The steady state of this repo is an *empty* baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis import kernel_contracts, lint, resource_flow
+from repro.analysis.common import (Finding, finding_fingerprints,
+                                   iter_sources, load_baseline, repo_root,
+                                   save_baseline)
+
+CONTRACT_RULES = ("contract-divisibility", "contract-sublane",
+                  "contract-lane", "contract-vmem", "contract-eval",
+                  "contract-prefetch")
+ALL_RULES = tuple(lint.RULES) + tuple(resource_flow.RULES) + CONTRACT_RULES
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract checks: serving hot-path lint, "
+                    "Pallas kernel contracts, resource flow.")
+    p.add_argument("paths", nargs="*", type=pathlib.Path,
+                   help="files or directories to analyse "
+                        "(default: src/repro under the repo root)")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on any unbaselined finding")
+    p.add_argument("--baseline", type=pathlib.Path, default=None,
+                   help="baseline file (default: "
+                        "<repo>/analysis_baseline.json)")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline from this run's findings")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print every rule id and exit")
+    p.add_argument("--no-contracts", action="store_true",
+                   help="skip the kernel-contract sweep (needs jax; the "
+                        "AST passes do not)")
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(r)
+        return 0
+
+    rules: Optional[Sequence[str]] = None
+    if args.rules:
+        rules = tuple(r.strip() for r in args.rules.split(",") if r.strip())
+        unknown = [r for r in rules if r not in ALL_RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+
+    root = repo_root()
+    paths = list(args.paths) or [root / "src" / "repro"]
+    sources = iter_sources(paths, root)
+
+    findings: List[Finding] = []
+    findings += lint.run(sources, rules=rules)
+    findings += resource_flow.run(sources, rules=rules)
+    want_contracts = (not args.no_contracts and
+                      (rules is None or any(r in CONTRACT_RULES
+                                            for r in rules)))
+    if want_contracts:
+        contract = kernel_contracts.check_all()
+        if rules is not None:
+            contract = [f for f in contract if f.rule in rules]
+        findings += contract
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    prints = finding_fingerprints(findings, root)
+
+    baseline_path = args.baseline or (root / "analysis_baseline.json")
+    if args.update_baseline:
+        save_baseline(baseline_path, prints)
+        print(f"baseline updated: {len(prints)} finding(s) -> "
+              f"{baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    fresh = [(f, fp) for f, fp in zip(findings, prints)
+             if fp not in baseline]
+    for f, _ in fresh:
+        print(f.format())
+    n_base = len(findings) - len(fresh)
+    if findings or baseline:
+        print(f"{len(fresh)} finding(s) ({n_base} baselined, "
+              f"{len(baseline)} baseline entries)")
+    else:
+        print("clean: no findings, empty baseline")
+    if args.strict and fresh:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":      # pragma: no cover — exercised via __main__
+    raise SystemExit(main())

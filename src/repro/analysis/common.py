@@ -1,0 +1,141 @@
+"""Shared plumbing for the analysis passes: findings, baselines, sources."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one location."""
+    rule: str                    # per-rule id, e.g. "host-sync"
+    path: str                    # repo-relative posix path
+    line: int                    # 1-based
+    message: str
+    func: str = ""               # enclosing function, for fingerprints
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def fingerprint(self, source_line: str = "") -> str:
+        return fingerprint(self.rule, self.path, self.func, source_line)
+
+
+def fingerprint(rule: str, path: str, func: str, source_line: str) -> str:
+    """Line-number-independent identity of a finding: rule + file +
+    enclosing function + the offending source text. Survives unrelated
+    edits above the finding; changes when the flagged code changes."""
+    h = hashlib.sha256(
+        "\x1f".join([rule, path, func, source_line.strip()]).encode()
+    ).hexdigest()[:16]
+    return f"{rule}:{path}:{func}:{h}"
+
+
+def finding_fingerprints(findings: Iterable[Finding],
+                         root: pathlib.Path) -> List[str]:
+    """Fingerprints for a batch of findings, reading each source line."""
+    cache: Dict[str, List[str]] = {}
+    out = []
+    for f in findings:
+        if f.path not in cache:
+            try:
+                cache[f.path] = (root / f.path).read_text().splitlines()
+            except OSError:
+                cache[f.path] = []
+        lines = cache[f.path]
+        text = lines[f.line - 1] if 0 < f.line <= len(lines) else ""
+        out.append(f.fingerprint(text))
+    return out
+
+
+# ------------------------------------------------------------- baseline
+
+def load_baseline(path: pathlib.Path) -> Set[str]:
+    """Accepted-finding fingerprints from the committed baseline file.
+    Missing file == empty baseline (the desired steady state)."""
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("fingerprints", []))
+
+
+def save_baseline(path: pathlib.Path, fingerprints: Iterable[str]) -> None:
+    path.write_text(json.dumps(
+        {"fingerprints": sorted(set(fingerprints))}, indent=2) + "\n")
+
+
+# ----------------------------------------------------------- source I/O
+
+def repo_root(start: Optional[pathlib.Path] = None) -> pathlib.Path:
+    """Nearest ancestor containing pyproject.toml (the analysis anchors
+    paths and the baseline there); falls back to the cwd."""
+    p = (start or pathlib.Path.cwd()).resolve()
+    for cand in (p, *p.parents):
+        if (cand / "pyproject.toml").exists():
+            return cand
+    return p
+
+
+def iter_sources(paths: Iterable[pathlib.Path],
+                 root: pathlib.Path) -> List[Tuple[str, str, ast.Module]]:
+    """(relpath, source, tree) for every .py under ``paths``, parsed once.
+    Files that fail to parse yield a synthetic parse-error finding via
+    the caller (we just skip them here — pytest catches real syntax
+    errors long before this pass runs)."""
+    seen: Set[pathlib.Path] = set()
+    out: List[Tuple[str, str, ast.Module]] = []
+    for base in paths:
+        base = base.resolve()
+        files = [base] if base.is_file() else sorted(base.rglob("*.py"))
+        for f in files:
+            if f in seen or f.suffix != ".py":
+                continue
+            seen.add(f)
+            try:
+                src = f.read_text()
+                tree = ast.parse(src)
+            except (OSError, SyntaxError):
+                continue
+            try:
+                rel = f.relative_to(root).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            out.append((rel, src, tree))
+    return out
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jnp.argmax' for Attribute/Name chains, '' for anything dynamic."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def annotated(source_lines: List[str], lineno: int, tag: str) -> bool:
+    """True when ``# <tag>: ...`` rides the flagged line or the comment
+    block immediately above it — the suppression mechanism for
+    intentional violations (e.g. the one batched device->host sync per
+    decode tick). The upward walk stops at the first non-comment line,
+    so an annotation never leaks past unrelated code."""
+    def has_tag(ln: int) -> bool:
+        text = source_lines[ln - 1]
+        return f"# {tag}:" in text or f"# {tag} :" in text
+
+    if 0 < lineno <= len(source_lines) and has_tag(lineno):
+        return True
+    ln = lineno - 1
+    while 0 < ln <= len(source_lines) \
+            and source_lines[ln - 1].lstrip().startswith("#"):
+        if has_tag(ln):
+            return True
+        ln -= 1
+    return False

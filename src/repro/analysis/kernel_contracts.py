@@ -1,0 +1,272 @@
+"""Static kernel-contract checking (DESIGN.md §12).
+
+Abstract-evals every registered Pallas entry point (kernels/registry.py)
+across the tuning-table plan matrix (kernels/tuning.py TUNED) × every
+supported PageLayout dtype (configs/base.py LAYOUT_ITEMSIZE, incl. the
+int8/fp8 quantized layouts) × stored-key widths (full D and the rank-D/2
+latent basis), without compiling or running anything:
+
+  contract-divisibility  S % block_size, page_size % block_size
+  contract-sublane       block_size versus the dtype's sublane granule
+                         (f32 8, bf16/fp16 16, int8/fp8 32)
+  contract-lane          every staged width (d, kdim, D) packs the
+                         128-lane tile deterministically (divides or is
+                         a multiple of 128)
+  contract-vmem          the plan's per-grid-step VMEM footprint
+                         (KernelPlan.vmem_bytes — padded tiles, matching
+                         the kernel's scratch_shapes) within VMEM_BUDGET
+  contract-eval          jax.eval_shape through the real pallas_call:
+                         shape/dtype mismatches, BlockSpec
+                         inconsistencies and bad scratch shapes surface
+                         here with zero device work
+  contract-prefetch      the entry point's source really routes its
+                         declared scalar-prefetch operands through
+                         PrefetchScalarGridSpec, and declared scale
+                         sidecars through SMEM BlockSpecs
+
+``jax.eval_shape`` traces the pallas_call abstractly, so a 512k-token
+plan costs the same to check as a 4k one.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+import inspect
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.common import Finding
+from repro.kernels import registry, tuning
+
+#: PageLayout dtype name -> jnp dtype (mirrors configs/base.py)
+LAYOUT_DTYPES: Dict[str, Any] = {
+    "fp32": jnp.float32,
+    "fp16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "int8": jnp.int8,
+    "fp8": jnp.float8_e4m3fn,
+}
+QUANT = ("int8", "fp8")
+#: score width fraction (LokiConfig.d_f default) and selection cap used
+#: for the abstract sweep — k_blocks only sizes a tiny SMEM row, so a
+#: small representative value keeps tracing fast without weakening the
+#:  contract
+D_F = 0.25
+K_BLOCKS_CAP = 8
+
+
+def _sds(shape: Tuple[int, ...], dtype: Any) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _eval(fn: Callable[..., Any], *args: Any, **kwargs: Any) -> Any:
+    """eval_shape with kwargs split the way the kernels expect them:
+    array operands (ShapeDtypeStructs) must be *traced* — binding them
+    in the partial would hand the kernel a bare struct — while ints and
+    flags are compile-time statics and must stay out of the trace."""
+    static = {k: v for k, v in kwargs.items()
+              if not isinstance(v, jax.ShapeDtypeStruct)}
+    traced = {k: v for k, v in kwargs.items()
+              if isinstance(v, jax.ShapeDtypeStruct)}
+    return jax.eval_shape(functools.partial(fn, **static), *args, **traced)
+
+
+def check_all(budget: int = tuning.VMEM_BUDGET) -> List[Finding]:
+    """Sweep TUNED × PageLayout dtypes × key widths. Every returned
+    Finding points at kernels/tuning.py (the plan is the contract)."""
+    entries = registry.load_all()
+    out: List[Finding] = []
+    out += _check_declarations(entries)
+    path = "src/repro/kernels/tuning.py"
+    for key, (variant, bs) in sorted(tuning.TUNED.items()):
+        smax, dim, g, bs_hint = key
+        for dtype_name, dtype in LAYOUT_DTYPES.items():
+            itemsize = jnp.dtype(dtype).itemsize
+            for kdim in dict.fromkeys((dim, max(dim // 2, 1))):
+                out += _check_cell(
+                    path, entries, smax=smax, dim=dim, g=g,
+                    bs_hint=bs_hint, variant=variant, bs=bs, kdim=kdim,
+                    dtype_name=dtype_name, dtype=dtype,
+                    itemsize=itemsize, budget=budget)
+    return out
+
+
+def _check_cell(path: str, entries: Dict[str, registry.KernelEntry], *,
+                smax: int, dim: int, g: int, bs_hint: int, variant: str,
+                bs: int, kdim: int, dtype_name: str, dtype: Any,
+                itemsize: int, budget: int) -> List[Finding]:
+    out: List[Finding] = []
+    cell = (f"plan ({smax}, {dim}, {g}, {bs_hint})={variant}/{bs} "
+            f"dtype={dtype_name} kdim={kdim}")
+    plan = tuning.KernelPlan(variant, bs)
+    d = max(min(int(D_F * dim), kdim), 8)
+
+    if smax % bs:
+        out.append(Finding("contract-divisibility", path, 1,
+                           f"{cell}: S={smax} not divisible by "
+                           f"block_size={bs}"))
+        return out
+    sub = tuning.SUBLANE.get(itemsize, 8)
+    if bs % sub:
+        out.append(Finding(
+            "contract-sublane", path, 1,
+            f"{cell}: block_size={bs} not a multiple of the {dtype_name} "
+            f"sublane granule {sub}"))
+    for wname, w in (("d", d), ("kdim", kdim), ("dim", dim)):
+        if w % tuning.LANE and tuning.LANE % w:
+            out.append(Finding(
+                "contract-lane", path, 1,
+                f"{cell}: staged width {wname}={w} neither divides nor "
+                f"is a multiple of the {tuning.LANE}-lane tile"))
+    vmem = plan.vmem_bytes(smax=smax, d=d, kdim=kdim, dim=dim, g=g,
+                           itemsize=itemsize)
+    if vmem > budget:
+        out.append(Finding(
+            "contract-vmem", path, 1,
+            f"{cell}: per-grid-step VMEM footprint {vmem} bytes exceeds "
+            f"budget {budget}"))
+    if out:
+        return out          # geometry is broken: eval would just re-raise
+
+    # geometry holds — abstract-eval the registered entry points with the
+    # serving-shaped operands this plan would actually see. Pages default
+    # to the config-hint size when the plan's blocks tile it, else to one
+    # block per page (the runtime falls back identically).
+    ps = bs_hint if bs_hint % bs == 0 else bs
+    quant = dtype_name in QUANT
+    nb = smax // bs
+    kb = min(max(int(0.25 * nb), 1), K_BLOCKS_CAP)
+    n_pages = smax // ps + 1
+    rows = n_pages * ps
+    q = _sds((1, 1, g, kdim), jnp.float32)
+    k_pool = _sds((rows, 1, kdim), dtype)
+    v_pool = _sds((rows, 1, dim), dtype)
+    cur = _sds((1,), jnp.int32)
+    table = _sds((1, smax // ps), jnp.int32)
+    scales: Dict[str, Any] = {}
+    if quant:
+        scales = {"k_scale": _sds((n_pages,), jnp.float32),
+                  "v_scale": _sds((n_pages,), jnp.float32)}
+
+    def expect(name: str, fn: Callable[[], Any],
+               shape: Tuple[int, ...]) -> None:
+        try:
+            got = fn()
+        except Exception as e:  # noqa: BLE001 — every trace error is a finding
+            out.append(Finding(
+                "contract-eval", path, 1,
+                f"{cell}: {name} failed abstract eval: {type(e).__name__}: "
+                f"{e}"))
+            return
+        if tuple(got.shape) != shape:
+            out.append(Finding(
+                "contract-eval", path, 1,
+                f"{cell}: {name} output shape {tuple(got.shape)} != "
+                f"declared {shape}"))
+
+    if "fused_loki_decode" in entries:
+        fused = entries["fused_loki_decode"].fn
+        expect("fused_loki_decode(paged)",
+               lambda: _eval(fused, q, k_pool, v_pool, cur,
+                             d=d, k_blocks=kb, block_size=bs,
+                             page_table=table, page_size=ps, **scales),
+               (1, 1, g, dim))
+    if "select_blocks" in entries:
+        sel_fn = entries["select_blocks"].fn
+        ksc = {"k_scale": scales["k_scale"]} if quant else {}
+        expect("select_blocks(paged)",
+               lambda: _eval(sel_fn, q, k_pool, cur, d=d, k_blocks=kb,
+                             block_size=bs, page_table=table,
+                             page_size=ps, **ksc),
+               (1, 1, kb))
+    if "block_sparse_attention_grouped" in entries:
+        gfn = entries["block_sparse_attention_grouped"].fn
+        idx = _sds((1, 1, kb), jnp.int32)
+        expect("block_sparse_attention_grouped(paged)",
+               lambda: _eval(gfn, q, k_pool, v_pool, idx, cur,
+                             block_size=bs, page_table=table,
+                             page_size=ps, **scales),
+               (1, 1, g, dim))
+
+    # contiguous-cache entry points carry no page/scale contract — one
+    # representative eval per (plan, dtype) at full key width suffices
+    if kdim != dim:
+        return out
+    bh = g
+    q2 = _sds((bh, dim), jnp.float32)
+    k2 = _sds((bh, smax, dim), dtype)
+    v2 = _sds((bh, smax, dim), dtype)
+    cur2 = _sds((bh,), jnp.int32)
+    if "block_max_scores" in entries:
+        expect("block_max_scores",
+               lambda: _eval(entries["block_max_scores"].fn, q2, k2, cur2,
+                             d=d, block_size=bs),
+               (bh, nb))
+    if "block_max_scores_fm" in entries:
+        kT = _sds((bh, dim, smax), dtype)
+        expect("block_max_scores_fm",
+               lambda: _eval(entries["block_max_scores_fm"].fn, q2, kT,
+                             cur2, d=d, block_size=bs),
+               (bh, nb))
+    if "block_sparse_attention" in entries:
+        idx2 = _sds((bh, kb), jnp.int32)
+        expect("block_sparse_attention",
+               lambda: _eval(entries["block_sparse_attention"].fn,
+                             q2, k2, v2, idx2, cur2, block_size=bs),
+               (bh, dim))
+    if "flash_attention" in entries:
+        sq = min(smax, 4 * bs)
+        q3 = _sds((bh, sq, dim), jnp.float32)
+        kv3 = _sds((bh, sq, dim), dtype)
+        expect("flash_attention",
+               lambda: _eval(entries["flash_attention"].fn, q3, kv3, kv3,
+                             block_q=bs, block_k=bs),
+               (bh, sq, dim))
+    return out
+
+
+# ------------------------------------------------ declaration cross-check
+
+def _check_declarations(
+        entries: Dict[str, registry.KernelEntry]) -> List[Finding]:
+    """The registry contract must match what the source actually builds:
+    declared scalar-prefetch operands imply a PrefetchScalarGridSpec,
+    declared scale sidecars imply SMEM BlockSpecs — and vice versa."""
+    out: List[Finding] = []
+    for name, entry in sorted(entries.items()):
+        try:
+            src = inspect.getsource(entry.fn)
+            tree = ast.parse(src)
+        except (OSError, TypeError, SyntaxError):
+            continue
+        path = f"src/{entry.contract.module.replace('.', '/')}.py"
+        line = entry.fn.__code__.co_firstlineno
+        names = {n.attr if isinstance(n, ast.Attribute) else n.id
+                 for n in ast.walk(tree)
+                 if isinstance(n, (ast.Attribute, ast.Name))}
+        uses_prefetch = "PrefetchScalarGridSpec" in names
+        uses_smem = "SMEM" in names
+        c = entry.contract
+        if c.uses_prefetch_grid and not uses_prefetch:
+            out.append(Finding(
+                "contract-prefetch", path, line,
+                f"{name} declares scalar_prefetch={c.scalar_prefetch} "
+                "but never builds a PrefetchScalarGridSpec"))
+        if not c.uses_prefetch_grid and uses_prefetch:
+            out.append(Finding(
+                "contract-prefetch", path, line,
+                f"{name} builds a PrefetchScalarGridSpec but declares no "
+                "scalar_prefetch operands"))
+        if c.smem_sidecars and not uses_smem:
+            out.append(Finding(
+                "contract-prefetch", path, line,
+                f"{name} declares SMEM sidecars {c.smem_sidecars} but "
+                "never places an operand in SMEM"))
+        if c.paged_operand and c.paged_operand not in c.scalar_prefetch:
+            out.append(Finding(
+                "contract-prefetch", path, line,
+                f"{name}: paged operand {c.paged_operand!r} must ride "
+                "scalar prefetch (page tables are grid-visible)"))
+    return out

@@ -1,0 +1,537 @@
+"""AST lint rules over src/repro (DESIGN.md §12).
+
+Rule ids:
+
+  host-sync        device->host synchronization (``.item()``,
+                   ``jax.device_get``, ``np.asarray(device_value)``,
+                   ``int()/float()/bool()`` on device values) inside a
+                   serving engine's tick-reachable methods. Intentional,
+                   batched syncs are suppressed with a ``# host-sync:
+                   <reason>`` annotation on (or above) the line.
+  kernel-op        ops that do not lower through Mosaic — or are host
+                   calls — inside a Pallas kernel body (``jnp.sort``,
+                   ``lax.top_k``, ``np.*``, ``.item()``, ...).
+  tracer-branch    Python ``if``/``while`` (or conditional expression)
+                   on a traced value inside a jitted function — the
+                   classic ConcretizationTypeError, caught statically.
+  wall-clock       direct wall-clock or ``random``-module calls in
+                   serving/ (engines must take injected clocks/rngs for
+                   determinism). ``# wall-clock: <reason>`` suppresses.
+  frozen-mut       attribute assignment on frozen-dataclass instances.
+  buffer-donation  a jitted cache-updating program (decode_step /
+                   prefill_chunk / copy_cache_page) without
+                   ``donate_argnums`` — the old cache buffer is dead the
+                   moment the call returns, donating it halves peak HBM
+                   for the cache update.
+
+The host-sync pass does a small per-class dataflow: attributes assigned
+from ``jnp.*``/jitted programs are device-valued, ones assigned from
+``np.*`` are host; locals propagate through assignments inside each
+tick-reachable method. ``np.asarray`` on a *host* value is fine — only
+syncs on device values are findings.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import Finding, annotated, dotted_name
+
+RULES = ("host-sync", "kernel-op", "tracer-branch", "wall-clock",
+         "frozen-mut", "buffer-donation")
+
+#: prefixes whose call results live on device
+_DEVICE_CALL_PREFIXES = ("jnp.", "jax.lax.", "jax.random.", "jax.numpy.",
+                         "jax.tree.", "jax.tree_util.")
+#: calls that explicitly move device values to host (and are themselves
+#: the thing the host-sync rule polices)
+_SYNC_CALLS = ("jax.device_get", "jax.block_until_ready")
+#: ops that have no Mosaic lowering (or are host-level) — forbidden
+#: inside kernel bodies
+_KERNEL_DENY = {
+    "jnp.einsum", "jnp.sort", "jnp.argsort", "jnp.take",
+    "jnp.take_along_axis", "jnp.nonzero", "jnp.unique", "jnp.asarray",
+    "jax.lax.top_k", "jax.lax.sort", "jax.device_get",
+}
+_WALL_CLOCK = {"time.time", "time.monotonic", "time.perf_counter",
+               "time.sleep", "datetime.now", "datetime.datetime.now",
+               "datetime.utcnow"}
+_CACHE_PROGS = ("decode_step", "prefill_chunk", "copy_cache_page")
+
+
+def run(sources: Sequence[Tuple[str, str, ast.Module]],
+        rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    active = set(rules) if rules is not None else set(RULES)
+    out: List[Finding] = []
+    for path, src, tree in sources:
+        lines = src.splitlines()
+        if "host-sync" in active:
+            out += _check_host_sync(path, lines, tree)
+        if "kernel-op" in active:
+            out += _check_kernel_ops(path, tree)
+        if "tracer-branch" in active:
+            out += _check_tracer_branch(path, tree)
+        if "wall-clock" in active and _in_serving(path):
+            out += _check_wall_clock(path, lines, tree)
+        if "frozen-mut" in active:
+            out += _check_frozen_mut(path, tree)
+        if "buffer-donation" in active:
+            out += _check_donation(path, tree)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def _in_serving(path: str) -> bool:
+    return "serving/" in path or path.startswith("serving")
+
+
+# ===================================================== host-sync dataflow
+
+def _device_functions(tree: ast.Module) -> Set[str]:
+    """Module-level functions whose bodies compute on device (any jnp /
+    jax.lax / jax.random call) — their results are treated device-valued
+    at call sites (e.g. ``sample_next``)."""
+    out: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    name = dotted_name(sub.func)
+                    if name.startswith(_DEVICE_CALL_PREFIXES):
+                        out.add(node.name)
+                        break
+    return out
+
+
+class _AttrClasses:
+    """Per-class attribute classification: device / host / jitted."""
+
+    def __init__(self, cls: ast.ClassDef, device_funcs: Set[str]):
+        self.methods: Dict[str, ast.FunctionDef] = {
+            m.name: m for m in cls.body
+            if isinstance(m, ast.FunctionDef)}
+        self.device: Set[str] = set()
+        self.host: Set[str] = set()
+        self.jitted: Set[str] = set()
+        self._device_funcs = device_funcs
+        for m in self.methods.values():
+            for node in ast.walk(m):
+                if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for tgt in targets:
+                    self._classify(tgt, node.value)
+
+    def _classify(self, tgt: ast.AST, value: ast.AST) -> None:
+        names = []
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            pairs = list(zip(tgt.elts, [value] * len(tgt.elts)))
+        else:
+            pairs = [(tgt, value)]
+        for t, v in pairs:
+            if not (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"):
+                continue
+            names.append(t.attr)
+            called = dotted_name(v.func) if isinstance(v, ast.Call) else ""
+            if called in ("jax.jit", "functools.partial"):
+                self.jitted.add(t.attr)
+            elif self._is_device_expr(v):
+                self.device.add(t.attr)
+            elif called.startswith(("np.", "numpy.")):
+                self.host.add(t.attr)
+        # device classification wins over host on conflicting assignments
+        self.host -= self.device
+
+    def _is_device_expr(self, node: ast.AST) -> bool:
+        env = _Env(self, set(), self._device_funcs)
+        return env.is_device(node)
+
+
+class _Env:
+    """Device-valuedness of expressions given local device names."""
+
+    def __init__(self, attrs: _AttrClasses, local_device: Set[str],
+                 device_funcs: Set[str]):
+        self.attrs = attrs
+        self.local = local_device
+        self.device_funcs = device_funcs
+
+    def is_device(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.local
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name) and node.value.id == "self":
+                return node.attr in self.attrs.device
+            # .at[...].set(...) chains, .astype, .T ... on device values
+            return self.is_device(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_device(node.value)
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name in _SYNC_CALLS or name.startswith(("np.", "numpy.")):
+                return False                       # result is host
+            if name.startswith(_DEVICE_CALL_PREFIXES):
+                return True
+            if name in self.device_funcs:
+                return True
+            if name.startswith("self."):
+                attr = name.split(".", 1)[1]
+                if attr in self.attrs.jitted:
+                    return True
+            # method call on a device value (x.astype(...), x.at[i].set())
+            if isinstance(node.func, ast.Attribute) \
+                    and self.is_device(node.func.value):
+                return True
+            return False
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.is_device(node.left) or any(
+                self.is_device(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_device(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_device(e) for e in node.elts)
+        return False
+
+
+def _tick_reachable(attrs: _AttrClasses) -> Set[str]:
+    """Methods reachable from tick() through self.<m>() calls — the
+    engine hot path the host-sync rule polices."""
+    seen: Set[str] = set()
+    work = ["tick"]
+    while work:
+        name = work.pop()
+        if name in seen or name not in attrs.methods:
+            continue
+        seen.add(name)
+        for node in ast.walk(attrs.methods[name]):
+            if isinstance(node, ast.Call):
+                called = dotted_name(node.func)
+                if called.startswith("self."):
+                    work.append(called.split(".", 1)[1])
+    return seen
+
+
+def _check_host_sync(path: str, lines: List[str],
+                     tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    device_funcs = _device_functions(tree)
+    for cls in tree.body:
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        attrs = _AttrClasses(cls, device_funcs)
+        if "tick" not in attrs.methods:
+            continue
+        for mname in sorted(_tick_reachable(attrs)):
+            out += _scan_method_syncs(path, lines, attrs,
+                                      attrs.methods[mname], device_funcs)
+    return out
+
+
+def _scan_method_syncs(path: str, lines: List[str], attrs: _AttrClasses,
+                       fn: ast.FunctionDef,
+                       device_funcs: Set[str]) -> List[Finding]:
+    out: List[Finding] = []
+    env = _Env(attrs, set(), device_funcs)
+
+    def flag(node: ast.AST, what: str) -> None:
+        if not annotated(lines, node.lineno, "host-sync"):
+            out.append(Finding("host-sync", path, node.lineno,
+                               f"{what} in tick path ({fn.name}); hoist, "
+                               "batch, or annotate `# host-sync: <why>`",
+                               func=fn.name))
+
+    def visit(node: ast.AST) -> None:
+        # track local device names through (sequentially-scanned)
+        # assignments before inspecting the expression itself
+        if isinstance(node, ast.Assign):
+            tgts = node.targets
+            dev = env.is_device(node.value)
+            for t in tgts:
+                for n in ([t] if isinstance(t, ast.Name) else
+                          [e for e in getattr(t, "elts", [])
+                           if isinstance(e, ast.Name)]):
+                    (env.local.add if dev else env.local.discard)(n.id)
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                flag(node, "`.item()` sync")
+            elif name in _SYNC_CALLS:
+                flag(node, f"`{name}` sync")
+            elif name in ("np.asarray", "np.array", "numpy.asarray") \
+                    and node.args and env.is_device(node.args[0]):
+                flag(node, f"`{name}` on a device value")
+            elif name in ("int", "float", "bool") and node.args \
+                    and env.is_device(node.args[0]):
+                flag(node, f"`{name}()` on a device value")
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in fn.body:
+        visit(stmt)
+    return out
+
+
+# ========================================================== kernel bodies
+
+def _kernel_body_functions(tree: ast.Module) -> Set[str]:
+    """Functions that execute inside pallas_call: the kernel argument
+    (direct name or functools.partial(name, ...), possibly through a
+    local alias), plus module-level helpers they call."""
+    defs = {n.name for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+    roots: Set[str] = set()
+
+    def peel(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Call) \
+                and dotted_name(node.func).endswith("partial") \
+                and node.args:
+            return peel(node.args[0])
+        return None
+
+    # local aliases: kernel = functools.partial(_kernel, ...)
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            tgt = peel(node.value)
+            if tgt in defs:
+                aliases[node.targets[0].id] = tgt
+        if isinstance(node, ast.Call) \
+                and dotted_name(node.func).endswith("pallas_call") \
+                and node.args:
+            name = peel(node.args[0])
+            if name:
+                roots.add(aliases.get(name, name))
+    # transitive closure over module-level helpers (_score_and_select)
+    by_name = {n.name: n for n in tree.body
+               if isinstance(n, ast.FunctionDef)}
+    seen: Set[str] = set()
+    work = [r for r in roots if r in by_name]
+    while work:
+        name = work.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for node in ast.walk(by_name[name]):
+            if isinstance(node, ast.Call):
+                called = dotted_name(node.func)
+                if called in by_name and called not in seen:
+                    work.append(called)
+    return seen
+
+
+def _check_kernel_ops(path: str, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    bodies = _kernel_body_functions(tree)
+    if not bodies:
+        return out
+    by_name = {n.name: n for n in tree.body
+               if isinstance(n, ast.FunctionDef)}
+    for name in sorted(bodies):
+        for node in ast.walk(by_name[name]):
+            if not isinstance(node, ast.Call):
+                continue
+            called = dotted_name(node.func)
+            bad = ""
+            if called in _KERNEL_DENY:
+                bad = f"`{called}` does not lower inside a Pallas kernel"
+            elif called.startswith(("np.", "numpy.")):
+                bad = f"host numpy call `{called}` inside a kernel body"
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                bad = "`.item()` inside a kernel body"
+            if bad:
+                out.append(Finding("kernel-op", path, node.lineno,
+                                   f"{bad} (kernel {name})", func=name))
+    return out
+
+
+# ========================================================= tracer branches
+
+def _is_jitted(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if name in ("jax.jit", "jit"):
+            return True
+        if isinstance(dec, ast.Call) and name.endswith("partial") \
+                and dec.args and dotted_name(dec.args[0]) in ("jax.jit",
+                                                              "jit"):
+            return True
+    return False
+
+
+def _has_traced_call(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = dotted_name(sub.func)
+            if name.startswith(_DEVICE_CALL_PREFIXES):
+                return True
+    return False
+
+
+def _check_tracer_branch(path: str, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+
+    def scan(fn_body: Iterable[ast.AST], fname: str) -> None:
+        for stmt in fn_body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.If, ast.While)) \
+                        and _has_traced_call(node.test):
+                    out.append(Finding(
+                        "tracer-branch", path, node.lineno,
+                        "Python branch on a traced value inside jitted "
+                        f"`{fname}` — use jnp.where / lax.cond",
+                        func=fname))
+                if isinstance(node, ast.IfExp) \
+                        and _has_traced_call(node.test):
+                    out.append(Finding(
+                        "tracer-branch", path, node.lineno,
+                        "conditional expression on a traced value inside "
+                        f"jitted `{fname}`", func=fname))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and _is_jitted(node):
+            scan(node.body, node.name)
+        if isinstance(node, ast.Call) \
+                and dotted_name(node.func) in ("jax.jit", "jit"):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Lambda):
+                    scan([arg.body], "<lambda>")
+    return out
+
+
+# ============================================================= wall clock
+
+def _check_wall_clock(path: str, lines: List[str],
+                      tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        bad = ""
+        if name in _WALL_CLOCK:
+            bad = f"wall-clock call `{name}` in serving/"
+        elif name.startswith("random."):
+            bad = f"`{name}` (unseeded python random) in serving/"
+        if bad and not annotated(lines, node.lineno, "wall-clock"):
+            out.append(Finding(
+                "wall-clock", path, node.lineno,
+                f"{bad}; inject a clock/rng for determinism"))
+    return out
+
+
+# ===================================================== frozen dataclasses
+
+def _frozen_classes(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) \
+                    and dotted_name(dec.func).endswith("dataclass"):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" \
+                            and isinstance(kw.value, ast.Constant) \
+                            and kw.value.value is True:
+                        out.add(node.name)
+    return out
+
+
+def _check_frozen_mut(path: str, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    frozen = _frozen_classes(tree)
+    if not frozen:
+        return out
+    # 1. self.x = ... inside a frozen class's own methods
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef) or cls.name not in frozen:
+            continue
+        for m in cls.body:
+            if not isinstance(m, ast.FunctionDef) \
+                    or m.name == "__post_init__":
+                continue
+            for node in ast.walk(m):
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    tgts = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in tgts:
+                        if isinstance(t, ast.Attribute) \
+                                and isinstance(t.value, ast.Name) \
+                                and t.value.id == "self":
+                            out.append(Finding(
+                                "frozen-mut", path, node.lineno,
+                                f"assignment to self.{t.attr} inside "
+                                f"frozen dataclass {cls.name}",
+                                func=m.name))
+    # 2. x = Frozen(...); x.attr = ... inside any function
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        instances: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and dotted_name(node.value.func) in frozen:
+                instances.add(node.targets[0].id)
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in tgts:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id in instances:
+                        out.append(Finding(
+                            "frozen-mut", path, node.lineno,
+                            f"mutation of frozen-dataclass instance "
+                            f"`{t.value.id}.{t.attr}`", func=fn.name))
+    return out
+
+
+# ========================================================== buffer donation
+
+def _check_donation(path: str, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and dotted_name(node.func) in ("jax.jit", "jit")
+                and node.args):
+            continue
+        target = node.args[0]
+        body: Optional[ast.AST] = None
+        if isinstance(target, ast.Lambda):
+            body = target.body
+        elif isinstance(target, ast.Call):
+            # see through wrappers: jax.jit(wrap("name", lambda ...), ...)
+            for arg in target.args:
+                if isinstance(arg, ast.Lambda):
+                    body = arg.body
+                    break
+        if body is None:
+            continue
+        progs = [dotted_name(c.func).rsplit(".", 1)[-1]
+                 for c in ast.walk(body) if isinstance(c, ast.Call)]
+        updates = [p for p in progs if p in _CACHE_PROGS]
+        if not updates:
+            continue
+        if not any(kw.arg == "donate_argnums" for kw in node.keywords):
+            out.append(Finding(
+                "buffer-donation", path, node.lineno,
+                f"jitted cache-updating program ({', '.join(updates)}) "
+                "without donate_argnums — old cache buffer is dead on "
+                "return; donate it"))
+    return out

@@ -1,0 +1,443 @@
+"""Resource-flow dataflow over the serving layer (DESIGN.md §12).
+
+Rule ids:
+
+  resource-leak   a ``pool.alloc`` / ``pool.acquire`` /
+                  ``pool.register_private`` / ``pool.match_prefix`` call
+                  whose result can leave the enclosing function without
+                  being released, stored into engine-owned bookkeeping,
+                  or returned to the caller. The pass runs an
+                  obligation-based abstract interpretation over each
+                  method body: the bound name carries an obligation that
+                  must be discharged on every outgoing path.
+  lifecycle-edge  every ``transition(...)`` call site outside
+                  lifecycle.py must carry a ``# lifecycle: SRC -> DST``
+                  annotation; each declared edge is validated against
+                  the *imported* lifecycle.ALLOWED table (so the
+                  annotation can never drift from the real machine), and
+                  a literal ``Status.X`` argument must be inside the
+                  declared destination set.
+  pool-internals  code outside paged_cache.py reaching into the pool's
+                  private state (``pool._free`` etc.) — the auditor's
+                  read-only views are the supported surface.
+
+Obligations are discharged by:
+  * passing the name to a release op (``pool.release`` / ``pool.free`` /
+    ``pool.reclaim_private``) or to a method that transitively releases
+    its parameter;
+  * storing it (or a container holding it) into engine-owned state — any
+    assignment/``append``/``extend`` rooted at ``self.``;
+  * returning it (ownership moves to the caller);
+  * passing it to another ``self.`` method (ownership transfer — callees
+    are themselves checked).
+``x is None`` / truthiness guards cancel the obligation on the branch
+where the acquire failed.
+"""
+from __future__ import annotations
+
+import ast
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import Finding, dotted_name
+from repro.serving import lifecycle as LC
+
+RULES = ("resource-leak", "lifecycle-edge", "pool-internals")
+
+_ACQUIRE = ("alloc", "acquire", "register_private", "match_prefix")
+_RELEASE = ("release", "free", "reclaim_private")
+_POOL_PRIVATE = ("_free", "_ref", "_index", "_lru", "_by_page",
+                 "_children")
+
+
+def run(sources: Sequence[Tuple[str, str, ast.Module]],
+        rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    active = set(rules) if rules is not None else set(RULES)
+    out: List[Finding] = []
+    for path, src, tree in sources:
+        lines = src.splitlines()
+        base = path.rsplit("/", 1)[-1]
+        if "resource-leak" in active and base != "paged_cache.py":
+            out += check_leaks(path, tree)
+        if "lifecycle-edge" in active and base != "lifecycle.py":
+            out += check_lifecycle_edges(path, lines, tree)
+        if "pool-internals" in active and base != "paged_cache.py":
+            out += _check_pool_internals(path, tree)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+# ============================================================ leak check
+
+def _is_pool_call(node: ast.Call, ops: Tuple[str, ...]) -> Optional[str]:
+    """'alloc' when node is self.pool.alloc(...) / pool.alloc(...)."""
+    name = dotted_name(node.func)
+    parts = name.split(".")
+    if len(parts) >= 2 and parts[-1] in ops \
+            and parts[-2] in ("pool", "_pool"):
+        return parts[-1]
+    return None
+
+
+def _releasing_methods(cls: ast.ClassDef) -> Set[str]:
+    """Methods that release (one of) their parameters, transitively —
+    passing an obligated value to one of these discharges it."""
+    methods = {m.name: m for m in cls.body
+               if isinstance(m, ast.FunctionDef)}
+    releasing: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in methods.items():
+            if name in releasing:
+                continue
+            params = {a.arg for a in fn.args.args} - {"self"}
+            if not params:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                hits_release = _is_pool_call(node, _RELEASE) is not None
+                called = dotted_name(node.func)
+                hits_wrapper = (called.startswith("self.")
+                                and called.split(".", 1)[1] in releasing)
+                if not (hits_release or hits_wrapper):
+                    continue
+                arg_names = {n.id for a in node.args
+                             for n in ast.walk(a)
+                             if isinstance(n, ast.Name)}
+                if arg_names & params:
+                    releasing.add(name)
+                    changed = True
+                    break
+    return releasing
+
+
+class _LeakScanner:
+    """Abstract interpretation of one method: obligations per path."""
+
+    def __init__(self, path: str, fn: ast.FunctionDef,
+                 releasing: Set[str]):
+        self.path = path
+        self.fn = fn
+        self.releasing = releasing
+        self.findings: List[Finding] = []
+
+    def scan(self) -> List[Finding]:
+        open_at_exit = self._block(self.fn.body, {})
+        for name, line in open_at_exit.items():
+            self._leak(name, line, "falls off the end of")
+        return self.findings
+
+    def _leak(self, name: str, line: int, how: str) -> None:
+        self.findings.append(Finding(
+            "resource-leak", self.path, line,
+            f"pages acquired into `{name}` can leak: the obligation "
+            f"{how} `{self.fn.name}` without release/store/return",
+            func=self.fn.name))
+
+    # obligations: name -> acquire line. A path that executes
+    # return/raise must hold no obligations.
+
+    def _block(self, stmts: Iterable[ast.stmt],
+               obligations: Dict[str, int]) -> Dict[str, int]:
+        obl = dict(obligations)
+        for stmt in stmts:
+            obl = self._stmt(stmt, obl)
+        return obl
+
+    def _stmt(self, stmt: ast.stmt,
+              obl: Dict[str, int]) -> Dict[str, int]:
+        if isinstance(stmt, ast.Assign):
+            self._discharge_in(stmt.value, obl)
+            acq = self._acquire_of(stmt.value)
+            tgt = stmt.targets[0] if len(stmt.targets) == 1 else None
+            if self._is_self_rooted(tgt):
+                # storing into engine-owned state discharges everything
+                # flowing in (incl. a fresh acquire)
+                for name in self._obligated_sources(stmt.value, obl):
+                    obl.pop(name, None)
+                return obl
+            if acq is not None:
+                if isinstance(tgt, ast.Name):
+                    obl[tgt.id] = stmt.lineno
+                elif isinstance(tgt, ast.Tuple) and tgt.elts \
+                        and isinstance(tgt.elts[0], ast.Name):
+                    # `pages, cov, tail, parent = pool.match_prefix(...)`
+                    obl[tgt.elts[0].id] = stmt.lineno
+                else:
+                    self._leak("<unbound>", stmt.lineno,
+                               "is never bound in")
+            else:
+                # alias tracking: new = got[0] / keys = list(pages)
+                src_names = self._obligated_sources(stmt.value, obl)
+                if isinstance(tgt, ast.Name):
+                    if src_names:
+                        # alias/transfer: `new = got[0]` moves the
+                        # obligation to the new name
+                        obl[tgt.id] = obl.pop(src_names[0])
+                    else:
+                        obl.pop(tgt.id, None)
+            return obl
+        if isinstance(stmt, ast.Expr):
+            v = stmt.value
+            acq = self._acquire_of(v)
+            if acq is not None:
+                self._leak(f"<{acq} result>", stmt.lineno,
+                           "is discarded immediately in")
+            # `keys.append(pool.register_private(p))`: the acquire lands
+            # in a local container, which now carries the obligation
+            if isinstance(v, ast.Call) and isinstance(v.func, ast.Attribute) \
+                    and v.func.attr in ("append", "extend", "insert") \
+                    and isinstance(v.func.value, ast.Name) \
+                    and any(self._acquire_of(a) is not None
+                            for a in v.args if isinstance(a, ast.Call)):
+                obl[v.func.value.id] = stmt.lineno
+                return obl
+            self._discharge_in(v, obl)
+            return obl
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._discharge_in(stmt.value, obl)
+                for name in self._obligated_sources(stmt.value, obl):
+                    obl.pop(name, None)           # ownership to caller
+            for name, line in obl.items():
+                self._leak(name, stmt.lineno, "reaches a return inside")
+            return {}
+        if isinstance(stmt, ast.Raise):
+            for name, line in obl.items():
+                self._leak(name, stmt.lineno, "reaches a raise inside")
+            return {}
+        if isinstance(stmt, ast.If):
+            self._discharge_in(stmt.test, obl)
+            then_obl, else_obl = self._guarded(stmt.test, obl)
+            out_then = self._block(stmt.body, then_obl)
+            out_else = self._block(stmt.orelse, else_obl)
+            return self._merge(out_then, out_else)
+        if isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.For):
+                self._discharge_in(stmt.iter, obl)
+            else:
+                self._discharge_in(stmt.test, obl)
+            body_out = self._block(stmt.body, dict(obl))
+            else_out = self._block(stmt.orelse, dict(obl))
+            return self._merge(self._merge(body_out, else_out), obl)
+        if isinstance(stmt, ast.Try):
+            out = self._block(stmt.body, dict(obl))
+            for handler in stmt.handlers:
+                out = self._merge(out, self._block(handler.body,
+                                                   dict(obl)))
+            out = self._block(stmt.finalbody, out)
+            return out
+        if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                self._discharge_in(stmt.value, obl)
+            return obl
+        if isinstance(stmt, ast.With):
+            return self._block(stmt.body, obl)
+        return obl
+
+    def _guarded(self, test: ast.expr, obl: Dict[str, int]
+                 ) -> Tuple[Dict[str, int], Dict[str, int]]:
+        """`if x is None:` — x's acquire failed on the then-branch, so
+        its obligation exists only on the else-branch (and dually for
+        truthiness / `is not None` tests)."""
+        then_obl, else_obl = dict(obl), dict(obl)
+        node = test
+        negate = False
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+            node, negate = node.operand, True
+        if isinstance(node, ast.Compare) and len(node.ops) == 1 \
+                and isinstance(node.comparators[0], ast.Constant) \
+                and node.comparators[0].value is None \
+                and isinstance(node.left, ast.Name):
+            none_branch_is_then = isinstance(node.ops[0], ast.Is)
+            if negate:
+                none_branch_is_then = not none_branch_is_then
+            (then_obl if none_branch_is_then else else_obl).pop(
+                node.left.id, None)
+        elif isinstance(node, ast.Name):
+            # `if pages:` — falsy (failed/empty) on the other branch
+            (then_obl if negate else else_obl).pop(node.id, None)
+        return then_obl, else_obl
+
+    def _merge(self, a: Dict[str, int],
+               b: Dict[str, int]) -> Dict[str, int]:
+        out = dict(a)
+        for k, v in b.items():
+            out.setdefault(k, v)
+        return out
+
+    def _acquire_of(self, node: ast.expr) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            op = _is_pool_call(node, _ACQUIRE)
+            if op == "reclaim_private":
+                return None
+            return op
+        return None
+
+    def _obligated_sources(self, node: ast.expr,
+                           obl: Dict[str, int]) -> List[str]:
+        return [n.id for n in ast.walk(node)
+                if isinstance(n, ast.Name) and n.id in obl]
+
+    def _is_self_rooted(self, node: Optional[ast.AST]) -> bool:
+        while isinstance(node, (ast.Subscript, ast.Attribute)):
+            node = node.value
+        return isinstance(node, ast.Name) and node.id == "self"
+
+    def _discharge_in(self, expr: ast.expr,
+                      obl: Dict[str, int]) -> None:
+        """Release calls, stores into self-owned containers, and
+        ownership transfers to other self-methods discharge the
+        obligations flowing through ``expr``."""
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            discharges = False
+            if _is_pool_call(node, _RELEASE) is not None:
+                discharges = True
+            called = dotted_name(node.func)
+            if called.startswith("self."):
+                tail = called.split(".")[-1]
+                if tail in self.releasing or len(called.split(".")) > 2 \
+                        or tail in ("append", "extend", "insert",
+                                    "update", "add"):
+                    discharges = True
+                else:
+                    discharges = True   # ownership moves to the callee
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("append", "extend", "insert",
+                                           "add", "update"):
+                discharges = True       # stored into a local container;
+                #                         the container is then tracked
+                #                         only if itself obligated
+            if discharges:
+                for a in itertools.chain(node.args,
+                                         (k.value for k in node.keywords)):
+                    for name in self._obligated_sources(a, obl):
+                        obl.pop(name, None)
+
+
+def check_leaks(path: str, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for cls in tree.body:
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        releasing = _releasing_methods(cls)
+        for m in cls.body:
+            if isinstance(m, ast.FunctionDef):
+                out += _LeakScanner(path, m, releasing).scan()
+    # module-level functions holding pool handles
+    for fn in tree.body:
+        if isinstance(fn, ast.FunctionDef):
+            out += _LeakScanner(path, fn, set()).scan()
+    return out
+
+
+# ======================================================== lifecycle edges
+
+_GROUPS = {
+    "live": LC._LIVE,
+    "terminal": LC.TERMINAL,
+    "*": frozenset(LC.Status),
+}
+
+
+def _parse_states(spec: str) -> Optional[frozenset]:
+    names = [s.strip() for s in spec.split("|") if s.strip()]
+    out: Set[LC.Status] = set()
+    for n in names:
+        if n in _GROUPS:
+            out |= _GROUPS[n]
+        else:
+            try:
+                out.add(LC.Status[n])
+            except KeyError:
+                return None
+    return frozenset(out) if out else None
+
+
+def _edge_annotation(lines: List[str],
+                     lineno: int) -> Optional[Tuple[str, str]]:
+    for ln in (lineno, lineno - 1):
+        if 0 < ln <= len(lines) and "# lifecycle:" in lines[ln - 1]:
+            spec = lines[ln - 1].split("# lifecycle:", 1)[1].strip()
+            if "->" in spec:
+                src, dst = spec.split("->", 1)
+                return src.strip(), dst.strip()
+    return None
+
+
+def check_lifecycle_edges(path: str, lines: List[str],
+                          tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name.split(".")[-1] != "transition" \
+                or not name.endswith(("LC.transition", "lifecycle."
+                                      "transition", "transition")):
+            continue
+        # only the lifecycle module's transition (imported as LC. /
+        # lifecycle. / bare) counts; unrelated .transition methods with
+        # a receiver object are skipped
+        if "." in name and name.split(".")[-2] not in ("LC", "lifecycle"):
+            continue
+        ann = _edge_annotation(lines, node.lineno)
+        if ann is None:
+            out.append(Finding(
+                "lifecycle-edge", path, node.lineno,
+                "transition() call without a `# lifecycle: SRC -> DST` "
+                "annotation"))
+            continue
+        src_set = _parse_states(ann[0])
+        dst_set = _parse_states(ann[1])
+        if src_set is None or dst_set is None:
+            out.append(Finding(
+                "lifecycle-edge", path, node.lineno,
+                f"unparseable lifecycle annotation "
+                f"`{ann[0]} -> {ann[1]}`"))
+            continue
+        illegal = sorted(
+            f"{s.name}->{t.name}"
+            for s in src_set for t in dst_set
+            if t not in LC.ALLOWED[s] and s is not t)
+        if illegal:
+            out.append(Finding(
+                "lifecycle-edge", path, node.lineno,
+                f"declared edge(s) not in lifecycle.ALLOWED: "
+                f"{', '.join(illegal)}"))
+        # a literal Status.X argument must live inside the declared DST
+        if len(node.args) >= 2:
+            tgt = dotted_name(node.args[1])
+            if tgt.startswith("Status.") or ".Status." in tgt:
+                sname = tgt.split("Status.")[-1]
+                try:
+                    status = LC.Status[sname]
+                except KeyError:
+                    status = None
+                if status is not None and status not in dst_set:
+                    out.append(Finding(
+                        "lifecycle-edge", path, node.lineno,
+                        f"transition target Status.{sname} outside the "
+                        f"declared destination set {ann[1]!r}"))
+    return out
+
+
+# ========================================================= pool internals
+
+def _check_pool_internals(path: str, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) \
+                and node.attr in _POOL_PRIVATE:
+            owner = dotted_name(node.value)
+            if owner.split(".")[-1] in ("pool", "_pool"):
+                out.append(Finding(
+                    "pool-internals", path, node.lineno,
+                    f"direct access to pool private state "
+                    f"`.{node.attr}` — use the pool API / auditor "
+                    "views"))
+    return out

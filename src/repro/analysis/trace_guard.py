@@ -1,0 +1,150 @@
+"""Runtime sentinels for the serving hot path (DESIGN.md §12).
+
+Two guards that the static passes cannot prove from source alone:
+
+  TraceGuard   retrace detection. jax re-traces a jitted program whenever
+               an argument's shape/dtype (or a closed-over static) drifts
+               — in a serving engine that means a silent recompile every
+               tick. The guard wraps the *pre-jit* callable (which runs
+               exactly once per trace), and after ``seal()`` any further
+               trace raises :class:`RetraceError` naming the program.
+               Engines accept ``trace_guard=`` and wrap their compiled
+               programs; ``rebuild()`` re-arms it across the legitimate
+               backend-fallback re-jit.
+
+  sanitize_tables   interpret-mode page-table sanitizer: bounds-checks
+               every live slot's page-table row against the physical
+               pool before the kernel consumes it — out-of-range
+               indices, trash-page (0) entries under a live position,
+               and cross-slot aliasing of unshared pages (the
+               ``slot_corrupt`` fault class) all surface as
+               :class:`PageTableError` *before* the DMA would have read
+               a foreign request's cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class RetraceError(RuntimeError):
+    """A sealed jitted program re-traced (shape/dtype drift after
+    warm-up) — the decode hot path was about to recompile silently."""
+
+
+class PageTableError(RuntimeError):
+    """A page-table row references physical pages it cannot legally
+    read (out of bounds / trash under a live position / foreign slot's
+    unshared page)."""
+
+
+class TraceGuard:
+    """Counts traces of wrapped programs; raises after ``seal()``.
+
+    Usage::
+
+        guard = TraceGuard()
+        fn = jax.jit(guard.wrap("decode_step", fn))
+        ... warm-up ticks ...
+        guard.seal()           # from here, any retrace raises
+    """
+
+    def __init__(self) -> None:
+        self.traces: Dict[str, int] = {}
+        self._sealed = False
+
+    def wrap(self, name: str,
+             fn: Callable[..., Any]) -> Callable[..., Any]:
+        self.traces.setdefault(name, 0)
+
+        def traced(*args: Any, **kwargs: Any) -> Any:
+            self.traces[name] = self.traces.get(name, 0) + 1
+            if self._sealed:
+                raise RetraceError(
+                    f"jitted program {name!r} re-traced after seal "
+                    f"(trace #{self.traces[name]}): an argument's "
+                    "shape/dtype or a closed-over static drifted in "
+                    "the hot path")
+            return fn(*args, **kwargs)
+
+        return traced
+
+    def seal(self) -> None:
+        """Warm-up is over: any further trace is a bug."""
+        self._sealed = True
+
+    def rebuild(self) -> None:
+        """A legitimate re-jit is happening (backend fallback re-builds
+        the engine's programs): re-open the warm-up window."""
+        self._sealed = False
+
+    @property
+    def sealed(self) -> bool:
+        return self._sealed
+
+
+def sanitize_tables(page_table: Any, pos: Any, live: Any, *,
+                    page_size: int, n_pages: int,
+                    shared_ok: Optional[Callable[[int], bool]] = None,
+                    raise_on_error: bool = True) -> List[str]:
+    """Check every live slot's page-table row before a decode step.
+
+    page_table  (n_slots, max_pages) int — logical -> physical pages
+    pos         (n_slots,) int — next write position per slot
+    live        (n_slots,) bool — slots in the decode batch
+    page_size   tokens per page
+    n_pages     physical pool size (pages are ids in [0, n_pages))
+    shared_ok   predicate: may this physical page legally appear under
+                more than one slot (refcount > 1, e.g. prefix-shared)?
+                None treats every cross-slot duplicate as corruption.
+
+    Returns the violation strings (empty == clean); raises
+    :class:`PageTableError` with all of them when ``raise_on_error``.
+    """
+    table = np.asarray(page_table)
+    pos_np = np.asarray(pos).astype(np.int64)
+    live_np = np.asarray(live).astype(bool)
+    problems: List[str] = []
+    holders: Dict[int, int] = {}
+    for slot in range(table.shape[0]):
+        if not live_np[slot]:
+            continue
+        used = int(-(-int(pos_np[slot] + 1) // page_size))
+        row = table[slot]
+        bad = np.flatnonzero((row < 0) | (row >= n_pages))
+        for i in bad:
+            problems.append(
+                f"slot {slot}: table[{int(i)}]={int(row[i])} outside "
+                f"physical pool [0, {n_pages})")
+        for i in range(min(used, row.shape[0])):
+            p = int(row[i])
+            if p == 0:
+                problems.append(
+                    f"slot {slot}: live logical page {i} (pos "
+                    f"{int(pos_np[slot])}) points at the trash page")
+                continue
+            if not 0 < p < n_pages:
+                continue            # already reported above
+            prev = holders.get(p)
+            if prev is not None and prev != slot \
+                    and not (shared_ok(p) if shared_ok else False):
+                problems.append(
+                    f"page {p} aliased by slots {prev} and {slot} "
+                    "without a shared refcount (slot_corrupt class)")
+            holders[p] = slot
+    if problems and raise_on_error:
+        raise PageTableError("; ".join(problems))
+    return problems
+
+
+def pool_shared_ok(pool: Any) -> Callable[[int], bool]:
+    """Adapter: a PagePool's refcount>1 / registered pages may legally
+    appear under several slots."""
+    def ok(page: int) -> bool:
+        try:
+            return bool(pool.refcount(page) > 1
+                        or pool.is_registered(page))
+        except Exception:        # noqa: BLE001 — sanitizer must not throw here
+            return False
+    return ok

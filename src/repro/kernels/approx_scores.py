@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.registry import kernel_entry
+
 NEG_INF = -1e30
 
 
@@ -44,6 +46,7 @@ def _kernel(len_ref, q_ref, k_ref, out_ref, *, d: int, bs: int,
     out_ref[0, 0] = jnp.max(s)
 
 
+@kernel_entry(scalar_prefetch=("cur_len",), grid="(BH, n_blocks)")
 def block_max_scores(q_hat, k_hat, cur_len, *, d: int, block_size: int = 128,
                      scale=None, interpret: bool = False):
     """(BH,D),(BH,S,D),(BH,) -> (BH, S/bs) block maxima of approx scores."""

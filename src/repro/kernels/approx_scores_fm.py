@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.registry import kernel_entry
+
 NEG_INF = -1e30
 
 
@@ -48,6 +50,7 @@ def _kernel(len_ref, q_ref, kT_ref, out_ref, *, d: int, bs: int,
     out_ref[0, 0] = jnp.max(s)
 
 
+@kernel_entry(scalar_prefetch=("cur_len",), grid="(BH, n_blocks)")
 def block_max_scores_fm(q_hat, k_hat_T, cur_len, *, d: int,
                         block_size: int = 128, scale=None,
                         interpret: bool = False):

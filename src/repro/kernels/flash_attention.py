@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.registry import kernel_entry
+
 NEG_INF = -1e30
 
 
@@ -61,6 +63,7 @@ def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
                       ).astype(out_ref.dtype)
 
 
+@kernel_entry(grid="(BH, n_q, n_kv)")
 def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,
                     causal: bool = True, scale=None,
                     interpret: bool = False):

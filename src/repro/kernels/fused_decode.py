@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.registry import kernel_entry
 from repro.kernels.tuning import pad_lanes
 
 NEG_INF = -1e30
@@ -241,6 +242,9 @@ def _paged_args(q_hat, k_hat, cur_len, page_table, page_size, block_size):
     return paged, s_len, prefetch
 
 
+@kernel_entry(scalar_prefetch=("cur_len", "page_table"),
+              smem_sidecars=("k_scale", "v_scale"),
+              paged_operand="page_table", grid="(B, Hkv)")
 def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
                       block_size: int = 128, scale=None,
                       local_window: int = 0, sliding_window: int = 0,
@@ -352,6 +356,9 @@ def _select_kernel(*args, paged: bool, quant: bool, ps: int, d: int,
                           pt_ref[b, (j * bs) // ps], 0]) if quant else None)
 
 
+@kernel_entry(scalar_prefetch=("cur_len", "page_table"),
+              smem_sidecars=("k_scale",),
+              paged_operand="page_table", grid="(B, Hkv)")
 def select_blocks(q_hat, k_hat, cur_len, *, d: int, k_blocks: int,
                   block_size: int = 128, scale=None, local_window: int = 0,
                   sliding_window: int = 0, page_table=None,

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.registry import kernel_entry
+
 NEG_INF = -1e30
 
 
@@ -69,6 +71,7 @@ def _kernel(blk_idx_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
                       jnp.maximum(l_ref[0], 1e-30)).astype(out_ref.dtype)
 
 
+@kernel_entry(scalar_prefetch=("blk_idx", "cur_len"), grid="(BH, n_sel)")
 def block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len, *,
                            block_size: int = 128, scale=None,
                            interpret: bool = False):
@@ -171,6 +174,9 @@ def _gkernel(*args, paged: bool, quant: bool, bs: int, bpp: int,
             out_ref.dtype)
 
 
+@kernel_entry(scalar_prefetch=("blk_idx", "cur_len", "page_table"),
+              smem_sidecars=("k_scale", "v_scale"),
+              paged_operand="page_table", grid="(B, Hkv, n_sel)")
 def block_sparse_attention_grouped(q_hat, k_hat, v, blk_idx, cur_len, *,
                                    block_size: int = 128, scale=None,
                                    sliding_window: int = 0,

@@ -14,10 +14,41 @@ import dataclasses
 from typing import Optional
 
 
+# TPU tile geometry (contract metadata for repro/analysis): the lane
+# (minor) dimension of a VMEM tile is always 128; the minimum sublane
+# granule depends on the element width — 4-byte types pack (8, 128)
+# tiles, 2-byte (16, 128), 1-byte (32, 128).
+LANE = 128
+SUBLANE = {4: 8, 2: 16, 1: 32}     # itemsize (bytes) -> sublane granule
+
+
 @dataclasses.dataclass(frozen=True)
 class KernelPlan:
     variant: str          # "fused" | "two_kernel"
     block_size: int
+
+    def vmem_bytes(self, *, smax: int, d: int, kdim: int, dim: int,
+                   g: int, itemsize: int = 4) -> int:
+        """Per-grid-step VMEM footprint of this plan, in bytes, counting
+        the *padded* tiles the hardware actually allocates (every scratch
+        row is rounded up to the 128-lane granule — this mirrors the
+        scratch_shapes of fused_decode.py exactly, so the static checker
+        and the kernel can never disagree about what fits)."""
+        bs = self.block_size
+        nb = smax // bs
+        sub = SUBLANE.get(itemsize, 8)
+        rows = -(-bs // sub) * sub
+        # score stream: double-buffered (bs, d) K̂ slices + the (1, nb)
+        # block-maxima row (f32)
+        select = 2 * rows * pad_lanes(d) * itemsize + pad_lanes(nb) * 4
+        if self.variant != "fused":
+            return select
+        # fused adds the winner K̂/V blocks and the (G,)-wide online
+        # softmax state incl. the (G, dim) f32 accumulator + I/O blocks
+        winners = rows * pad_lanes(kdim) * itemsize \
+            + rows * pad_lanes(dim) * itemsize
+        accum = 4 * max(g, 8) * pad_lanes(dim) * 4
+        return select + winners + accum
 
 
 # Per-core VMEM is ~16 MB; leave headroom for Mosaic's own pipeline buffers.

@@ -130,7 +130,8 @@ class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  smax: int = 512, eos_id: Optional[int] = None,
                  greedy: bool = True, backend: Optional[str] = None,
-                 admission: str = "strict", clock=None):
+                 admission: str = "strict", clock=None,
+                 trace_guard=None):
         if backend is not None:
             # route the decode hot path through the chosen kernel backend
             # (core/dispatch.py): "pallas" | "xla" | "auto"
@@ -155,17 +156,28 @@ class ServingEngine:
         # stale K/V rows beyond the slot's position are unreachable.
         self._fresh_state = CS.fresh_state_tree(cfg, jnp.float32,
                                                 include_cross=False)
-        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        # positions / last tokens live on the HOST: per-slot bookkeeping
+        # writes stay cheap in-place numpy ops and cross to the device
+        # once per jitted call, never the other way around
+        self.pos = np.zeros((n_slots,), np.int32)
         self.live = np.zeros((n_slots,), bool)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.last_tok = jnp.zeros((n_slots,), jnp.int32)
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        wrap = trace_guard.wrap if trace_guard is not None \
+            else (lambda _n, f: f)
+        # the cache is donated: tick always replaces self.cache with the
+        # result, so the old buffer is dead on return (no-op on CPU)
         self._decode = jax.jit(
-            lambda p, c, t, pl: lm.decode_step(p, cfg, c, t, pl))
+            wrap("decode_step",
+                 lambda p, c, t, pl: lm.decode_step(p, cfg, c, t, pl)),
+            donate_argnums=(1,))
         # admission-path prefill, compiled; jit's cache retraces only per
-        # distinct prompt length
+        # distinct prompt length. It *creates* the returned cache, so
+        # there is nothing to donate.
         self._prefill = jax.jit(
-            lambda p, t, fr: lm.prefill(p, cfg, t, smax, frames=fr,
-                                        cache_dtype=jnp.float32))
+            wrap("prefill",
+                 lambda p, t, fr: lm.prefill(p, cfg, t, smax, frames=fr,
+                                             cache_dtype=jnp.float32)))
         self._queue: List[Request] = []
         self.ticks = 0
 
@@ -174,6 +186,7 @@ class ServingEngine:
     def _terminal(self, req: Request, status: Status,
                   detail: str = "") -> None:
         """Move a request to a terminal status with the shared stamps."""
+        # lifecycle: live -> terminal
         LC.transition(req, status, detail)
         req.t_done = self._clock()
         self.lifecycle_counts[str(status)] = \
@@ -244,6 +257,7 @@ class ServingEngine:
         slot's cache rows only — live slots are untouched. (The previous
         token-by-token fill ran a full batched decode step per prompt token,
         rewriting every live slot's cache at its current position.)"""
+        # lifecycle: QUEUED -> PREFILL
         LC.transition(req, Status.PREFILL)
         toks = req.prompt.astype(np.int32)
         # cache can hold smax rows; keep the most recent context AND leave
@@ -253,7 +267,7 @@ class ServingEngine:
         cap = context_cap(self.smax, req.max_new)
         if len(toks) > cap:
             toks = toks[-cap:]
-        self.pos = self.pos.at[slot].set(0)
+        self.pos[slot] = 0
         fr = None
         if self.cfg.is_encoder_decoder:
             if req.frames is None:
@@ -264,7 +278,7 @@ class ServingEngine:
             _, filled, _ = self._prefill(self.params,
                                          jnp.asarray(toks[None, :-1]), fr)
             self._write_slot(slot, filled)
-            self.pos = self.pos.at[slot].set(len(toks) - 1)
+            self.pos[slot] = len(toks) - 1
         elif self.cfg.is_encoder_decoder:
             # 1-token prompt: nothing to cache, but the slot still needs
             # its cross K/V — prefill the single token and keep pos=0 (the
@@ -277,9 +291,10 @@ class ServingEngine:
             self.cache = {"layers": CS.reset_slot_state(
                 self.cache["layers"], self._fresh_state, slot,
                 lm.uses_scan(self.cfg))}
-        self.last_tok = self.last_tok.at[slot].set(int(toks[-1]))
+        self.last_tok[slot] = int(toks[-1])
         self.slot_req[slot] = req
         self.live[slot] = True
+        # lifecycle: PREFILL -> DECODE
         LC.transition(req, Status.DECODE)
 
     def _write_slot(self, slot: int, one) -> None:
@@ -299,12 +314,12 @@ class ServingEngine:
             return
         logits, self.cache = self._decode(
             self.params, self.cache, self.last_tok, self.pos)
-        self.pos = self.pos + jnp.asarray(self.live, jnp.int32)
-        nxt_np = np.asarray(sample_next(logits, greedy=self.greedy,
-                                        rng=rng, ticks=self.ticks))
-        # one device->host sync for all slots (a per-slot int(self.pos[slot])
-        # in the loop below serialized a transfer per live slot per tick)
-        pos_np = np.asarray(self.pos)
+        self.pos += self.live.astype(np.int32)
+        nxt = sample_next(logits, greedy=self.greedy, rng=rng,
+                          ticks=self.ticks)
+        # host-sync: the one batched device->host sync of the tick — the
+        # sampled tokens must reach Python to drive per-request lifecycle
+        nxt_np = jax.device_get(nxt)
         for slot in range(self.n_slots):
             req = self.slot_req[slot]
             if req is None or not self.live[slot]:
@@ -315,12 +330,12 @@ class ServingEngine:
                 req.t_first = self._clock()
             finished = (len(req.out) >= req.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
-                        or int(pos_np[slot]) >= self.smax - 1)
+                        or int(self.pos[slot]) >= self.smax - 1)
             if finished:
                 self._terminal(req, Status.DONE)
                 self._evict_slot(slot)
             else:
-                self.last_tok = self.last_tok.at[slot].set(tok)
+                self.last_tok[slot] = tok
         self.ticks += 1
 
     def run_until_done(self, max_ticks: int = 10_000,

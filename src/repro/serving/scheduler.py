@@ -143,7 +143,8 @@ class PagedServingEngine:
                  prefix_cache: bool = True, admission: str = "strict",
                  clock=None, shed_after: Optional[int] = None,
                  faults: Optional[FI.FaultPlan] = None,
-                 audit: bool = False, nan_guard: bool = True):
+                 audit: bool = False, nan_guard: bool = True,
+                 trace_guard=None, donate: bool = True):
         if backend is not None:
             cfg = cfg.replace(
                 loki=dataclasses.replace(cfg.loki, backend=backend))
@@ -217,9 +218,13 @@ class PagedServingEngine:
         self.cache = lm.init_paged_cache(cfg, n_pages, self.page_size,
                                          jnp.float32, n_slots=n_slots)
         self._fresh_state = CS.fresh_state_tree(cfg, jnp.float32)
-        self.page_table = jnp.zeros((n_slots, self.max_pages), jnp.int32)
-        self.pos = jnp.zeros((n_slots,), jnp.int32)
-        self.last_tok = jnp.zeros((n_slots,), jnp.int32)
+        # page table / positions / last tokens live on the HOST: every
+        # per-slot update between ticks is a cheap in-place numpy write,
+        # and the arrays cross to the device once per jitted call instead
+        # of forcing a device round-trip per bookkeeping touch
+        self.page_table = np.zeros((n_slots, self.max_pages), np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.last_tok = np.zeros((n_slots,), np.int32)
         self.live = np.zeros((n_slots,), bool)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         # logical page index -> physical page id, or None once recycled
@@ -269,6 +274,8 @@ class PagedServingEngine:
         self.n_prefill_computed_tokens = 0
         self.n_cow_copies = 0
         self.n_state_restores = 0
+        self._trace_guard = trace_guard
+        self._donate = donate       # False only for A/B benchmarking
 
         self._build_programs()
 
@@ -278,14 +285,31 @@ class PagedServingEngine:
         ``dispatch.disable_backend('pallas')`` a fresh jit retraces, and
         the retrace resolves to the XLA path."""
         cfg, ps = self.cfg, self.page_size
+        guard = self._trace_guard
+        if guard is not None:
+            guard.rebuild()     # legitimate retrace window re-opens
+        wrap = guard.wrap if guard is not None else (lambda _n, f: f)
+        # the cache argument is donated on every cache-updating program:
+        # the caller always replaces ``self.cache`` with the result, so
+        # the old buffer is dead on return and XLA may update in place
+        # (CPU silently ignores donation; the kernel-fallback re-run in
+        # ``_run_decode`` is safe because the injected failure raises
+        # before dispatch ever consumes the buffer)
         self._decode = jax.jit(
-            lambda p, c, t, pl, pt, lv: lm.decode_step(
-                p, cfg, c, t, pl, page_table=pt, page_size=ps, live=lv))
+            wrap("decode_step",
+                 lambda p, c, t, pl, pt, lv: lm.decode_step(
+                     p, cfg, c, t, pl, page_table=pt, page_size=ps,
+                     live=lv)),
+            donate_argnums=(1,) if self._donate else ())
         self._chunk = jax.jit(
-            lambda p, c, toks, start, nv, row, sl: lm.prefill_chunk(
-                p, cfg, c, toks, start, nv, row, ps, slot=sl))
+            wrap("prefill_chunk",
+                 lambda p, c, toks, start, nv, row, sl: lm.prefill_chunk(
+                     p, cfg, c, toks, start, nv, row, ps, slot=sl)),
+            donate_argnums=(1,) if self._donate else ())
         self._copy_page = jax.jit(
-            lambda c, s, d: lm.copy_cache_page(cfg, c, s, d, ps))
+            wrap("copy_cache_page",
+                 lambda c, s, d: lm.copy_cache_page(cfg, c, s, d, ps)),
+            donate_argnums=(0,) if self._donate else ())
         if self.is_encdec:
             self._encode_cross = jax.jit(
                 lambda p, fr: lm.encode_cross_kv(p, cfg, fr))
@@ -345,8 +369,7 @@ class PagedServingEngine:
             for i, pg in enumerate(pages_list):
                 if pg is not None:
                     row[i] = pg
-            self.page_table = self.page_table.at[slot].set(
-                jnp.asarray(row))
+            self.page_table[slot] = row
             self.peak_slot_pages = max(
                 self.peak_slot_pages,
                 sum(p is not None for p in pages_list))
@@ -396,6 +419,7 @@ class PagedServingEngine:
         engine state keyed to it — fold bookkeeping, arrival order, host
         state snapshots and privately-retained pages — so a terminated
         request leaks nothing no matter how it ended."""
+        # lifecycle: live -> terminal
         LC.transition(req, status, detail)
         req.t_done = self._clock()
         req.retry_after = retry_after
@@ -478,6 +502,7 @@ class PagedServingEngine:
         return req
 
     def _admit_into(self, slot: int, req: Request) -> None:
+        # lifecycle: QUEUED -> PREFILL
         LC.transition(req, Status.PREFILL)
         toks = req.prompt.astype(np.int32)
         if not req.out:
@@ -494,7 +519,7 @@ class PagedServingEngine:
         self.slot_pages[slot] = []
         self._cow_pending.pop(slot, None)
         self._admit_order.append(slot)
-        self.pos = self.pos.at[slot].set(0)
+        self.pos[slot] = 0
         n_pre = len(toks) - 1
         restored = self._try_restore_state(slot, req, n_pre)
         if restored is None:
@@ -509,8 +534,7 @@ class PagedServingEngine:
         elif self.prefix_caching and n_pre > 0:
             pages, cov, tail, parent = self.pool.match_prefix(toks, n_pre)
             if pages:
-                self.page_table = self.page_table.at[
-                    slot, :len(pages)].set(jnp.asarray(pages, jnp.int32))
+                self.page_table[slot, :len(pages)] = pages
                 self.slot_pages[slot] = list(pages)
                 if tail:
                     # shared partial tail: read-only until the first write
@@ -530,11 +554,12 @@ class PagedServingEngine:
     def _ready(self, slot: int) -> None:
         """Prefill finished: the slot joins the decode batch."""
         req = self.slot_req[slot]
+        # lifecycle: PREFILL -> DECODE
         LC.transition(req, Status.DECODE)
         toks = req.prompt
         self._prefill_at.pop(slot, None)
-        self.pos = self.pos.at[slot].set(len(toks) - 1)
-        self.last_tok = self.last_tok.at[slot].set(int(toks[-1]))
+        self.pos[slot] = len(toks) - 1
+        self.last_tok[slot] = int(toks[-1])
         self.live[slot] = True
 
     def _release_slot(self, slot: int) -> None:
@@ -553,8 +578,8 @@ class PagedServingEngine:
         self._reg_parent.pop(slot, None)
         # retarget the freed slot at the trash page so the batched decode
         # step's unconditional write cannot touch reallocated pages
-        self.page_table = self.page_table.at[slot].set(0)
-        self.pos = self.pos.at[slot].set(0)
+        self.page_table[slot] = 0
+        self.pos[slot] = 0
         self.live[slot] = False
         self.slot_req[slot] = None
         self._prefill_at.pop(slot, None)
@@ -625,9 +650,12 @@ class PagedServingEngine:
             snap = CS.snapshot_slot_state(
                 self.cache["layers"], self._fresh_state, slot,
                 lm.uses_scan(self.cfg))
+            # host-sync: preemption snapshot copy-out — rare, off the
+            # steady-state decode path by construction
             self._state_snap[id(req)] = (consumed, jax.device_get(snap))
             if self.has_pages:
                 self._retain_slot_pages(slot, req)
+        # lifecycle: PREFILL|DECODE -> QUEUED
         LC.transition(req, Status.QUEUED, "preempted")
         self._release_slot(slot)
         self._queue.appendleft(req)
@@ -685,8 +713,7 @@ class PagedServingEngine:
         if pages is None:
             return False        # injected alloc_fail: contended this tick
         base = len(self.slot_pages[slot])
-        self.page_table = self.page_table.at[
-            slot, base:base + need].set(jnp.asarray(pages, jnp.int32))
+        self.page_table[slot, base:base + need] = pages
         self.slot_pages[slot].extend(pages)
         self.peak_slot_pages = max(
             self.peak_slot_pages,
@@ -723,7 +750,7 @@ class PagedServingEngine:
             return False        # injected alloc_fail: contended this tick
         new = got[0]
         self.cache = self._copy_page(self.cache, old, new)
-        self.page_table = self.page_table.at[slot, idx].set(new)
+        self.page_table[slot, idx] = new
         self.slot_pages[slot][idx] = new
         self.pool.release([old])
         self._cow_pending.pop(slot)
@@ -766,7 +793,7 @@ class PagedServingEngine:
         pages[:first_live] = [None] * min(first_live, len(pages))
         self.pool.release(freed)
         self.n_recycled_pages += len(freed)
-        self.page_table = self.page_table.at[slot, :first_live].set(0)
+        self.page_table[slot, :first_live] = 0
         live = sum(p is not None for p in pages)
         if live > self._req_pages_hard:
             raise RuntimeError(
@@ -867,7 +894,6 @@ class PagedServingEngine:
             chosen = chosen[: self.budget.decode_tokens]
         sel = np.zeros((self.n_slots,), bool)
         sel[chosen] = True
-        pos_np = np.asarray(self.pos)
         # every selected slot writes its new token this step: make sure
         # the target page exists and is privately writable (COW first),
         # recycling window-dead pages so SWA slots stay within their
@@ -875,9 +901,9 @@ class PagedServingEngine:
         for slot in chosen:
             if not self.live[slot]:
                 continue                   # preempted by an earlier grow
-            self._recycle_window(slot, int(pos_np[slot]))
+            self._recycle_window(slot, int(self.pos[slot]))
             if not (self._resolve_cow(slot)
-                    and self._grow_to(slot, int(pos_np[slot]) + 1)):
+                    and self._grow_to(slot, int(self.pos[slot]) + 1)):
                 # this slot's request is the least urgent under memory
                 # pressure: vLLM's recompute policy preempts the requester
                 # itself rather than evicting a more urgent request
@@ -890,19 +916,23 @@ class PagedServingEngine:
         # trash page, not at their current position — and their StateSlot
         # components must not advance (``live`` mask)
         sel_dev = jnp.asarray(sel)
-        pt = self.page_table * sel_dev.astype(jnp.int32)[:, None]
+        pt = self.page_table * sel.astype(np.int32)[:, None]
         logits, self.cache = self._run_decode(pt, sel_dev)
-        self.pos = self.pos + sel_dev.astype(jnp.int32)
+        self.pos += sel.astype(np.int32)
         if self._faults is not None:
             bad = [s for s in np.flatnonzero(sel)
                    if self._faults.hit("nan_logits", int(s))]
             if bad:
                 logits = logits.at[jnp.asarray(bad, jnp.int32)].set(
                     jnp.nan)
-        finite = np.asarray(jnp.isfinite(logits).all(axis=-1)) \
+        finite_dev = jnp.isfinite(logits).all(axis=-1) \
             if self.nan_guard else None
-        nxt_np = np.asarray(sample_next(logits, greedy=self.greedy,
-                                        rng=rng, ticks=self.ticks))
+        nxt = sample_next(logits, greedy=self.greedy, rng=rng,
+                          ticks=self.ticks)
+        # host-sync: the ONE batched device->host sync of the decode tick
+        # — sampled tokens (and the nan-guard mask) must reach Python to
+        # drive per-request lifecycle; everything else stays host-side
+        nxt_np, finite = jax.device_get((nxt, finite_dev))
         self._last_decoded[sel] = self.ticks
         for slot in range(self.n_slots):
             req = self.slot_req[slot]
@@ -923,12 +953,12 @@ class PagedServingEngine:
                 req.t_first = self._clock()
             finished = (len(req.out) >= req.max_new
                         or (self.eos_id is not None and tok == self.eos_id)
-                        or int(pos_np[slot]) + 1 >= self.smax - 1)
+                        or int(self.pos[slot]) >= self.smax - 1)
             if finished:
                 self._terminal(req, Status.DONE)
                 self._release_slot(slot)
             else:
-                self.last_tok = self.last_tok.at[slot].set(tok)
+                self.last_tok[slot] = tok
         return True
 
     def _run_decode(self, pt, sel_dev):

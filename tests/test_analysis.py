@@ -1,0 +1,644 @@
+"""repro.analysis: every lint rule, both contract passes and the
+resource-flow dataflow must (a) pass on the real repo and (b) catch a
+known-bad fixture — a checker that never fires is indistinguishable
+from one that is broken."""
+import ast
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.analysis import cli, kernel_contracts, lint, resource_flow
+from repro.analysis.common import (annotated, fingerprint, iter_sources,
+                                   load_baseline, repo_root, save_baseline)
+from repro.analysis.trace_guard import (PageTableError, RetraceError,
+                                        TraceGuard, sanitize_tables)
+from repro.kernels import registry, tuning
+
+
+def _src(path, code):
+    return [(path, code, ast.parse(code))]
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ================================================== lint rule fixtures
+
+class TestHostSync:
+    BAD = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+class Eng:
+    def __init__(self):
+        self.pos = jnp.zeros((4,))
+        self.host_tbl = np.zeros((4,))
+
+    def tick(self):
+        n = int(self.pos[0])            # sync
+        m = self.pos.sum().item()       # sync
+        a = np.asarray(self.pos)        # sync
+        b = np.asarray(self.host_tbl)   # host value: fine
+        jax.device_get(self.pos)        # sync
+"""
+
+    GOOD = """
+import jax
+import jax.numpy as jnp
+
+class Eng:
+    def __init__(self):
+        self.pos = jnp.zeros((4,))
+
+    def tick(self):
+        # host-sync: the one batched sync per tick
+        n = jax.device_get(self.pos)
+
+    def helper(self):
+        # not tick-reachable: syncs here are out of scope
+        return int(self.pos[0])
+"""
+
+    def test_bad(self):
+        fs = lint.run(_src("serving/fake.py", self.BAD),
+                      rules=("host-sync",))
+        assert len(fs) == 4, [f.format() for f in fs]
+        assert _rules(fs) == ["host-sync"]
+
+    def test_good(self):
+        assert lint.run(_src("serving/fake.py", self.GOOD),
+                        rules=("host-sync",)) == []
+
+    def test_sync_through_helper_method(self):
+        code = """
+import jax.numpy as jnp
+
+class Eng:
+    def __init__(self):
+        self.pos = jnp.zeros((4,))
+
+    def tick(self):
+        self._step()
+
+    def _step(self):
+        return float(self.pos[0])
+"""
+        fs = lint.run(_src("serving/fake.py", code), rules=("host-sync",))
+        assert len(fs) == 1 and fs[0].func == "_step"
+
+
+class TestKernelOp:
+    BAD = """
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sort(x_ref[...])
+
+def entry(x):
+    return pl.pallas_call(_kernel, out_shape=None)(x)
+"""
+
+    GOOD = """
+import jax.numpy as jnp
+import functools
+from jax.experimental import pallas as pl
+
+def _kernel(x_ref, o_ref, *, d):
+    o_ref[...] = jnp.max(x_ref[...][:, :d], axis=-1)
+
+def entry(x, d):
+    kernel = functools.partial(_kernel, d=d)
+    return pl.pallas_call(kernel, out_shape=None)(x)
+"""
+
+    def test_bad(self):
+        fs = lint.run(_src("kernels/fake.py", self.BAD),
+                      rules=("kernel-op",))
+        assert len(fs) == 1 and "jnp.sort" in fs[0].message
+
+    def test_good(self):
+        assert lint.run(_src("kernels/fake.py", self.GOOD),
+                        rules=("kernel-op",)) == []
+
+    def test_transitive_helper(self):
+        code = """
+import numpy as np
+from jax.experimental import pallas as pl
+
+def _helper(x):
+    return np.argmax(x)
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = _helper(x_ref[...])
+
+def entry(x):
+    return pl.pallas_call(_kernel, out_shape=None)(x)
+"""
+        fs = lint.run(_src("kernels/fake.py", code), rules=("kernel-op",))
+        assert len(fs) == 1 and "np.argmax" in fs[0].message
+
+
+class TestTracerBranch:
+    BAD = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x):
+    if jnp.sum(x) > 0:
+        return x
+    return -x
+"""
+
+    GOOD = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x):
+    return jnp.where(jnp.sum(x) > 0, x, -x)
+
+def untraced(x):
+    if jnp.sum(x) > 0:      # not jitted: concretizes fine
+        return x
+    return -x
+"""
+
+    def test_bad(self):
+        fs = lint.run(_src("core/fake.py", self.BAD),
+                      rules=("tracer-branch",))
+        assert len(fs) == 1 and fs[0].func == "f"
+
+    def test_good(self):
+        assert lint.run(_src("core/fake.py", self.GOOD),
+                        rules=("tracer-branch",)) == []
+
+
+class TestWallClock:
+    BAD = """
+import time
+
+def stamp():
+    return time.time()
+"""
+
+    def test_bad_in_serving(self):
+        fs = lint.run(_src("serving/fake.py", self.BAD),
+                      rules=("wall-clock",))
+        assert len(fs) == 1 and "time.time" in fs[0].message
+
+    def test_same_code_outside_serving_ok(self):
+        assert lint.run(_src("bench/fake.py", self.BAD),
+                        rules=("wall-clock",)) == []
+
+    def test_annotated_ok(self):
+        code = """
+import time
+
+def stamp(clock=None):
+    # wall-clock: default injected at the API boundary only
+    return (clock or time.time)()
+"""
+        assert lint.run(_src("serving/fake.py", code),
+                        rules=("wall-clock",)) == []
+
+
+class TestFrozenMut:
+    BAD = """
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    x: int = 0
+
+    def bump(self):
+        self.x = self.x + 1
+
+def poke():
+    p = Plan()
+    p.x = 5
+"""
+
+    def test_bad(self):
+        fs = lint.run(_src("kernels/fake.py", self.BAD),
+                      rules=("frozen-mut",))
+        assert len(fs) == 2
+
+    def test_post_init_ok(self):
+        code = """
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    x: int = 0
+
+    def __post_init__(self):
+        self.x = 1      # object.__setattr__ territory, but allowed site
+"""
+        assert lint.run(_src("kernels/fake.py", code),
+                        rules=("frozen-mut",)) == []
+
+
+class TestBufferDonation:
+    BAD = """
+import jax
+
+def build(lm, cfg):
+    return jax.jit(lambda p, c, t: lm.decode_step(p, cfg, c, t))
+"""
+
+    GOOD = """
+import jax
+
+def build(lm, cfg, wrap):
+    a = jax.jit(lambda p, c, t: lm.decode_step(p, cfg, c, t),
+                donate_argnums=(1,))
+    b = jax.jit(wrap("decode_step",
+                     lambda p, c, t: lm.decode_step(p, cfg, c, t)),
+                donate_argnums=(1,))
+    return a, b
+"""
+
+    def test_bad(self):
+        fs = lint.run(_src("serving/fake.py", self.BAD),
+                      rules=("buffer-donation",))
+        assert len(fs) == 1 and "decode_step" in fs[0].message
+
+    def test_good(self):
+        assert lint.run(_src("serving/fake.py", self.GOOD),
+                        rules=("buffer-donation",)) == []
+
+    def test_wrapped_without_donation_still_caught(self):
+        code = """
+import jax
+
+def build(lm, cfg, wrap):
+    return jax.jit(wrap("prefill_chunk",
+                        lambda p, c: lm.prefill_chunk(p, cfg, c)))
+"""
+        fs = lint.run(_src("serving/fake.py", code),
+                      rules=("buffer-donation",))
+        assert len(fs) == 1
+
+
+# ============================================== resource-flow fixtures
+
+class TestResourceLeak:
+    def test_dropped_release_mutant(self):
+        # known-bad mutant: the early-exit path forgets the pages
+        code = """
+class Sched:
+    def grow(self, slot, need):
+        pages = self.pool.alloc(need)
+        if self.contended:
+            return False
+        self.slot_pages[slot].extend(pages)
+        return True
+"""
+        fs = resource_flow.run(_src("serving/fake.py", code),
+                               rules=("resource-leak",))
+        assert len(fs) == 1 and "pages" in fs[0].message
+
+    def test_release_on_all_paths_ok(self):
+        code = """
+class Sched:
+    def grow(self, slot, need):
+        pages = self.pool.alloc(need)
+        if pages is None:
+            return False
+        if self.contended:
+            self.pool.release(pages)
+            return False
+        self.slot_pages[slot].extend(pages)
+        return True
+"""
+        assert resource_flow.run(_src("serving/fake.py", code),
+                                 rules=("resource-leak",)) == []
+
+    def test_discarded_acquire(self):
+        code = """
+class Sched:
+    def leak(self):
+        self.pool.alloc(1)
+"""
+        fs = resource_flow.run(_src("serving/fake.py", code),
+                               rules=("resource-leak",))
+        assert len(fs) == 1 and "discarded" in fs[0].message
+
+    def test_repo_scheduler_clean(self):
+        root = repo_root(pathlib.Path(__file__).resolve().parent)
+        sources = iter_sources([root / "src" / "repro" / "serving"], root)
+        assert sources, "serving sources not found"
+        fs = resource_flow.run(sources, rules=("resource-leak",))
+        assert fs == [], [f.format() for f in fs]
+
+
+class TestLifecycleEdge:
+    def test_missing_annotation(self):
+        code = """
+from repro.serving import lifecycle as LC
+
+class Eng:
+    def finish(self, req, status):
+        LC.transition(req, status)
+"""
+        fs = resource_flow.run(_src("serving/fake.py", code),
+                               rules=("lifecycle-edge",))
+        assert len(fs) == 1 and "annotation" in fs[0].message
+
+    def test_illegal_edge_mutant(self):
+        # known-bad mutant: resurrecting a DONE request
+        code = """
+from repro.serving import lifecycle as LC
+
+class Eng:
+    def resurrect(self, req):
+        # lifecycle: DONE -> QUEUED
+        LC.transition(req, Status.QUEUED)
+"""
+        fs = resource_flow.run(_src("serving/fake.py", code),
+                               rules=("lifecycle-edge",))
+        assert len(fs) == 1 and "DONE->QUEUED" in fs[0].message
+
+    def test_legal_edge_ok(self):
+        code = """
+from repro.serving import lifecycle as LC
+
+class Eng:
+    def admit(self, req):
+        # lifecycle: QUEUED -> PREFILL
+        LC.transition(req, Status.PREFILL)
+
+    def finish(self, req, status):
+        # lifecycle: live -> terminal
+        LC.transition(req, status)
+"""
+        assert resource_flow.run(_src("serving/fake.py", code),
+                                 rules=("lifecycle-edge",)) == []
+
+    def test_literal_outside_declared_dst(self):
+        code = """
+from repro.serving import lifecycle as LC
+
+class Eng:
+    def admit(self, req):
+        # lifecycle: QUEUED -> PREFILL
+        LC.transition(req, Status.DONE)
+"""
+        fs = resource_flow.run(_src("serving/fake.py", code),
+                               rules=("lifecycle-edge",))
+        assert any("Status.DONE" in f.message for f in fs)
+
+
+class TestPoolInternals:
+    def test_bad(self):
+        code = """
+class Eng:
+    def peek(self):
+        return len(self.pool._free)
+"""
+        fs = resource_flow.run(_src("serving/fake.py", code),
+                               rules=("pool-internals",))
+        assert len(fs) == 1 and "_free" in fs[0].message
+
+    def test_api_ok(self):
+        code = """
+class Eng:
+    def peek(self):
+        return self.pool.available_pages
+"""
+        assert resource_flow.run(_src("serving/fake.py", code),
+                                 rules=("pool-internals",)) == []
+
+
+# ============================================= kernel contract checking
+
+class TestKernelContracts:
+    def test_registry_covers_every_entry_point(self):
+        entries = registry.load_all()
+        assert set(entries) >= {
+            "fused_loki_decode", "select_blocks",
+            "block_sparse_attention", "block_sparse_attention_grouped",
+            "block_max_scores", "block_max_scores_fm", "flash_attention"}
+        for e in entries.values():
+            assert e.contract.name and e.contract.module
+
+    def test_full_matrix_clean(self):
+        # every tuning plan x every PageLayout dtype (incl. int8/fp8)
+        # x both stored-key widths must abstract-eval clean
+        fs = kernel_contracts.check_all()
+        assert fs == [], [f.format() for f in fs][:10]
+
+    def test_bad_divisibility_caught(self):
+        fs = kernel_contracts._check_cell(
+            "t.py", {}, smax=1000, dim=128, g=8, bs_hint=128,
+            variant="fused", bs=128, kdim=128, dtype_name="fp32",
+            dtype=np.float32, itemsize=4,
+            budget=tuning.VMEM_BUDGET)
+        assert _rules(fs) == ["contract-divisibility"]
+
+    def test_bad_lane_width_caught(self):
+        fs = kernel_contracts._check_cell(
+            "t.py", {}, smax=4096, dim=96, g=8, bs_hint=128,
+            variant="fused", bs=128, kdim=96, dtype_name="fp32",
+            dtype=np.float32, itemsize=4,
+            budget=tuning.VMEM_BUDGET)
+        assert "contract-lane" in _rules(fs)
+
+    def test_vmem_budget_exceeded_caught(self):
+        fs = kernel_contracts._check_cell(
+            "t.py", {}, smax=524288, dim=128, g=8, bs_hint=128,
+            variant="fused", bs=256, kdim=128, dtype_name="fp32",
+            dtype=np.float32, itemsize=4, budget=4096)
+        assert "contract-vmem" in _rules(fs)
+
+    def test_sublane_granule_caught(self):
+        # int8 needs 32-row sublane tiles; a 16-row block cannot pack
+        fs = kernel_contracts._check_cell(
+            "t.py", {}, smax=4096, dim=128, g=8, bs_hint=16,
+            variant="fused", bs=16, kdim=128, dtype_name="int8",
+            dtype=np.int8, itemsize=1, budget=tuning.VMEM_BUDGET)
+        assert "contract-sublane" in _rules(fs)
+
+    def test_vmem_model_tracks_plan_table(self):
+        # every shipped plan must fit the budget it is tuned against
+        for (smax, dim, g, bs_hint), (variant, bs) in tuning.TUNED.items():
+            plan = tuning.KernelPlan(variant, bs)
+            d = max(min(int(0.25 * dim), dim), 8)
+            assert plan.vmem_bytes(smax=smax, d=d, kdim=dim, dim=dim,
+                                   g=g) <= tuning.VMEM_BUDGET
+
+
+# ==================================================== runtime sentinels
+
+class TestTraceGuard:
+    def test_retrace_after_seal_raises(self):
+        import jax
+        import jax.numpy as jnp
+        guard = TraceGuard()
+        fn = jax.jit(guard.wrap("decode_step", lambda x: x * 2))
+        fn(jnp.zeros((4,)))
+        fn(jnp.ones((4,)))                   # same shape: cached
+        assert guard.traces["decode_step"] == 1
+        guard.seal()
+        fn(jnp.zeros((4,)))                  # still cached: fine
+        with pytest.raises(RetraceError):
+            fn(jnp.zeros((8,)))              # shape drift -> retrace
+
+    def test_rebuild_reopens_window(self):
+        import jax
+        import jax.numpy as jnp
+        guard = TraceGuard()
+        fn = jax.jit(guard.wrap("prefill", lambda x: x + 1))
+        fn(jnp.zeros((2,)))
+        guard.seal()
+        guard.rebuild()
+        fn(jnp.zeros((16,)))                 # legitimate re-jit window
+        assert guard.traces["prefill"] == 2
+
+    def test_engine_integration(self):
+        # the paged engine accepts a guard and decodes without retraces
+        # after its warm-up tick
+        import jax
+        from repro.configs import get_smoke_config
+        from repro.models import lm
+        from repro.serving.engine import Request
+        from repro.serving.scheduler import PagedServingEngine
+        cfg = get_smoke_config("qwen2.5-3b")
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        guard = TraceGuard()
+        eng = PagedServingEngine(params, cfg, n_slots=2, smax=64,
+                                 backend="xla", trace_guard=guard)
+        eng.submit(Request(rid=0, prompt=np.arange(8) % cfg.vocab,
+                           max_new=3))
+        eng.tick()
+        eng.tick()
+        guard.seal()
+        eng.run_until_done(max_ticks=50)
+        assert guard.sealed
+        assert eng.stats()["lifecycle"].get("done") == 1
+
+
+class TestSanitizeTables:
+    def _clean(self):
+        table = np.zeros((2, 4), np.int32)
+        table[0, :2] = [3, 4]
+        pos = np.array([130, 0], np.int32)
+        live = np.array([True, False])
+        return table, pos, live
+
+    def test_clean_table_passes(self):
+        table, pos, live = self._clean()
+        assert sanitize_tables(table, pos, live,
+                               page_size=128, n_pages=8) == []
+
+    def test_out_of_range_page(self):
+        table, pos, live = self._clean()
+        table[0, 1] = 99
+        with pytest.raises(PageTableError, match="outside"):
+            sanitize_tables(table, pos, live, page_size=128, n_pages=8)
+
+    def test_trash_page_under_live_pos(self):
+        table, pos, live = self._clean()
+        table[0, 1] = 0                      # pos 130 needs 2 live pages
+        with pytest.raises(PageTableError, match="trash"):
+            sanitize_tables(table, pos, live, page_size=128, n_pages=8)
+
+    def test_slot_corrupt_alias_caught(self):
+        table, pos, live = self._clean()
+        table[1, 0] = 3                      # slot 1 aliases slot 0's page
+        pos[1] = 5
+        live[1] = True
+        with pytest.raises(PageTableError, match="aliased"):
+            sanitize_tables(table, pos, live, page_size=128, n_pages=8)
+
+    def test_shared_page_allowed_with_refcount(self):
+        table, pos, live = self._clean()
+        table[1, 0] = 3
+        pos[1] = 5
+        live[1] = True
+        probs = sanitize_tables(table, pos, live, page_size=128,
+                                n_pages=8, shared_ok=lambda p: p == 3)
+        assert probs == []
+
+
+# ============================================== CLI + baseline workflow
+
+class TestCli:
+    BAD = """
+import time
+
+def stamp():
+    return time.time()
+"""
+
+    def _repo(self, tmp_path):
+        (tmp_path / "pyproject.toml").write_text("[project]\n")
+        pkg = tmp_path / "src" / "repro" / "serving"
+        pkg.mkdir(parents=True)
+        (pkg / "fake.py").write_text(self.BAD)
+        return tmp_path
+
+    def test_strict_fails_then_baseline_accepts(self, tmp_path, capsys,
+                                                monkeypatch):
+        root = self._repo(tmp_path)
+        monkeypatch.chdir(root)
+        argv = [str(root / "src" / "repro"), "--no-contracts"]
+        assert cli.main(argv + ["--strict"]) == 1
+        assert "wall-clock" in capsys.readouterr().out
+        assert cli.main(argv + ["--update-baseline"]) == 0
+        assert cli.main(argv + ["--strict"]) == 0
+        base = load_baseline(root / "analysis_baseline.json")
+        assert len(base) == 1
+
+    def test_fix_leaves_stale_baseline_harmless(self, tmp_path,
+                                                monkeypatch):
+        root = self._repo(tmp_path)
+        monkeypatch.chdir(root)
+        argv = [str(root / "src" / "repro"), "--no-contracts"]
+        cli.main(argv + ["--update-baseline"])
+        (root / "src" / "repro" / "serving" / "fake.py").write_text(
+            "def stamp(clock):\n    return clock()\n")
+        assert cli.main(argv + ["--strict"]) == 0
+
+    def test_unknown_rule_is_usage_error(self, capsys):
+        assert cli.main(["--rules", "no-such-rule", "--no-contracts"]) == 2
+
+    def test_list_rules(self, capsys):
+        assert cli.main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rule in ("host-sync", "resource-leak", "contract-vmem"):
+            assert rule in out
+
+    def test_repo_is_clean_under_strict(self):
+        # the acceptance gate, minus the (slow) contract sweep that
+        # test_full_matrix_clean already covers
+        assert cli.main(["--strict", "--no-contracts"]) == 0
+
+
+# ===================================================== shared plumbing
+
+class TestCommon:
+    def test_fingerprint_is_line_number_independent(self):
+        a = fingerprint("host-sync", "p.py", "tick", "  x = 1  ")
+        b = fingerprint("host-sync", "p.py", "tick", "x = 1")
+        assert a == b
+        assert fingerprint("host-sync", "p.py", "tick", "x = 2") != a
+
+    def test_baseline_roundtrip(self, tmp_path):
+        p = tmp_path / "b.json"
+        save_baseline(p, ["a", "b", "a"])
+        assert load_baseline(p) == {"a", "b"}
+        assert load_baseline(tmp_path / "missing.json") == set()
+
+    def test_annotation_walks_comment_block(self):
+        lines = ["x = 1",
+                 "# host-sync: the one batched sync of the tick",
+                 "# -- continued explanation",
+                 "y = jax.device_get(z)"]
+        assert annotated(lines, 4, "host-sync")
+        assert not annotated(lines, 1, "host-sync")
