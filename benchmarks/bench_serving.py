@@ -78,6 +78,7 @@ import jax.numpy as jnp  # noqa: E402
 from benchmarks import common  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.models import lm  # noqa: E402
+from repro.serving import cache_spec as CS  # noqa: E402
 from repro.serving import faults as FI  # noqa: E402
 from repro.serving import lifecycle as LC  # noqa: E402
 from repro.serving.engine import Request, ServingEngine  # noqa: E402
@@ -141,6 +142,35 @@ def _drain(eng, reqs):
 def _cache_bytes(cfg, rows):
     hd = cfg.resolved_head_dim
     return 2 * cfg.n_layers * rows * cfg.n_kv_heads * hd * 4  # f32 K+V
+
+
+def _decode_read_bytes(cfg, n_toks, rows_per_tok):
+    """Estimated decode-phase HBM reads (``--profile device``), split by
+    pass. A full-attention policy scans every K+V row once per token per
+    layer. Loki policies do NOT: the score pass touches only the
+    leading-d latent slice of K (d per layer from the spec table), then
+    exact attention gathers just the top-k winner rows at full storage
+    width — so the old single full-scan number over-counted the score
+    read by ~D/d and is kept only as the ``full_scan_equiv`` yardstick.
+    In a tiered pool the score slice is the always-resident sidecar:
+    ``score_pass`` bytes are exactly the resident-tier read."""
+    widths = [w for w in CS.layer_k_widths(cfg) if w]
+    full_scan = n_toks * rows_per_tok * cfg.n_kv_heads * 4 \
+        * sum(2 * w for w in widths)                    # f32 K+V all rows
+    if cfg.attn_policy() not in ("loki", "loki_block"):
+        return {"est_decode_read_bytes_ub": full_scan}
+    d = CS.latent_score_width(cfg)
+    score_w = sum(min(d, w) for w in widths)            # K slice only
+    k_rows = max(cfg.loki.min_k, int(cfg.loki.k_f * rows_per_tok))
+    attend = n_toks * min(k_rows, rows_per_tok) \
+        * cfg.n_kv_heads * 4 * sum(2 * w for w in widths)
+    return {"est_decode_read_bytes": {
+        "score_pass": n_toks * rows_per_tok * cfg.n_kv_heads * 4 * score_w,
+        "attend_pass_ub": attend,
+        "full_scan_equiv": full_scan,
+        "score_reduction_vs_full_k":
+            round(sum(widths) / max(score_w, 1), 2),
+    }}
 
 
 def family_sweep(families, *, n_slots, smax, page_size, chunk, max_new,
@@ -312,6 +342,78 @@ def donation_workload(params, cfg, data, *, n_slots, smax, page_size,
     return rows
 
 
+def tiered_workload(data, *, n_slots, smax, page_size, chunk, max_new,
+                    n_req):
+    """Tiered KV pool acceptance (DESIGN.md §13): the identical stream
+    through the single-tier paged engine and through a tiered pool whose
+    device tier holds at most **half** the single-tier pages (full-D K/V
+    pages spill to pinned host buffers; the rank-d latent sidecar stays
+    resident and keeps the Loki score pass exact). Greedy outputs must
+    agree token for token — asserted, not measured. Reports demotion /
+    promotion traffic, the Loki-guided fetch queue's prefetch hit rate,
+    steady tok/s at the shrunken device pool, and the per-token score
+    bytes served from the resident tier vs a full-D score scan (~D/d)."""
+    params, _ = common.trained_params()
+    cfg = common.policy_cfg("loki_block", k_f=0.5, d_f=0.5, block_size=8,
+                            local_window=4, min_k=4)
+
+    single = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                page_size=page_size, prefill_chunk=chunk)
+    _drain(single, _requests(data, 1, 2, vocab=cfg.vocab))        # warm
+    base = _requests(data, n_req, max_new, vocab=cfg.vocab)
+    r_single = _drain(single, base)
+
+    total = single.pool.n_pages
+    # half the single-tier pool, floored at the ctor's one-full-request
+    # bound (prefill reads the whole prefix exactly, so one request must
+    # always fit on device)
+    device_pages = max(total // 2, single._req_pages_hard + 1)
+    tiered = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                page_size=page_size, prefill_chunk=chunk,
+                                device_pages=device_pages, audit=True)
+    _drain(tiered, _requests(data, 1, 2, vocab=cfg.vocab))        # warm
+    rs = _requests(data, n_req, max_new, vocab=cfg.vocab)
+    r_tiered = _drain(tiered, rs)
+
+    assert [r.out for r in rs] == [r.out for r in base], \
+        "tiered pool changed greedy outputs"
+    st = tiered.stats()["tiered"]
+    assert st["n_demoted"] > 0, \
+        "half-sized device pool never demoted a page"
+    assert st["prefetch_hit_rate"] > 0, \
+        "Loki-guided prefetch never hit"
+
+    widths = [w for w in CS.layer_k_widths(cfg) if w]
+    d = CS.latent_score_width(cfg)
+    score_w = sum(min(d, w) for w in widths)
+    rows_scanned = tiered.peak_slot_pages * page_size
+    per_tok = cfg.n_kv_heads * 4                        # f32 per K dim
+    rows = {
+        "single_tier_tok_per_s": r_single["tok_per_s"],
+        "tiered_tok_per_s": r_tiered["tok_per_s"],
+        "device_pages": device_pages,
+        "total_pages": total,
+        "resident_score_bytes_per_token": rows_scanned * per_tok * score_w,
+        "full_d_score_bytes_per_token":
+            rows_scanned * per_tok * sum(widths),
+        "score_byte_reduction": round(sum(widths) / max(score_w, 1), 2),
+        "prefetch_hit_rate": round(st["prefetch_hit_rate"], 3),
+        "n_demoted": st["n_demoted"],
+        "n_promoted": st["n_promoted"],
+        "n_sync_fetches": st["n_sync_fetches"],
+        "n_decode_reruns": st["n_decode_reruns"],
+        "preempted": tiered.n_preempted,
+        "outputs_bit_identical": True,
+        "ticks": r_tiered["ticks"],
+    }
+    print(f"[tiered] {device_pages}/{total} device pages: "
+          f"{r_tiered['tok_per_s']} tok/s (single-tier "
+          f"{r_single['tok_per_s']}), hit rate "
+          f"{st['prefetch_hit_rate']}, score bytes "
+          f"{rows['score_byte_reduction']}x down, bit-identical")
+    return rows
+
+
 def chaos_workload(params, cfg, data, *, n_slots, smax, page_size, chunk,
                    max_new, n_req, spec=""):
     """Robustness acceptance: one stream, fault-free then under a seeded
@@ -409,14 +511,17 @@ def main():
                          + ",".join(FAMILY_ARCHS))
     ap.add_argument("--workload", default="standard",
                     choices=["standard", "shared-prefix", "layout",
-                             "chaos", "donation"],
+                             "chaos", "donation", "tiered"],
                     help="shared-prefix: N requests over one long system "
                          "prompt, prefix cache on vs off (hit rate, TTFT, "
                          "tok/s). layout: the same stream under each "
                          "--layouts PageLayout (bytes/page, tok/s). chaos: "
                          "the same stream fault-free vs under a seeded "
                          "FaultPlan with the invariant auditor on "
-                         "(DESIGN.md §11 acceptance). All merge into the "
+                         "(DESIGN.md §11 acceptance). tiered: the same "
+                         "stream single-tier vs a half-sized device pool "
+                         "with host offload + Loki-guided prefetch "
+                         "(DESIGN.md §13 acceptance). All merge into the "
                          "existing JSON report")
     ap.add_argument("--faults", default="",
                     help="FaultPlan spec for --workload chaos "
@@ -489,6 +594,15 @@ def main():
         print(f"\nwrote {args.out}")
         return
 
+    if args.workload == "tiered":
+        rows = tiered_workload(
+            data, n_slots=n_slots, smax=smax, page_size=page_size,
+            chunk=chunk, max_new=max_new, n_req=n_req)
+        _write_merged(args.out, {"tiered": rows})
+        print(json.dumps({"tiered": rows}, indent=2))
+        print(f"\nwrote {args.out}")
+        return
+
     if args.workload == "chaos":
         rows = chaos_workload(
             params, cfg, data, n_slots=n_slots, smax=smax,
@@ -510,17 +624,15 @@ def main():
     r_paged["preempted"] = paged.n_preempted
     r_paged["peak_pages"] = paged.pool.n_pages - 1
     if args.profile == "device":
-        # upper bound on decode-phase HBM reads: each generated token
-        # scans at most its slot's peak page span of K+V rows — the
-        # number to compare against kernel counters on real hardware
-        bpr = cfg.page_layout.bytes_per_page_row(cfg.resolved_head_dim,
-                                                 cfg.n_kv_heads)
+        # decode-phase HBM reads per engine row, split by pass for Loki
+        # policies (the score scan touches only the latent K slice; only
+        # the top-k winners are read at full width) — the numbers to
+        # compare against kernel counters on real hardware
         for row, eng_ in ((r_dense, None), (r_paged, paged)):
             rows_per_tok = (smax if eng_ is None
                             else eng_.peak_slot_pages * page_size)
-            row["est_decode_read_bytes_ub"] = (
-                row["generated_tokens"] * cfg.n_layers * bpr
-                * rows_per_tok)
+            row.update(_decode_read_bytes(
+                cfg, row["generated_tokens"], rows_per_tok))
 
     # tight pool: the structural win — the same stream served from half the
     # pages (but always >= one full request), via continuous recycling

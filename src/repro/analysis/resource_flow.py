@@ -3,10 +3,14 @@
 Rule ids:
 
   resource-leak   a ``pool.alloc`` / ``pool.acquire`` /
-                  ``pool.register_private`` / ``pool.match_prefix`` call
-                  whose result can leave the enclosing function without
-                  being released, stored into engine-owned bookkeeping,
-                  or returned to the caller. The pass runs an
+                  ``pool.register_private`` / ``pool.match_prefix`` /
+                  ``pool.promote_begin`` call whose result can leave the
+                  enclosing function without being released, stored into
+                  engine-owned bookkeeping, or returned to the caller
+                  (for ``promote_begin`` the staged frame must reach a
+                  ``promote_complete`` / ``promote_abort`` path or a
+                  copy launched through a ``self.`` method). The pass
+                  runs an
                   obligation-based abstract interpretation over each
                   method body: the bound name carries an obligation that
                   must be discharged on every outgoing path.
@@ -23,8 +27,9 @@ Rule ids:
 
 Obligations are discharged by:
   * passing the name to a release op (``pool.release`` / ``pool.free`` /
-    ``pool.reclaim_private``) or to a method that transitively releases
-    its parameter;
+    ``pool.reclaim_private`` / ``pool.promote_complete`` /
+    ``pool.promote_abort`` / ``pool.demote``) or to a method that
+    transitively releases its parameter;
   * storing it (or a container holding it) into engine-owned state — any
     assignment/``append``/``extend`` rooted at ``self.``;
   * returning it (ownership moves to the caller);
@@ -44,10 +49,13 @@ from repro.serving import lifecycle as LC
 
 RULES = ("resource-leak", "lifecycle-edge", "pool-internals")
 
-_ACQUIRE = ("alloc", "acquire", "register_private", "match_prefix")
-_RELEASE = ("release", "free", "reclaim_private")
+_ACQUIRE = ("alloc", "acquire", "register_private", "match_prefix",
+            "promote_begin")
+_RELEASE = ("release", "free", "reclaim_private",
+            "promote_complete", "promote_abort", "demote")
 _POOL_PRIVATE = ("_free", "_ref", "_index", "_lru", "_by_page",
-                 "_children")
+                 "_children", "_tier", "_frame_of", "_free_frames",
+                 "_inflight", "_pinned", "_tier_free", "_pending")
 
 
 def run(sources: Sequence[Tuple[str, str, ast.Module]],

@@ -172,6 +172,13 @@ class ModelConfig:
     # physical layout of paged KV pages (serving); default is today's
     # fp32/native layout so training and the dense engine are untouched
     page_layout: PageLayout = dataclasses.field(default_factory=PageLayout)
+    # per-layer latent-K ranks (Loki §4.2: the key spectrum varies by
+    # layer). None = page_layout.rank everywhere; a tuple of n_layers ints
+    # overrides the stored K width layer by layer (pca basis only). Pools
+    # are allocated at the max width; narrower layers zero-mask the tail
+    # dims at write time, which is self-consistent truncation (zeroed dims
+    # contribute nothing to q̂·k̂).
+    page_ranks: Optional[Tuple[int, ...]] = None
     # decode attention policy: full|loki|loki_block|exact_topk|pcaattn|h2o
     policy: str = "full"
     # hybrid: which layers are attention (hymba runs attn ∥ mamba inside a block)
@@ -215,6 +222,21 @@ class ModelConfig:
         if isinstance(layout, str):
             layout = PageLayout.parse(layout)
         return dataclasses.replace(self, page_layout=layout)
+
+    def with_ranks(self, ranks) -> "ModelConfig":
+        """Per-layer latent-K ranks (forces a pca-basis layout)."""
+        ranks = tuple(int(r) for r in ranks)
+        if len(ranks) != self.n_layers:
+            raise ValueError(f"page_ranks needs {self.n_layers} entries, "
+                             f"got {len(ranks)}")
+        if any(r <= 0 for r in ranks):
+            raise ValueError("page_ranks entries must be positive")
+        lay = self.page_layout
+        if lay.basis != "pca":
+            lay = dataclasses.replace(lay, basis="pca",
+                                      rank=max(ranks))
+        return dataclasses.replace(self, page_layout=lay,
+                                   page_ranks=ranks)
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

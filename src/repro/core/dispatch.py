@@ -180,3 +180,101 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
              local_window=cfg.local_window, sliding_window=sliding_window,
              interpret=interpret, **pargs, **qargs)
     return out.reshape(b, h, dim)
+
+
+def loki_tiered_decode(q_rope, k_pool, v_pool, lat_pool, cur_len, proj,
+                       cfg: LokiConfig, *, page_table, frame_table,
+                       page_size: int, sliding_window: int = 0,
+                       logit_scale=None, token_granular: bool = False,
+                       interpret: Optional[bool] = None):
+    """Tiered Loki decode (DESIGN.md §13) through the configured backend.
+
+    The score/top-k pass reads only the always-resident latent-K sidecar
+    ``lat_pool (R_log, Hkv, d)`` through the *logical* ``page_table``;
+    exact attention reads winner rows from the frame-sized ``k_pool``/
+    ``v_pool (R_dev, Hkv, ·)`` through ``frame_table``. Returns
+    (out (B,H,D), winners (B, max_pages) bool).
+
+    Routing mirrors ``loki_block_decode`` decision-for-decision (backend
+    resolution, planner adoption of a dividing block size, group-shared
+    selection on kernel-shaped fallbacks, token fallback otherwise) so a
+    tiered engine selects exactly the pages its single-tier twin attends.
+    On the Pallas path the two-kernel composition is used as-is: the
+    select kernel's block DMAs index the sidecar via the logical table and
+    the attention kernel's via the frame table — no kernel-body changes.
+    The single-pass fused variant cannot split its score/attend reads
+    across two pools, so tiered always runs the two-kernel pair: bit-
+    identical to a single-tier two-kernel run, within float tolerance
+    (accumulation order) of a fused one."""
+    paged_common = dict(page_table=page_table, frame_table=frame_table,
+                        page_size=page_size, sliding_window=sliding_window,
+                        logit_scale=logit_scale)
+    b, h = q_rope.shape[0], q_rope.shape[1]
+    n_kv, kd = k_pool.shape[-2], k_pool.shape[-1]
+    dim = v_pool.shape[-1]
+    smax = page_table.shape[1] * page_size
+    g = h // n_kv
+    if logit_scale is None and kd < dim:
+        logit_scale = dim ** -0.5
+        paged_common["logit_scale"] = logit_scale
+    if token_granular:
+        # the "loki" policy's paper-faithful token top-k (loki_decode)
+        return loki.loki_decode_tiered(q_rope, k_pool, v_pool, lat_pool,
+                                       cur_len, proj, cfg,
+                                       token_granular=True, **paged_common)
+    backend = resolve_backend(cfg.backend)
+    d = min(max(int(cfg.d_f * dim), 8), kd)
+    plan = tuning.plan_decode(smax, dim, g, d, cfg.block_size,
+                              itemsize=jnp.dtype(k_pool.dtype).itemsize)
+    if plan is not None and page_size % plan.block_size:
+        plan = None
+    if backend == "xla":
+        if smax % cfg.block_size:
+            if plan is None:
+                return loki.loki_decode_tiered(
+                    q_rope, k_pool, v_pool, lat_pool, cur_len, proj, cfg,
+                    token_granular=True, **paged_common)
+            cfg = dataclasses.replace(cfg, block_size=plan.block_size)
+        return loki.loki_decode_tiered(q_rope, k_pool, v_pool, lat_pool,
+                                       cur_len, proj, cfg, **paged_common)
+    if plan is None:
+        if smax % cfg.block_size == 0 and page_size % cfg.block_size == 0:
+            return loki.loki_decode_tiered(q_rope, k_pool, v_pool, lat_pool,
+                                           cur_len, proj, cfg,
+                                           group_select=True, **paged_common)
+        return loki.loki_decode_tiered(q_rope, k_pool, v_pool, lat_pool,
+                                       cur_len, proj, cfg,
+                                       token_granular=True, **paged_common)
+
+    bs = plan.block_size
+    nb = smax // bs
+    k_blocks = max(int(cfg.k_f * nb), 1)
+    if sliding_window:
+        k_blocks = min(k_blocks, -(-sliding_window // bs) + 1)
+    qg = q_rope.reshape(b, n_kv, g, dim)
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    q_hat = q_hat[..., :kd]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # Two-kernel composition, one table per tier: the select kernel's
+    # score DMAs walk the latent sidecar through the logical page table;
+    # the attention kernel re-resolves the winning (logical) blocks
+    # through the frame table, reading full-width rows from HBM frames.
+    blk_idx = ops.select_blocks(q_hat[..., :d], lat_pool, cur, d=d,
+                                k_blocks=k_blocks, block_size=bs,
+                                scale=logit_scale,
+                                local_window=cfg.local_window,
+                                sliding_window=sliding_window,
+                                page_table=page_table, page_size=page_size,
+                                k_scale=None, interpret=interpret)
+    out = ops.block_sparse_attention_grouped(
+        q_hat, k_pool, v_pool, blk_idx, cur, block_size=bs,
+        scale=logit_scale, sliding_window=sliding_window,
+        page_table=frame_table, page_size=page_size,
+        k_scale=None, v_scale=None, interpret=interpret)
+    valid = blk_idx.reshape(b, -1) >= 0
+    pages = jnp.where(valid, blk_idx.reshape(b, -1) * bs // page_size, 0)
+    winners = jnp.zeros((b, page_table.shape[1]), bool)
+    winners = winners.at[jnp.arange(b)[:, None], pages].max(valid)
+    return out.reshape(b, h, dim), winners

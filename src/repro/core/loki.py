@@ -301,3 +301,101 @@ def loki_decode_block(q_rope, k_hat_cache, v_cache, cur_len, proj,
     v_sel = gather_heads(v_cache, idx)
     return attend_selected(q_hat, k_sel, v_sel, valid,
                            logit_scale=scale)
+
+
+def loki_decode_tiered(q_rope, k_pool, v_pool, lat_pool, cur_len, proj,
+                       cfg: LokiConfig, *, page_table, frame_table,
+                       page_size: int, sliding_window: int = 0,
+                       logit_scale=None, token_granular: bool = False,
+                       group_select: bool = False):
+    """Loki decode over a tiered page pool (DESIGN.md §13; jnp reference).
+
+    The approximate score pass (Algorithm 1 lines 3-5) reads only the
+    always-resident latent-K sidecar ``lat_pool (R_log, Hkv, d)`` through
+    the *logical* ``page_table`` — its rows are bitwise copies of the
+    leading-d columns of the stored keys, so selection is exactly the
+    single-tier selection regardless of which full-D pages are resident.
+    Exact attention then gathers the winning rows from the frame-sized
+    ``k_pool``/``v_pool (R_dev, Hkv, ·)`` through ``frame_table`` (HOST
+    pages resolve to the trash frame 0: finite garbage whose scores the
+    validity mask sends to NEG_INF — an exact zero after softmax).
+
+    Returns (out (B,H,D), winners (B, max_pages) bool): the union of
+    logical pages holding selected-and-valid rows. The engine promotes
+    HOST winners and replays — row writes are idempotent full-row
+    overwrites, so the replay is exact.
+
+    ``token_granular`` mirrors ``loki_decode``'s selection;
+    ``group_select`` mirrors ``loki_decode_block``'s fused-kernel
+    semantics. Masks, recency inflation and the dynamic budget are copied
+    from those references term for term."""
+    from repro.serving.paged_cache import gather_logical_dq
+    b, h, dim = q_rope.shape
+    max_pages = page_table.shape[1]
+    smax = max_pages * page_size
+    kd = k_pool.shape[-1]             # stored key width (latent rank <= D)
+    d = min(max(int(cfg.d_f * dim), 8), kd)
+    assert d == lat_pool.shape[-1], \
+        f"latent sidecar width {lat_pool.shape[-1]} != score width {d}"
+    scale = logit_scale if logit_scale is not None else dim ** -0.5
+
+    n_kv = proj.shape[0]
+    g = h // n_kv
+    qg = q_rope.reshape(b, n_kv, g, dim)
+    q_hat = jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q_rope.dtype))
+    q_hat = q_hat.reshape(b, h, dim)[..., :kd]
+
+    # phase 1: score + select from the resident latent tier only
+    k_lat = gather_logical_dq(lat_pool, None, page_table, page_size)
+    approx = decode_scores(q_hat, k_lat, d_slice=d, logit_scale=scale)
+    m = length_mask(smax, cur_len)
+    if sliding_window:
+        m = m & window_mask(smax, cur_len, sliding_window)
+    if cfg.local_window:
+        recent = window_mask(smax, cur_len, cfg.local_window)
+        approx = jnp.where(recent, jnp.float32(1e4) + approx, approx)
+    approx = jnp.where(m, approx, NEG_INF)
+
+    if token_granular:
+        idx, valid = select_topk(approx, cfg, cur_len, smax)
+    else:
+        bs = cfg.block_size
+        assert smax % bs == 0, \
+            "cache length must be a multiple of block_size"
+        n_blocks = smax // bs
+        blk = approx.reshape(*approx.shape[:-1], n_blocks, bs).max(-1)
+        k_blocks = max(int(cfg.k_f * n_blocks), 1)
+        if group_select:
+            blk_g = blk.max(axis=2, keepdims=True)      # (B,Hkv,1,nb)
+            _, bidx = jax.lax.top_k(blk_g, k_blocks)    # (B,Hkv,1,kb)
+            bidx = jnp.broadcast_to(bidx, (*blk.shape[:-1], k_blocks))
+            taken = jnp.take_along_axis(blk_g, bidx[:, :, :1], axis=-1)
+            bvalid = jnp.broadcast_to(taken > NEG_INF / 2, bidx.shape)
+        else:
+            _, bidx = jax.lax.top_k(blk, k_blocks)      # (B,Hkv,G,kb)
+            taken = jnp.take_along_axis(blk, bidx, axis=-1)
+            bvalid = taken > NEG_INF / 2
+        tok = bidx[..., None] * bs + jnp.arange(bs)
+        idx = tok.reshape(*tok.shape[:-2], k_blocks * bs)
+        valid = jnp.broadcast_to(bvalid[..., None], tok.shape)
+        valid = valid.reshape(idx.shape)
+        valid = valid & (jnp.take_along_axis(approx, idx, axis=-1)
+                         > NEG_INF / 2)
+
+    # winner pages: union over heads/groups of valid selections
+    flat_p = (idx // page_size).reshape(b, -1)
+    flat_v = valid.reshape(b, -1)
+    winners = jnp.zeros((b, max_pages), bool)
+    winners = winners.at[jnp.arange(b)[:, None],
+                         jnp.where(flat_v, flat_p, 0)].max(flat_v)
+
+    # phase 2: exact attention, winner rows resolved through frame_table
+    lpage = idx // page_size
+    fid = jnp.take_along_axis(frame_table, lpage.reshape(b, -1),
+                              axis=1).reshape(lpage.shape)
+    rows = fid * page_size + idx % page_size            # device pool rows
+    hsel = jnp.arange(n_kv)[None, :, None, None]
+    k_sel = k_pool[rows, hsel]                          # (B,Hkv,G,K,kd)
+    v_sel = v_pool[rows, hsel]
+    out = attend_selected(q_hat, k_sel, v_sel, valid, logit_scale=scale)
+    return out, winners

@@ -84,6 +84,8 @@ class PoolSection:
     page_size: int = 0             # tokens per page (0 = loki block_size)
     n_pages: int = 0               # pool size (0 = fit all slots)
     prefill_chunk: int = 32
+    device_pages: int = 0          # tiered pool (§13): HBM frames; 0 = off
+    max_inflight: int = 2          # bounded async fetch queue depth
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,7 +154,9 @@ class ServeConfig:
                 k_f=a.k_f, d_f=a.d_f, backend=a.backend,
                 n_slots=a.n_slots, smax=a.smax),
             pool=PoolSection(page_size=a.page_size, n_pages=a.n_pages,
-                             prefill_chunk=a.prefill_chunk),
+                             prefill_chunk=a.prefill_chunk,
+                             device_pages=a.device_pages,
+                             max_inflight=a.max_inflight),
             scheduler=SchedulerSection(
                 policy=a.sched_policy, prefill_budget=a.prefill_budget,
                 decode_budget=a.decode_budget,
@@ -202,7 +206,9 @@ class ServeConfig:
                 prefix_cache=self.scheduler.prefix_cache,
                 admission=lc.admission,
                 shed_after=lc.shed_after or None,
-                faults=lc.fault_plan(), audit=lc.audit)
+                faults=lc.fault_plan(), audit=lc.audit,
+                device_pages=self.pool.device_pages or None,
+                max_inflight=self.pool.max_inflight)
         else:
             eng = ServingEngine(params, cfg, n_slots=self.engine.n_slots,
                                 smax=self.engine.smax,
@@ -238,6 +244,13 @@ class ServeConfig:
             f"layout: {lay.describe()} — {bpr * ps} B/page/layer"
             + (" (per-page f32 scales beside the table)"
                if lay.quantized else ""))
+        if self.pool.device_pages:
+            d = CS.latent_score_width(cfg)
+            lines.append(
+                f"tiered pool: {self.pool.device_pages} device frames, "
+                f"host offload beyond, rank-{d} latent sidecar resident, "
+                f"<= {self.pool.max_inflight} fetches in flight "
+                "(demote-before-preempt)")
         lc = self.lifecycle
         plan = lc.fault_plan()
         lines.append(
@@ -291,6 +304,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "spec-table page bound)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens prefetched per tick (paged engine)")
+    ap.add_argument("--device-pages", type=int, default=0,
+                    help="tiered KV pool (DESIGN.md §13): full-D K/V "
+                         "frames kept in device memory; pages beyond "
+                         "spill to pinned host buffers and promote back "
+                         "through the Loki-guided fetch queue (0 = "
+                         "single-tier; needs a loki policy)")
+    ap.add_argument("--max-inflight", type=int, default=2,
+                    help="outstanding async host->device fetches of the "
+                         "tiered pool (bounded staging budget)")
     ap.add_argument("--sched-policy", default="fifo",
                     choices=["fifo", "priority"],
                     help="paged-engine SchedulerPolicy (serving/policy.py);"
@@ -436,6 +458,13 @@ def main():
               f"(hit rate {eng.prefix_hit_rate():.2f}), "
               f"{eng.n_cow_copies} COW copies, "
               f"{eng.pool.n_evicted} evictions")
+    if st.get("tiered"):
+        ti = st["tiered"]
+        print(f"tiered pool: {ti['device_pages']} device frames, "
+              f"{ti['n_demoted']} demoted / {ti['n_promoted']} promoted, "
+              f"prefetch hit rate {ti['prefetch_hit_rate']:.2f}, "
+              f"{ti['n_sync_fetches']} sync fetches, "
+              f"{ti['n_decode_reruns']} decode reruns")
     for r in reqs[:2]:
         print(f"  req{r.rid}: {np.asarray(r.out)[:10]}")
     print("done")

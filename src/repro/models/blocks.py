@@ -148,7 +148,8 @@ def _write_cache(cache_arr, new, pos_len):
 
 
 def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
-                page_table=None, page_size: int = 0):
+                page_table=None, page_size: int = 0, frame_table=None,
+                rank=None):
     """One-token decode with the configured attention policy.
 
     x (B,E); pos_len (B,) tokens already cached. Returns (y (B,E), cache).
@@ -157,7 +158,21 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
     the serving engine's shared page pools (R,Hkv,D): the new token's K/V
     scatter through the table to their physical rows, and reads either
     gather the logical per-slot view (jnp policies) or hand the pool plus
-    table straight to the paged Pallas kernels (loki_block)."""
+    table straight to the paged Pallas kernels (loki_block).
+
+    ``frame_table (B, max_pages)`` (tiered pools, DESIGN.md §13): K/V rows
+    live at device *frames* while the always-resident ``k_lat`` sidecar is
+    indexed by logical page. The approximate score pass reads only the
+    sidecar; exact attention gathers winner rows through the frame table
+    (HOST pages resolve to the trash frame — finite garbage masked to an
+    exact zero by the selection validity mask). Returns (y, cache,
+    winners) where ``winners (B, max_pages)`` flags logical pages the
+    selection attended.
+
+    ``rank`` (traced scalar): this layer's latent-K rank under per-layer
+    ``cfg.page_ranks`` — tail columns of the stored keys are zero-masked,
+    which is self-consistent truncation (zeroed dims contribute nothing
+    to q̂·k̂)."""
     hd = cfg.resolved_head_dim
     b = x.shape[0]
     q, k, v = _qkv(p, x[:, None, :], cfg)
@@ -202,9 +217,37 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
         k_store = k
     if paged:
         from repro.serving import paged_cache as PC
-        kw = lay.k_width(hd)
-        if kw < hd and policy != "pcaattn":
+        # the pool's allocated width is authoritative: per-layer ranks
+        # stack every layer at the max width (narrower layers zero-mask)
+        kw = cache["k"].shape[-1]
+        if kw < k_store.shape[-1] and policy != "pcaattn":
             k_store = k_store[..., :kw]           # latent rank-r truncation
+        if rank is not None and policy != "pcaattn":
+            k_store = k_store * (jnp.arange(kw) < rank).astype(k_store.dtype)
+        if frame_table is not None:
+            if policy not in ("loki", "loki_block"):
+                raise ValueError("tiered pools serve Loki policies only "
+                                 f"(got {policy!r})")
+            if cfg.loki.n_chunks:
+                raise ValueError("tiered pools do not support chunked "
+                                 "(distributed) Loki selection")
+            dl = cache["k_lat"].shape[-1]
+            cache = {"k": PC.write_token_rows(cache["k"], k_store,
+                                              frame_table, positions,
+                                              page_size),
+                     "v": PC.write_token_rows(cache["v"], v, frame_table,
+                                              positions, page_size),
+                     "k_lat": PC.write_token_rows(cache["k_lat"],
+                                                  k_store[..., :dl],
+                                                  page_table, positions,
+                                                  page_size)}
+            out, win = dispatch.loki_tiered_decode(
+                q, cache["k"], cache["v"], cache["k_lat"], cur_len, proj,
+                cfg.loki, sliding_window=cfg.sliding_window,
+                page_table=page_table, frame_table=frame_table,
+                page_size=page_size, token_granular=(policy == "loki"))
+            y = L.dot(out.reshape(b, cfg.q_dim), p["wo"].astype(x.dtype))
+            return y, cache, win
         if lay.quantized:
             kp, ks = PC.write_token_rows_q(
                 cache["k"], cache["k_scale"], k_store, page_table,
@@ -331,7 +374,8 @@ def attn_prefill(p, cache, x, positions, cfg: ModelConfig):
 
 
 def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
-                       table_row, page_size: int):
+                       table_row, page_size: int, frame_row=None,
+                       rank=None):
     """One chunk of a paged, chunked prefill for a single request.
 
     x (1,C,E) holds the chunk's token embeddings at logical positions
@@ -359,7 +403,6 @@ def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
     proj = p["pca"]
     lay = cfg.page_layout
     hd = cfg.resolved_head_dim
-    kw = lay.k_width(hd)
     if policy not in ("full", "exact_topk", "loki", "loki_block"):
         raise ValueError(f"policy {policy!r} cannot reconstruct exact "
                          "prefix attention from its cache; use the dense "
@@ -367,9 +410,27 @@ def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
     pca_store = policy in ("loki", "loki_block") or lay.basis == "pca"
     k_store = (jnp.einsum("bshd,hde->bshe", k, proj.astype(k.dtype))
                if pca_store else k)
+    kw = cache["k"].shape[-1]      # allocated pool width is authoritative
     if kw < hd:
         k_store = k_store[..., :kw]                # latent rank-r storage
-    if lay.quantized:
+    if rank is not None:
+        k_store = k_store * (jnp.arange(kw) < rank).astype(k_store.dtype)
+    if frame_row is not None:
+        # tiered pool (DESIGN.md §13): full-D rows at device frames, the
+        # latent sidecar by logical page. Prefill is exact attention, so
+        # the scheduler has promoted every page of this slot already.
+        dl = cache["k_lat"].shape[-1]
+        cache = {"k": PC.write_chunk_rows(cache["k"], k_store[0], frame_row,
+                                          pos_start, page_size,
+                                          n_valid=n_valid),
+                 "v": PC.write_chunk_rows(cache["v"], v[0], frame_row,
+                                          pos_start, page_size,
+                                          n_valid=n_valid),
+                 "k_lat": PC.write_chunk_rows(cache["k_lat"],
+                                              k_store[0][..., :dl],
+                                              table_row, pos_start,
+                                              page_size, n_valid=n_valid)}
+    elif lay.quantized:
         kp, ks = PC.write_chunk_rows_q(
             cache["k"], cache["k_scale"], k_store[0], table_row, pos_start,
             page_size, n_valid=n_valid, qmax=lay.qmax)
@@ -385,10 +446,11 @@ def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
                                           pos_start, page_size,
                                           n_valid=n_valid)}
 
+    read_row = frame_row if frame_row is not None else table_row
     klog = PC.gather_logical_dq(cache["k"], cache.get("k_scale"),
-                                table_row[None], page_size)
+                                read_row[None], page_size)
     vlog = PC.gather_logical_dq(cache["v"], cache.get("v_scale"),
-                                table_row[None], page_size)
+                                read_row[None], page_size)
     sl = klog.shape[1]
     n_kv = cfg.n_kv_heads
     scale = hd ** -0.5

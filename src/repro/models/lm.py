@@ -280,7 +280,8 @@ def init_cache(cfg: ModelConfig, batch: int, smax: int,
 
 
 def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                     dtype=jnp.float32, n_slots: int = 1) -> Dict[str, Any]:
+                     dtype=jnp.float32, n_slots: int = 1,
+                     device_pages: Optional[int] = None) -> Dict[str, Any]:
     """Spec-driven paged decode cache for *every* family.
 
     Each layer's components come from the CacheSpec registry
@@ -302,11 +303,29 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
     physical page) living next to the pools. CrossAttnStatic carries one
     scale per *slot* (written once at admission). The ``dtype`` argument
     keeps its historical meaning for StateSlot components and for the
-    default layout, so existing callers are bit-identical."""
+    default layout, so existing callers are bit-identical.
+
+    ``device_pages`` (DESIGN.md §13) turns the pool tiered: the full-D
+    K/V pools shrink to ``device_pages`` *frames* while an always-resident
+    latent-K sidecar ``k_lat`` keeps the leading
+    ``cache_spec.latent_score_width`` columns of every *logical* page's
+    (PCA-rotated) keys, so Loki's approximate score pass never touches the
+    host tier. Quantized layouts are rejected: their RMW store path
+    re-derives per-page scales, which is not replay-idempotent under the
+    tiered engine's optimistic-run/repair decode."""
     from repro.serving import paged_cache as PC
     CS.assert_pageable(cfg)
     specs = CS.layer_specs(cfg)
     r = n_pages * page_size
+    rkv = (device_pages if device_pages is not None else n_pages) * page_size
+    if device_pages is not None:
+        if not (2 <= device_pages <= n_pages):
+            raise ValueError(f"device_pages {device_pages} must be in "
+                             f"[2, n_pages={n_pages}]")
+        if cfg.page_layout.quantized:
+            raise ValueError("tiered pools require a non-quantized "
+                             "PageLayout (per-page scale RMW is not "
+                             "replay-idempotent)")
 
     def pool_dtype(lay):
         # the default layout defers to the caller's dtype argument
@@ -320,11 +339,19 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
             if isinstance(comp, (CS.PagedAttn, CS.WindowPagedAttn)):
                 lay = comp.layout
                 pdt = pool_dtype(lay)
+                # per-layer ranks: scan families stack every layer's pool
+                # in one array, so allocate at the max width — narrower
+                # layers zero-mask their tail dims at write time
+                kw = (CS.max_k_width(cfg) if cfg.page_ranks is not None
+                      else comp.k_width)
                 c["attn"] = {
-                    "k": jnp.zeros((r, comp.n_kv_heads, comp.k_width),
-                                   pdt),
-                    "v": jnp.zeros((r, comp.n_kv_heads, comp.head_dim),
+                    "k": jnp.zeros((rkv, comp.n_kv_heads, kw), pdt),
+                    "v": jnp.zeros((rkv, comp.n_kv_heads, comp.head_dim),
                                    pdt)}
+                if device_pages is not None:
+                    c["attn"]["k_lat"] = jnp.zeros(
+                        (r, comp.n_kv_heads, CS.latent_score_width(cfg)),
+                        pdt)
                 if lay.quantized:
                     c["attn"]["k_scale"] = jnp.zeros((n_pages,),
                                                      jnp.float32)
@@ -356,7 +383,8 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 # --------------------------------------------------------------- decode
 
 def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
-                  page_table=None, page_size: int = 0, live=None):
+                  page_table=None, page_size: int = 0, live=None,
+                  frame_table=None, rank=None):
     def keep_live(new, old):
         """StateSlot protection for the batched paged tick: slots that are
         idle or mid-prefill must not have their carried recurrent state
@@ -369,11 +397,20 @@ def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
                 live.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, od),
             new, old)
 
+    win = None
     if kind in ("dense", "moe", "hybrid", "dec"):
         h = L.norm_apply(p["ln1"], x)
-        a, new_attn = B.attn_decode(p["attn"], c["attn"], h, pos_len, cfg,
-                                    page_table=page_table,
-                                    page_size=page_size)
+        if frame_table is not None:
+            a, new_attn, win = B.attn_decode(p["attn"], c["attn"], h,
+                                             pos_len, cfg,
+                                             page_table=page_table,
+                                             page_size=page_size,
+                                             frame_table=frame_table,
+                                             rank=rank)
+        else:
+            a, new_attn = B.attn_decode(p["attn"], c["attn"], h, pos_len,
+                                        cfg, page_table=page_table,
+                                        page_size=page_size, rank=rank)
         c = dict(c)
         c["attn"] = new_attn
         if kind == "hybrid":
@@ -408,7 +445,7 @@ def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
         x = x + y
         h = L.norm_apply(p["ln2"], x)
         x = x + L.mlp_apply(p["mlp"], h, cfg)
-    return x, c
+    return x, c, win
 
 
 _UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
@@ -435,7 +472,8 @@ def _cache_unbits(tree, dtypes):
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
-                page_table=None, page_size: int = 0, live=None):
+                page_table=None, page_size: int = 0, live=None,
+                frame_table=None):
     """One generation step. token (B,) int32; pos_len (B,) tokens cached.
 
     Returns (logits (B,V), new_cache). With ``page_table (B, max_pages)``/
@@ -443,42 +481,72 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
     and every layer's attention reads/writes resolve through the table.
     ``live (B,)`` bool: slots marked dead keep their StateSlot components
     (recurrent state / cross K/V are per-slot, with no trash row to divert
-    writes to)."""
+    writes to).
+
+    ``frame_table (B, max_pages)`` (tiered pools, DESIGN.md §13) maps each
+    logical table entry to its device frame (0 = trash frame for HOST
+    pages). The return becomes (logits, winners, new_cache) where
+    ``winners (B, max_pages)`` bool is the union over layers of logical
+    pages the Loki selection attended — the scheduler promotes HOST
+    winners and replays."""
     x = L.embed_apply(params["embed"], token[:, None], cfg)[:, 0]
     if not cfg.rope and cfg.family != "ssm":
         # sinusoidal decoders: add position encoding for the current slot
         d = cfg.d_model
         x = x + _sinusoidal_at(pos_len, d).astype(x.dtype)
 
+    tiered = frame_table is not None
+    ranks = None
+    if cfg.page_ranks is not None and page_table is not None:
+        ranks = jnp.asarray(cfg.page_ranks, jnp.int32)
+
     if uses_scan(cfg):
         kind = layer_kind(cfg, 0)
         dtypes = jax.tree.map(lambda a: a.dtype, cache["layers"])
+        xs = (params["layers"], _cache_bits(cache["layers"]))
+        if ranks is not None:
+            xs = xs + (ranks,)
 
-        def body(x, pc):
-            p, cbits = pc
+        def body(carry, pc):
+            p, cbits = pc[0], pc[1]
+            rk = pc[2] if len(pc) > 2 else None
+            x, win = carry if tiered else (carry, None)
             c = _cache_unbits(cbits, dtypes)
-            x, c = _layer_decode(p, c, x, pos_len, cfg, kind,
-                                 page_table=page_table, page_size=page_size,
-                                 live=live)
+            x, c, w = _layer_decode(p, c, x, pos_len, cfg, kind,
+                                    page_table=page_table,
+                                    page_size=page_size, live=live,
+                                    frame_table=frame_table, rank=rk)
+            if tiered:
+                return (x, win | w), _cache_bits(c)
             return x, _cache_bits(c)
 
-        x, new_bits = jax.lax.scan(
-            body, x, (params["layers"], _cache_bits(cache["layers"])))
+        if tiered:
+            win0 = jnp.zeros(page_table.shape, bool)
+            (x, win), new_bits = jax.lax.scan(body, (x, win0), xs)
+        else:
+            win = None
+            x, new_bits = jax.lax.scan(body, x, xs)
         new_cache = {"layers": _cache_unbits(new_bits, dtypes)}
     else:
+        # non-scan families (xlstm) have no paged attention: no tiering
+        win = None
         new_list = []
         x_cur = x
         for i in range(cfg.n_layers):
-            x_cur, c = _layer_decode(params["layers"][i], cache["layers"][i],
-                                     x_cur, pos_len, cfg, layer_kind(cfg, i),
-                                     page_table=page_table,
-                                     page_size=page_size, live=live)
+            x_cur, c, _ = _layer_decode(params["layers"][i],
+                                        cache["layers"][i],
+                                        x_cur, pos_len, cfg,
+                                        layer_kind(cfg, i),
+                                        page_table=page_table,
+                                        page_size=page_size, live=live)
             new_list.append(c)
         x = x_cur
         new_cache = {"layers": new_list}
 
     x = L.norm_apply(params["final_norm"], x)
     logits = L.unembed_apply(params["embed"], x[:, None], cfg)[:, 0]
+    if tiered:
+        return logits, win, new_cache
     return logits, new_cache
 
 
@@ -568,7 +636,8 @@ def prefill(params, cfg: ModelConfig, tokens, smax: int, *, frames=None,
 
 
 def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
-                  n_valid, page_table, page_size: int, *, slot=None):
+                  n_valid, page_table, page_size: int, *, slot=None,
+                  frame_row=None):
     """One step of a paged, chunked prefill for a single request — driven
     by the CacheSpec table, so every family serves through it.
 
@@ -597,9 +666,19 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
     physical pages. This composes with chunking because cached pages
     already hold storage-basis keys: the prefix scores below are taken in
     that basis regardless of who wrote the rows (Lemma 4.1 — scoring is
-    unaffected), so a cache-hit run is exact, not approximate."""
+    unaffected), so a cache-hit run is exact, not approximate.
+
+    ``frame_row (max_pages,)`` (tiered pools): device frame of each table
+    entry. Prefill is exact attention over the whole prefix, so the
+    scheduler promotes *all* of the slot's pages before each chunk; here
+    the frame row simply redirects the K/V writes and gathers while the
+    latent sidecar is written through the logical ``table_row``."""
     CS.assert_pageable(cfg)
     table_row = page_table[0] if page_table.ndim == 2 else page_table
+    if frame_row is not None and frame_row.ndim == 2:
+        frame_row = frame_row[0]
+    ranks = (jnp.asarray(cfg.page_ranks, jnp.int32)
+             if cfg.page_ranks is not None else None)
     slot = jnp.int32(0) if slot is None else jnp.asarray(slot, jnp.int32)
     b, c = tokens.shape
     x = L.embed_apply(params["embed"], tokens, cfg)
@@ -616,15 +695,21 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
 
     if uses_scan(cfg):
         kind = layer_kind(cfg, 0)
+        xs = (params["layers"], cache["layers"])
+        if ranks is not None:
+            xs = xs + (ranks,)
 
         def body(x, pc):
-            p, cc = pc
+            p, cc = pc[0], pc[1]
+            rk = pc[2] if len(pc) > 2 else None
             cc = dict(cc)
             h = L.norm_apply(p["ln1"], x)
             a, new_attn = B.attn_prefill_chunk(p["attn"], cc["attn"], h,
                                                pos_start, n_valid, cfg,
                                                table_row=table_row,
-                                               page_size=page_size)
+                                               page_size=page_size,
+                                               frame_row=frame_row,
+                                               rank=rk)
             cc["attn"] = new_attn
             if kind == "hybrid":
                 st = jax.tree.map(slot_take, cc["ssm"])
@@ -656,8 +741,7 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
                 y = L.mlp_apply(p["mlp"], h, cfg)
             return x + y, cc
 
-        x, new_layers = jax.lax.scan(body, x, (params["layers"],
-                                               cache["layers"]))
+        x, new_layers = jax.lax.scan(body, x, xs)
         new_cache = {"layers": new_layers}
     else:
         # ssm family (xlstm): no pages at all — the chunk runs the
@@ -686,7 +770,7 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
 
 
 def copy_cache_page(cfg: ModelConfig, cache, src_page, dst_page,
-                    page_size: int):
+                    page_size: int, src_frame=None, dst_frame=None):
     """Copy-on-write over a paged cache: duplicate physical page ``src``'s
     rows into ``dst`` in every paged-attention layer's K and V pool.
 
@@ -695,12 +779,23 @@ def copy_cache_page(cfg: ModelConfig, cache, src_page, dst_page,
     the prefix index still reads): the rows read so far move to a private
     page, the table entry is repointed, and only then does the request
     write. ``src_page``/``dst_page`` are traced scalars — one trace serves
-    every COW."""
+    every COW.
+
+    Tiered pools: the full-D K/V rows live at ``src_frame``/``dst_frame``
+    (both pages must be RESIDENT) while the latent sidecar copies by
+    logical page id."""
     from repro.serving import paged_cache as PC
     src = jnp.asarray(src_page, jnp.int32)
     dst = jnp.asarray(dst_page, jnp.int32)
 
     def cp(attn):
+        if src_frame is not None:
+            sf = jnp.asarray(src_frame, jnp.int32)
+            df = jnp.asarray(dst_frame, jnp.int32)
+            return {"k": PC.copy_page_rows(attn["k"], sf, df, page_size),
+                    "v": PC.copy_page_rows(attn["v"], sf, df, page_size),
+                    "k_lat": PC.copy_page_rows(attn["k_lat"], src, dst,
+                                               page_size)}
         out = {"k": PC.copy_page_rows(attn["k"], src, dst, page_size),
                "v": PC.copy_page_rows(attn["v"], src, dst, page_size)}
         if "k_scale" in attn:   # quantized layout: the codes only stay a
@@ -721,6 +816,27 @@ def copy_cache_page(cfg: ModelConfig, cache, src_page, dst_page,
             lc = {**lc, "attn": cp(lc["attn"])}
         out.append(lc)
     return {"layers": out}
+
+
+def promote_page_rows(cfg: ModelConfig, cache, k_rows, v_rows, frame,
+                      page_size: int):
+    """Land a promoted page's host-tier full-D rows in its staging frame
+    (tiered pools, DESIGN.md §13). ``k_rows (L, page_size, Hkv, kw)`` /
+    ``v_rows (L, page_size, Hkv, D)`` are the bytes captured at demotion;
+    ``frame`` is the frame ``PagePool.promote_begin`` handed out. The
+    latent sidecar is untouched — it never left the device."""
+    layers = dict(cache["layers"])
+    attn = dict(layers["attn"])
+    row = jnp.asarray(frame, jnp.int32) * page_size
+
+    def dus(pool, rows):
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, rows.astype(pool.dtype), row, axis=1)
+
+    attn["k"] = dus(attn["k"], k_rows)
+    attn["v"] = dus(attn["v"], v_rows)
+    layers["attn"] = attn
+    return {"layers": layers}
 
 
 def encode_cross_kv(params, cfg: ModelConfig, frames):

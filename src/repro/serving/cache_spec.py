@@ -189,23 +189,38 @@ class LayerSpec:
 def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
     """The spec table: one LayerSpec per decoder layer. Every paged
     component carries ``cfg.page_layout`` (cross-attention with the basis
-    forced native); StateSlot stays full-precision native."""
+    forced native); StateSlot stays full-precision native.
+
+    ``cfg.page_ranks`` (Loki §4.2) overrides the latent-K rank layer by
+    layer: each attn component carries its own layout with that layer's
+    rank, so the table — and everything derived from it — is the single
+    source of per-layer widths."""
     hd = cfg.resolved_head_dim
     lay = cfg.page_layout
     if lay.rank > hd:
         raise ValueError(f"page_layout rank {lay.rank} > head_dim {hd}")
+    ranks = cfg.page_ranks
+    if ranks is not None:
+        if len(ranks) != cfg.n_layers:
+            raise ValueError(f"page_ranks needs {cfg.n_layers} entries, "
+                             f"got {len(ranks)}")
+        if any(r > hd for r in ranks):
+            raise ValueError(f"page_ranks {ranks} exceed head_dim {hd}")
     cross_lay = dataclasses.replace(lay, basis="native", rank=0)
-    attn: Component
-    if cfg.sliding_window:
-        attn = WindowPagedAttn(cfg.n_kv_heads, hd, cfg.sliding_window, lay)
-    else:
-        attn = PagedAttn(cfg.n_kv_heads, hd, lay)
+
+    def attn_for(i: int) -> Component:
+        li = lay if ranks is None else dataclasses.replace(
+            lay, basis="pca", rank=ranks[i])
+        if cfg.sliding_window:
+            return WindowPagedAttn(cfg.n_kv_heads, hd, cfg.sliding_window,
+                                   li)
+        return PagedAttn(cfg.n_kv_heads, hd, li)
 
     def one(i: int) -> LayerSpec:
         kind = layer_kind(cfg, i)
         comps = []
         if kind in ("dense", "moe", "hybrid", "dec"):
-            comps.append(("attn", attn))
+            comps.append(("attn", attn_for(i)))
         if kind == "hybrid":
             comps.append(("ssm", StateSlot("mamba")))
         if kind == "mlstm":
@@ -223,6 +238,31 @@ def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
 
 def has_paged_attn(cfg: ModelConfig) -> bool:
     return any(s.attn is not None for s in layer_specs(cfg))
+
+
+def max_k_width(cfg: ModelConfig) -> int:
+    """Stored K width of the (stacked) pools: scan families stack every
+    layer's pool in one array, so the allocation width is the max per-layer
+    ``k_width``; narrower layers zero-mask their tail dims at write time."""
+    widths = [s.attn.k_width for s in layer_specs(cfg) if s.attn is not None]
+    return max(widths) if widths else cfg.resolved_head_dim
+
+
+def layer_k_widths(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Per-layer stored K widths (a layer with no attn reports 0)."""
+    return tuple(s.attn.k_width if s.attn is not None else 0
+                 for s in layer_specs(cfg))
+
+
+def latent_score_width(cfg: ModelConfig) -> int:
+    """Width of the always-resident latent-K sidecar in a tiered pool
+    (DESIGN.md §13): the leading-d slice Loki's approximate score pass
+    reads, mirroring ``loki.loki_decode``'s d = min(max(d_f·D, 8), kd)
+    clamped to the stored K width. The sidecar rows are bitwise copies of
+    the leading columns of the stored (PCA-rotated) keys, so scoring from
+    the sidecar is exactly the single-tier score computation."""
+    d = max(int(cfg.loki.d_f * cfg.resolved_head_dim), 8)
+    return min(d, max_k_width(cfg))
 
 
 def has_state_slots(cfg: ModelConfig) -> bool:
@@ -434,5 +474,7 @@ def format_spec_table(cfg: ModelConfig, smax: int, page_size: int) -> str:
             + (f" recycle_window={recycle_window(cfg)}"
                if recycle_window(cfg) else "")
             + f" layout={lay.describe()}"
-            f" ({bpr * page_size} B/page/layer) {share}")
+            + (f" ranks=per-layer(max r={max_k_width(cfg)})"
+               if cfg.page_ranks is not None else "")
+            + f" ({bpr * page_size} B/page/layer) {share}")
     return "\n".join([head] + rows)

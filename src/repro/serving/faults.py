@@ -25,6 +25,16 @@ Fault sites (``FaultPlan.SITES``):
   kernel_fail      the fused-Pallas decode raises this tick — the engine
                    must fall back to the XLA path (core/dispatch.py) and
                    keep serving.
+  dma_timeout      an in-flight host->HBM page fetch never lands
+                   (FetchQueue completion finds the DMA dead) — the queue
+                   must repair with a synchronous copy, counted, and the
+                   decode stream must not change.
+  hbm_oom_on_promote
+                   PagePool.promote_begin finds no stageable frame even
+                   though accounting says one exists (as a fragmented /
+                   transiently-overcommitted HBM allocator would) — the
+                   engine walks its demote-retry-defer ladder instead of
+                   crashing or corrupting the tier partition.
 
 A site fires deterministically from ``blake2b(seed, site, tick, unit)``
 compared against its configured rate — no RNG state, so two runs with the
@@ -49,6 +59,20 @@ per-slot state and the device page table. Invariants (DESIGN.md §11):
   E. table mirror   the device page table rows equal the host
                     ``slot_pages`` lists (0 where recycled / unmapped)
   F. LRU sanity     every LRU page is registered and unreferenced
+
+Tiered pools (DESIGN.md §13) add three more:
+
+  G. tier partition every non-free page is in exactly one of
+                    {RESIDENT, HOST, IN_FLIGHT}; device frames partition
+                    into {free frames} ∪ {mapped frames} with no frame
+                    mapped twice and every frame in [1, device_pages)
+  H. tier safety    every pinned page is RESIDENT; the engine's pin
+                    ledger is consistent (each recorded slot->page pin is
+                    that slot's current tail and actually pinned in the
+                    pool); the engine holds host bytes for every HOST and
+                    IN_FLIGHT page (demotion without bytes = data loss)
+  I. fetch budget   the in-flight set never exceeds the fetch queue's
+                    configured budget
 
 Any violation raises :class:`AuditError` naming the invariant — silent
 corruption becomes a loud, attributable failure at the tick it happened.
@@ -89,7 +113,8 @@ class FaultPlan:
     """
 
     SITES = ("pool_exhaustion", "alloc_fail", "nan_logits",
-             "slot_corrupt", "kernel_fail")
+             "slot_corrupt", "kernel_fail", "dma_timeout",
+             "hbm_oom_on_promote")
 
     def __init__(self, seed: int = 0,
                  rates: Optional[Dict[str, float]] = None,
@@ -190,6 +215,45 @@ def audit_pool(pool) -> None:
         if not pool.is_registered(p):
             _fail("F", f"LRU page {p} is not registered")
 
+    # G: tier partition (tiered pools only)
+    if getattr(pool, "tiered", False):
+        resident = set(pool.resident_page_ids())
+        host = set(pool.host_page_ids())
+        inflight = set(pool.inflight_page_ids())
+        live = lru | set(held)
+        if resident & host or resident & inflight or host & inflight:
+            _fail("G", "tier sets overlap: "
+                       f"r&h={resident & host} r&i={resident & inflight} "
+                       f"h&i={host & inflight}")
+        untiered = live - (resident | host | inflight)
+        if untiered:
+            _fail("G", f"pages {sorted(untiered)} are held or cached but "
+                       "in no tier")
+        ghosts = (resident | host | inflight) - live
+        if ghosts:
+            _fail("G", f"pages {sorted(ghosts)} carry tier state but are "
+                       "neither held nor cached")
+        fmap = pool.frame_map()
+        frames = list(fmap.values())
+        free_frames = set(pool.free_frame_ids())
+        if len(frames) != len(set(frames)):
+            dup = [f for f, c in Counter(frames).items() if c > 1]
+            _fail("G", f"frames {dup} mapped by more than one page")
+        for p, f in fmap.items():
+            if not 1 <= f < pool.device_pages:
+                _fail("G", f"page {p} mapped to out-of-range frame {f}")
+            if f in free_frames:
+                _fail("G", f"page {p} mapped to frame {f} which is on "
+                           "the free-frame list")
+        if set(fmap) != resident | inflight:
+            _fail("G", "frame map keys != RESIDENT ∪ IN_FLIGHT: "
+                       f"{sorted(set(fmap) ^ (resident | inflight))}")
+        missing_f = set(range(1, pool.device_pages)) - free_frames \
+            - set(frames)
+        if missing_f:
+            _fail("G", f"frames {sorted(missing_f)} leaked: neither free "
+                       "nor mapped")
+
 
 def audit_engine(engine) -> None:
     """Full per-tick audit of a PagedServingEngine: pool invariants plus
@@ -242,3 +306,34 @@ def audit_engine(engine) -> None:
         if not np.array_equal(table[slot], want):
             _fail("E", f"slot {slot} device table {table[slot].tolist()} "
                        f"!= host pages {want.tolist()}")
+
+    # H + I: tiered-engine safety (tail residency, host bytes, budget)
+    if getattr(pool, "tiered", False):
+        host_bytes = getattr(engine, "_host_kv", {})
+        for p in set(pool.host_page_ids()) | set(pool.inflight_page_ids()):
+            if p not in host_bytes:
+                _fail("H", f"page {p} is off-device but the engine holds "
+                           "no host bytes for it")
+        for p in pool.pinned_page_ids():
+            if pool.tier_of(p) != "resident":
+                _fail("H", f"pinned page {p} is {pool.tier_of(p)}, "
+                           "not RESIDENT")
+        # pins are best-effort under frame starvation (the decode phase
+        # re-ensures residency and defers frame-starved slots), so the
+        # invariant is *ledger consistency*, not universal coverage: every
+        # pin the engine records must name that slot's current tail and
+        # be a real pin in the pool
+        for slot, page in getattr(engine, "_pinned_tail", {}).items():
+            live = [p for p in engine.slot_pages[slot] if p is not None]
+            tail = int(live[-1]) if live else None
+            if tail != page:
+                _fail("H", f"slot {slot} pins page {page} but its tail "
+                           f"is {tail} — a stale pin blocks demotion "
+                           "forever")
+            if not pool.is_pinned(page):
+                _fail("H", f"slot {slot} records a pin on page {page} "
+                           "the pool does not hold")
+        inflight = pool.inflight_page_ids()
+        if len(inflight) > pool.max_inflight:
+            _fail("I", f"{len(inflight)} fetches in flight exceeds the "
+                       f"budget of {pool.max_inflight}")

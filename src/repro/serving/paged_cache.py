@@ -38,6 +38,23 @@ refcount drops to zero sends it to
     cached pages therefore always happens *before* the scheduler has to
     preempt a live request.
 
+Tiered pool (DESIGN.md §13): with ``device_pages`` set, the pool splits
+logical pages from device **frames**. Page ids stay the unit of the page
+tables, refcounts and the prefix index; only ``device_pages`` frames of
+full-D K/V rows exist in HBM. Every logical page additionally owns an
+always-resident rank-r latent-K sidecar row range (allocated by
+``init_paged_cache``), which is all the Loki score pass reads. A page is
+in exactly one tier state:
+
+  RESIDENT   full-D rows live in a device frame (``frame_of(page)``)
+  HOST       full-D rows live in the engine's pinned host buffers
+  IN_FLIGHT  a host->HBM fetch owns a frame but has not landed yet
+
+``demote``/``promote_begin``/``promote_complete`` move pages between the
+states with double-free-style guards (demoting a HOST page or promoting a
+RESIDENT page raises). ``FetchQueue`` wraps the promote pair into a
+bounded async queue with double-buffered staging frames.
+
 This module is deliberately two-layered:
   * pure-jnp array helpers (``gather_logical``, ``write_token_rows``,
     ``write_chunk_rows``, ``copy_page_rows``) used inside jit,
@@ -55,6 +72,11 @@ import jax.numpy as jnp
 import numpy as np
 
 TRASH_PAGE = 0
+
+# tier states of a logical page in a tiered pool (DESIGN.md §13)
+RESIDENT = "resident"
+HOST = "host"
+IN_FLIGHT = "in_flight"
 
 _UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
 
@@ -310,15 +332,33 @@ class PagePool:
     request currently holds a reference to.
     """
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int,
+                 device_pages: Optional[int] = None,
+                 max_inflight: int = 2):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is reserved)")
+        if device_pages is not None and not 2 <= device_pages <= n_pages:
+            raise ValueError(
+                f"device_pages must be in [2, n_pages={n_pages}], "
+                f"got {device_pages}")
         self.n_pages = n_pages
         self.page_size = page_size
         # seeded fault plan (serving/faults.py) this pool consults at its
         # injection sites; None = no faults (production default)
         self._faults = None
         self._free: List[int] = list(range(1, n_pages))
+        # ---- tier state (None device_pages = single-tier: every page is
+        # its own frame and the tier machinery degenerates to identity)
+        self.device_pages = device_pages
+        self.max_inflight = max_inflight
+        self._free_frames: List[int] = (
+            list(range(1, device_pages)) if device_pages else [])
+        self._frame_of: Dict[int, int] = {}   # RESIDENT | IN_FLIGHT pages
+        self._tier: Dict[int, str] = {}       # allocated/cached pages only
+        self._pinned: Dict[int, int] = {}     # page -> pin count
+        self._inflight: Dict[int, int] = {}   # page -> staging frame
+        self.n_demoted = 0
+        self.n_promoted = 0
         self._ref: Dict[int, int] = {}
         # prefix-cache index over *full* prompt pages
         self._index: Dict[bytes, CacheEntry] = {}
@@ -399,6 +439,168 @@ class PagePool:
         """page -> refcount for every currently-held page (a copy)."""
         return dict(self._ref)
 
+    # ------------------------------------------------------- tiered state
+    #
+    # The pool is pure bookkeeping: the *engine* owns the device pools and
+    # the host byte buffers and performs the actual copies. The contract
+    # is copy-then-demote (full-D rows must be on host before the frame is
+    # surrendered) and promote_begin-copy-promote_complete (the frame is
+    # owned by the fetch from begin to complete).
+
+    @property
+    def tiered(self) -> bool:
+        return self.device_pages is not None
+
+    @property
+    def free_frames(self) -> int:
+        return len(self._free_frames)
+
+    def tier_of(self, page: int) -> str:
+        """Tier state of an allocated/cached page (single-tier pools and
+        the trash page are RESIDENT by definition)."""
+        if not self.tiered or page == TRASH_PAGE:
+            return RESIDENT
+        state = self._tier.get(page)
+        if state is None:
+            raise ValueError(f"tier_of() of free page {page}")
+        return state
+
+    def frame_of(self, page: int) -> Optional[int]:
+        """Device frame holding a page's full-D rows: the page id itself
+        in a single-tier pool, the mapped frame for RESIDENT/IN_FLIGHT
+        pages of a tiered pool, None for HOST pages."""
+        if not self.tiered:
+            return page
+        if page == TRASH_PAGE:
+            return TRASH_PAGE
+        return self._frame_of.get(page)
+
+    def pin(self, page: int) -> None:
+        """Pin a RESIDENT page against demotion (tail pages receiving
+        decode writes, pages of a slot mid-prefill)."""
+        if not self.tiered or page == TRASH_PAGE:
+            return
+        if self._tier.get(page) != RESIDENT:
+            raise ValueError(f"pin of non-resident page {page}")
+        self._pinned[page] = self._pinned.get(page, 0) + 1
+
+    def unpin(self, page: int) -> None:
+        if not self.tiered or page == TRASH_PAGE:
+            return
+        if self._pinned.get(page, 0) <= 0:
+            raise ValueError(f"unpin of unpinned page {page}")
+        self._pinned[page] -= 1
+        if self._pinned[page] == 0:
+            del self._pinned[page]
+
+    def is_pinned(self, page: int) -> bool:
+        return self._pinned.get(page, 0) > 0
+
+    def demote(self, page: int) -> int:
+        """Surrender a RESIDENT page's frame (its full-D rows must already
+        be in the host buffers — the engine copies first). Returns the
+        freed frame. Raises like a double-free on a page that is already
+        HOST, mid-fetch, pinned, or the trash page."""
+        if not self.tiered:
+            raise ValueError("demote() on a single-tier pool")
+        if page == TRASH_PAGE:
+            raise ValueError("demote of the reserved trash page")
+        state = self._tier.get(page)
+        if state == HOST:
+            raise ValueError(f"double-demote of page {page}")
+        if state != RESIDENT:
+            raise ValueError(f"demote of {state or 'free'} page {page}")
+        if self._pinned.get(page, 0):
+            raise ValueError(f"demote of pinned page {page}")
+        frame = self._frame_of.pop(page)
+        self._free_frames.append(frame)
+        self._tier[page] = HOST
+        self.n_demoted += 1
+        return frame
+
+    def promote_begin(self, page: int, faultable: bool = True
+                      ) -> Optional[int]:
+        """Claim a staging frame for a HOST page's host->HBM fetch.
+
+        Returns the frame (page becomes IN_FLIGHT; the engine copies, then
+        ``promote_complete``), or None when no frame is free, the bounded
+        in-flight budget is exhausted, or an ``hbm_oom_on_promote`` fault
+        fires — callers run their demote/retry/preempt ladder. Promoting a
+        RESIDENT or IN_FLIGHT page raises like a double-free."""
+        if not self.tiered:
+            raise ValueError("promote_begin() on a single-tier pool")
+        state = self._tier.get(page)
+        if state in (RESIDENT, IN_FLIGHT):
+            raise ValueError(f"promote of {state} page {page}")
+        if state != HOST:
+            raise ValueError(f"promote of free page {page}")
+        if faultable and self._fault("hbm_oom_on_promote", page):
+            return None
+        if not self._free_frames or len(self._inflight) >= self.max_inflight:
+            return None
+        frame = self._free_frames.pop()
+        self._frame_of[page] = frame
+        self._tier[page] = IN_FLIGHT
+        self._inflight[page] = frame
+        return frame
+
+    def promote_complete(self, page: int) -> int:
+        """The fetch landed: IN_FLIGHT -> RESIDENT. Returns the frame."""
+        if self._tier.get(page) != IN_FLIGHT:
+            raise ValueError(
+                f"promote_complete of page {page} with no fetch in flight")
+        del self._inflight[page]
+        self._tier[page] = RESIDENT
+        self.n_promoted += 1
+        return self._frame_of[page]
+
+    def promote_abort(self, page: int) -> None:
+        """A fetch that never landed (dma_timeout): give the staging frame
+        back and return the page to HOST so a synchronous retry can claim
+        a fresh fetch."""
+        if self._tier.get(page) != IN_FLIGHT:
+            raise ValueError(
+                f"promote_abort of page {page} with no fetch in flight")
+        del self._inflight[page]
+        self._free_frames.append(self._frame_of.pop(page))
+        self._tier[page] = HOST
+
+    def _tier_free(self, page: int) -> None:
+        """Clear a page's tier state as it returns to the free list.
+        The in-flight check comes before any mutation: a refused free
+        must leave the tier partition untouched (the fetch still owns
+        its staging frame)."""
+        if not self.tiered:
+            return
+        state = self._tier.get(page)
+        if state == IN_FLIGHT:
+            raise ValueError(f"free of in-flight page {page}")
+        self._tier.pop(page, None)
+        if state == RESIDENT:
+            self._free_frames.append(self._frame_of.pop(page))
+        self._pinned.pop(page, None)
+
+    # auditor views over the tier partition (serving/faults.py invariants
+    # G/H/I re-derive the accounting from these copies)
+    def resident_page_ids(self) -> List[int]:
+        return [p for p, s in self._tier.items() if s == RESIDENT]
+
+    def host_page_ids(self) -> List[int]:
+        return [p for p, s in self._tier.items() if s == HOST]
+
+    def inflight_page_ids(self) -> List[int]:
+        return list(self._inflight)
+
+    def free_frame_ids(self) -> List[int]:
+        return list(self._free_frames)
+
+    def pinned_page_ids(self) -> List[int]:
+        return [p for p, n in self._pinned.items() if n > 0]
+
+    def frame_map(self) -> Dict[int, int]:
+        """page -> frame for every RESIDENT/IN_FLIGHT page (a copy)."""
+        return dict(self._frame_of)
+
     def deregister(self, page: int) -> None:
         """Drop a *held* page's index entry (no-op if unregistered). The
         sole-reader arm of copy-on-write uses this to take ownership in
@@ -436,11 +638,25 @@ class PagePool:
             return None       # injected: as if the free list ran dry
         if n > self.available_pages:
             return None
+        if self.tiered:
+            # fresh pages receive writes, so each needs a device frame;
+            # evictable cached pages may carry reclaimable frames, but if
+            # even those can't cover the request the caller must demote
+            # cold resident pages (policy hook) before retrying
+            lru_frames = sum(1 for p in self._lru
+                             if self._tier.get(p) == RESIDENT)
+            if n > len(self._free_frames) + lru_frames:
+                return None
+            while len(self._free_frames) < n:
+                self._evict_one()
         while len(self._free) < n:
             self._evict_one()
         taken, self._free = self._free[:n], self._free[n:]
         for p in taken:
             self._ref[p] = 1
+            if self.tiered:
+                self._tier[p] = RESIDENT
+                self._frame_of[p] = self._free_frames.pop()
         return taken
 
     def acquire(self, pages: List[int]) -> List[int]:
@@ -477,6 +693,14 @@ class PagePool:
             if self._ref.get(p, 0) < seen[p]:
                 raise ValueError(
                     f"double-free of page {p} (refcount underflow)")
+        for p, c in seen.items():
+            # all-or-nothing: a free that would drop an IN_FLIGHT page to
+            # the free list must refuse before any refcount moves (the
+            # fetch still owns the page's staging frame)
+            if self.tiered and self._ref.get(p, 0) == c \
+                    and p not in self._by_page \
+                    and self._tier.get(p) == IN_FLIGHT:
+                raise ValueError(f"free of in-flight page {p}")
         for p in pages:
             self._ref[p] -= 1
             if self._ref[p] == 0:
@@ -484,6 +708,7 @@ class PagePool:
                 if p in self._by_page:
                     self._lru[p] = None          # MRU end of the LRU
                 else:
+                    self._tier_free(p)
                     self._free.append(p)
 
     # released pages historically went through ``free``; release IS free
@@ -495,6 +720,7 @@ class PagePool:
         entry and hand the physical page to the free list."""
         page, _ = self._lru.popitem(last=False)
         self._drop_entry(self._by_page[page])
+        self._tier_free(page)
         self._free.append(page)
         self.n_evicted += 1
 
@@ -611,6 +837,7 @@ class PagePool:
                 self._drop_entry(e)
                 if e.page in self._lru:
                     self._lru.pop(e.page)
+                    self._tier_free(e.page)
                     self._free.append(e.page)
             return None
         pages = []
@@ -625,3 +852,70 @@ class PagePool:
     def pages_for(n_tokens: int, page_size: int) -> int:
         """Pages needed to hold n_tokens."""
         return -(-max(n_tokens, 0) // page_size)
+
+
+# ------------------------------------------------------- async fetch queue
+
+class FetchQueue:
+    """Bounded async host->HBM promotion queue over a tiered PagePool.
+
+    ``request(page)`` claims a staging frame (``promote_begin``), dispatches
+    the engine-supplied copy (jax dispatch is async, so the DMA overlaps
+    whatever the host enqueues next — the next layer's score pass in the
+    tiered decode pipeline) and tracks the fetch as IN_FLIGHT. The queue
+    holds at most ``pool.max_inflight`` outstanding fetches (default 2:
+    double-buffered staging); requesting past the budget completes the
+    oldest fetch first, so issue order is also landing order.
+
+    ``drain()`` is the barrier before the sparse-attention pass reads the
+    frame table: every outstanding fetch is completed (or, under an
+    injected ``dma_timeout``, aborted and re-copied synchronously — the
+    counted fallback path).
+    """
+
+    def __init__(self, pool: PagePool, copy_fn, faults=None):
+        self.pool = pool
+        self._copy = copy_fn            # copy_fn(page, frame) -> None
+        self._faults = faults
+        self._pending: "collections.deque[int]" = collections.deque()
+        self.n_issued = 0
+        self.n_sync_fallback = 0
+
+    def request(self, page: int) -> bool:
+        """Start fetching a HOST page; False if no staging frame could be
+        claimed (frame pressure or an hbm_oom_on_promote fault) — the
+        caller runs its demote/retry/preempt ladder and may re-request."""
+        if self._pending and len(self._pending) >= self.pool.max_inflight:
+            self._complete(self._pending.popleft())
+        frame = self.pool.promote_begin(page)
+        if frame is None:
+            return False
+        self._copy(page, frame)
+        self._pending.append(page)
+        self.n_issued += 1
+        return True
+
+    def _complete(self, page: int) -> None:
+        if self._faults is not None and self._faults.hit("dma_timeout",
+                                                         page):
+            # the async fetch never landed: give the staging frame back,
+            # then fall back to a synchronous claim+copy (not faultable —
+            # this *is* the fallback) and count it
+            self.pool.promote_abort(page)
+            frame = self.pool.promote_begin(page, faultable=False)
+            if frame is None:       # budget freed by the abort above
+                raise RuntimeError(
+                    f"sync fallback could not claim a frame for {page}")
+            self._copy(page, frame)
+            self.n_sync_fallback += 1
+        self.pool.promote_complete(page)
+
+    def drain(self) -> None:
+        """Complete every outstanding fetch (barrier before the frame
+        table is rebuilt for the sparse-attention pass)."""
+        while self._pending:
+            self._complete(self._pending.popleft())
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)

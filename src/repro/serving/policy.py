@@ -80,6 +80,20 @@ class SchedulerPolicy:
         the one feeding the preemption livelock being broken)."""
         return (self.sort_key(req, arrival), n_preempts)
 
+    def demote_key(self, page: int, cached_unreferenced: bool,
+                   lru_order: int, last_use_tick: int):
+        """Demotion order for a tiered pool (DESIGN.md §13): the engine
+        demotes the *minimum* of this key when it needs device frames.
+        Cached-but-unreferenced pages (prefix-cache residue no live slot
+        holds) go first in pool-LRU order — their bytes keep prefix value
+        on the host but their frames serve nobody; then cold resident
+        pages by last-use tick (a page no recent Loki selection touched
+        is the cheapest to push off-device). Demotion always precedes
+        preemption or shedding: losing a frame costs one prefetch,
+        losing a slot costs a re-prefill."""
+        return ((0, lru_order) if cached_unreferenced
+                else (1, last_use_tick))
+
 
 class FifoPolicy(SchedulerPolicy):
     pass

@@ -93,6 +93,13 @@ from repro.serving.policy import SchedulerPolicy, TickBudget, make_policy
 
 PAGED_POLICIES = ("full", "exact_topk", "loki", "loki_block")
 
+# miss-repair bound for the tiered decode: run 1 discovers the first
+# off-device winners, run 2 can still shift deeper layers' selections
+# (their run-1 scores attended trash rows), run 3 is fully resident in
+# every observed trace — 4 leaves one run of slack before declaring
+# promotion/selection ping-pong
+_TIERED_MAX_RUNS = 4
+
 
 def _dus(full, one, slot, axis):
     return jax.lax.dynamic_update_slice_in_dim(
@@ -131,6 +138,15 @@ class PagedServingEngine:
                    every tick (raises AuditError on violation)
     nan_guard      quarantine slots whose decode logits go non-finite
                    (FAIL that request alone, keep the batch serving)
+    device_pages   tiered KV pool (DESIGN.md §13): only this many pages
+                   (incl. the trash frame) keep full-D K/V rows in HBM;
+                   the rest live in host buffers, always scoreable
+                   through the resident latent-K sidecar, and are
+                   promoted back on demand when Loki's selection attends
+                   them. Requires a Loki policy over a non-quantized
+                   layout. None (default) = single-tier, all-resident.
+    max_inflight   outstanding async host->HBM fetches the tiered pool's
+                   fetch queue may hold (default 2: double-buffered)
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
@@ -144,7 +160,9 @@ class PagedServingEngine:
                  clock=None, shed_after: Optional[int] = None,
                  faults: Optional[FI.FaultPlan] = None,
                  audit: bool = False, nan_guard: bool = True,
-                 trace_guard=None, donate: bool = True):
+                 trace_guard=None, donate: bool = True,
+                 device_pages: Optional[int] = None,
+                 max_inflight: int = 2):
         if backend is not None:
             cfg = cfg.replace(
                 loki=dataclasses.replace(cfg.loki, backend=backend))
@@ -196,6 +214,27 @@ class PagedServingEngine:
                 f"({self._req_pages_hard} pages); raise n_pages or lower "
                 "smax")
 
+        self.tiered = device_pages is not None
+        if self.tiered:
+            pol = cfg.attn_policy()
+            if pol not in ("loki", "loki_block"):
+                raise ValueError(
+                    "tiered KV pool needs a Loki policy (its latent "
+                    f"sidecar drives the score pass), not {pol!r}")
+            if cfg.page_layout.quantized:
+                raise ValueError(
+                    "tiered KV pool requires a non-quantized page layout: "
+                    "quantized row writes re-derive per-page scales, so "
+                    "the miss-repair replay would not be bit-idempotent")
+            if not (self.has_pages and lm.uses_scan(cfg)):
+                raise ValueError("tiered KV pool needs paged attention "
+                                 "layers in a scan family")
+            if device_pages - 1 < self._req_pages_hard:
+                raise ValueError(
+                    f"device pool of {device_pages} frames cannot hold "
+                    f"one full request ({self._req_pages_hard} pages); "
+                    "raise device_pages or lower smax")
+
         if admission not in ("strict", "lenient"):
             raise ValueError(f"admission={admission!r}; "
                              "use 'strict' or 'lenient'")
@@ -212,11 +251,14 @@ class PagedServingEngine:
         self.n_shed = 0
         self.n_backend_fallbacks = 0
 
-        self.pool = PagePool(n_pages, self.page_size)
+        self.pool = PagePool(n_pages, self.page_size,
+                             device_pages=device_pages,
+                             max_inflight=max_inflight)
         if faults is not None:
             self.pool.set_faults(faults)
         self.cache = lm.init_paged_cache(cfg, n_pages, self.page_size,
-                                         jnp.float32, n_slots=n_slots)
+                                         jnp.float32, n_slots=n_slots,
+                                         device_pages=device_pages)
         self._fresh_state = CS.fresh_state_tree(cfg, jnp.float32)
         # page table / positions / last tokens live on the HOST: every
         # per-slot update between ticks is a cheap in-place numpy write,
@@ -274,6 +316,20 @@ class PagedServingEngine:
         self.n_prefill_computed_tokens = 0
         self.n_cow_copies = 0
         self.n_state_restores = 0
+        # tiered-pool engine state (DESIGN.md §13): host byte buffers for
+        # demoted pages, the per-slot pinned write-target, a last-use tick
+        # per page driving the cold-resident demotion order, and the
+        # bounded async fetch queue
+        self._host_kv: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._pinned_tail: Dict[int, int] = {}
+        self._page_last_use: Dict[int, int] = {}
+        self.n_prefetch_hits = 0
+        self.n_prefetch_misses = 0
+        self.n_sync_fetches = 0
+        self.n_decode_reruns = 0
+        self._fetch = (PC.FetchQueue(self.pool, self._promote_copy,
+                                     faults=faults)
+                       if self.tiered else None)
         self._trace_guard = trace_guard
         self._donate = donate       # False only for A/B benchmarking
 
@@ -310,6 +366,29 @@ class PagedServingEngine:
             wrap("copy_cache_page",
                  lambda c, s, d: lm.copy_cache_page(cfg, c, s, d, ps)),
             donate_argnums=(0,) if self._donate else ())
+        if self.tiered:
+            self._decode_t = jax.jit(
+                wrap("decode_step_tiered",
+                     lambda p, c, t, pl, pt, ft, lv: lm.decode_step(
+                         p, cfg, c, t, pl, page_table=pt, page_size=ps,
+                         live=lv, frame_table=ft)),
+                donate_argnums=(1,) if self._donate else ())
+            self._chunk_t = jax.jit(
+                wrap("prefill_chunk_tiered",
+                     lambda p, c, toks, start, nv, row, fr, sl:
+                     lm.prefill_chunk(p, cfg, c, toks, start, nv, row,
+                                      ps, slot=sl, frame_row=fr)),
+                donate_argnums=(1,) if self._donate else ())
+            self._copy_page_t = jax.jit(
+                wrap("copy_cache_page_tiered",
+                     lambda c, s, d, sf, df: lm.copy_cache_page(
+                         cfg, c, s, d, ps, src_frame=sf, dst_frame=df)),
+                donate_argnums=(0,) if self._donate else ())
+            self._promote_write = jax.jit(
+                wrap("promote_page_rows",
+                     lambda c, k, v, f: lm.promote_page_rows(
+                         cfg, c, k, v, f, ps)),
+                donate_argnums=(0,) if self._donate else ())
         if self.is_encdec:
             self._encode_cross = jax.jit(
                 lambda p, fr: lm.encode_cross_kv(p, cfg, fr))
@@ -338,6 +417,8 @@ class PagedServingEngine:
         pages = self.pool.reclaim_private(psnap[1])
         if pages:
             self.pool.release(pages)
+            if self.tiered:
+                self._prune_host()
 
     def _try_restore_state(self, slot: int, req: Request,
                            n_pre: int) -> Optional[int]:
@@ -561,17 +642,31 @@ class PagedServingEngine:
         self.pos[slot] = len(toks) - 1
         self.last_tok[slot] = int(toks[-1])
         self.live[slot] = True
+        if self.tiered and any(p is not None
+                               for p in self.slot_pages[slot]):
+            # pin the decode write-target now if a frame allows it; the
+            # decode phase re-ensures residency before every batched step,
+            # so failing here only costs a sync fetch later
+            tail = [p for p in self.slot_pages[slot] if p is not None][-1]
+            if self._ensure_resident([tail]):
+                self._repin_tail(slot)
 
     def _release_slot(self, slot: int) -> None:
         """Return a slot to the pool — pure page/slot bookkeeping, no
         request-status side effects (callers pair this with ``_terminal``
         or a requeue, which own the status transition)."""
+        if self.tiered:
+            old = self._pinned_tail.pop(slot, None)
+            if old is not None:
+                self.pool.unpin(old)
         # recycled (None) entries were released the moment they slid out
         # of the window; everything else drops one reference — a shared
         # page another request (or the prefix index) still needs survives,
         # a sole-owned one returns to the free list / LRU
         self.pool.release(
             [p for p in self.slot_pages[slot] if p is not None])
+        if self.tiered:
+            self._prune_host()
         self.slot_pages[slot] = []
         self._cow_pending.pop(slot, None)
         self._reg_next.pop(slot, None)
@@ -709,6 +804,14 @@ class PagedServingEngine:
             return True
         if not self._make_room(need, protect=slot):
             return False
+        # tiered: fresh pages are born RESIDENT, so claim frames first —
+        # by demotion, never by preempting (demote-before-preempt: the
+        # _make_room above handles *logical* page shortage, which frames
+        # cannot fix; frame shortage is always demotion's job)
+        if self.tiered and not self._demote_for_frames(
+                need, protect=frozenset(
+                    p for p in self.slot_pages[slot] if p is not None)):
+            return False
         pages = self.pool.alloc(need)
         if pages is None:
             return False        # injected alloc_fail: contended this tick
@@ -745,14 +848,36 @@ class PagedServingEngine:
             self.pool.deregister(old)
             self._cow_pending.pop(slot)
             return True
+        if self.tiered:
+            # the copy reads the source frame and writes a fresh one:
+            # both ends must be on device before the kernel runs (promote
+            # the source first — its promotion may consume a free frame,
+            # the destination's frame is claimed after)
+            prot = frozenset(
+                p for p in self.slot_pages[slot] if p is not None)
+            if not (self._ensure_resident([old], prot)
+                    and self._demote_for_frames(1, prot | {old})):
+                return False
         got = self.pool.alloc(1)
         if got is None:
             return False        # injected alloc_fail: contended this tick
         new = got[0]
-        self.cache = self._copy_page(self.cache, old, new)
+        if self.tiered:
+            self.cache = self._copy_page_t(
+                self.cache, old, new,
+                jnp.int32(self.pool.frame_of(old)),
+                jnp.int32(self.pool.frame_of(new)))
+        else:
+            self.cache = self._copy_page(self.cache, old, new)
         self.page_table[slot, idx] = new
         self.slot_pages[slot][idx] = new
+        if self.tiered:
+            # the old page may have been this slot's pinned tail: move
+            # the pin to the copy BEFORE dropping the reference
+            self._repin_tail(slot)
         self.pool.release([old])
+        if self.tiered:
+            self._prune_host()
         self._cow_pending.pop(slot)
         self.n_cow_copies += 1
         return True
@@ -792,6 +917,8 @@ class PagedServingEngine:
             return
         pages[:first_live] = [None] * min(first_live, len(pages))
         self.pool.release(freed)
+        if self.tiered:
+            self._prune_host()
         self.n_recycled_pages += len(freed)
         self.page_table[slot, :first_live] = 0
         live = sum(p is not None for p in pages)
@@ -799,6 +926,331 @@ class PagedServingEngine:
             raise RuntimeError(
                 f"slot {slot} holds {live} pages after recycling, above "
                 f"the spec-table bound {self._req_pages_hard}")
+
+    # ------------------------------------------- tiered KV pool (§13)
+
+    def _frame_table(self, pt: np.ndarray) -> np.ndarray:
+        """Resolve a logical page table to device frames. RESIDENT pages
+        map to their frame; HOST pages (and staging frames still in
+        flight) map to the trash frame 0 — rows read through a trash
+        entry are finite garbage that the selection's validity mask turns
+        into an exactly-zero attention contribution, and the winner mask
+        is what reports the page for promotion."""
+        lut = np.zeros((self.pool.n_pages,), np.int32)
+        for p, f in self.pool.frame_map().items():
+            lut[p] = f
+        for p in self.pool.inflight_page_ids():
+            lut[p] = 0
+        return lut[pt]
+
+    def _prune_host(self) -> None:
+        """Drop host byte buffers no off-device page needs anymore: only
+        HOST / IN_FLIGHT pages can ever be promoted from host bytes."""
+        keep = set(self.pool.host_page_ids()) \
+            | set(self.pool.inflight_page_ids())
+        if len(self._host_kv) != len(keep):
+            self._host_kv = {p: v for p, v in self._host_kv.items()
+                             if p in keep}
+
+    def _promote_copy(self, page: int, frame: int) -> None:
+        """FetchQueue copy_fn: host bytes -> the claimed staging frame.
+        ``jnp.asarray`` starts the host->device transfer and the jitted
+        row update is dispatched asynchronously, so the copy overlaps
+        whatever the host enqueues next (the repair run's score pass)."""
+        k_np, v_np = self._host_kv[page]
+        self.cache = self._promote_write(
+            self.cache, jnp.asarray(k_np), jnp.asarray(v_np),
+            jnp.int32(frame))
+
+    def _demote_page(self, page: int) -> None:
+        """Copy-then-demote: pull the page's full-D rows out of its frame
+        into host memory, then surrender the frame. The latent sidecar
+        row stays on device, so the page keeps scoring in the approximate
+        pass; only exact attention needs it back."""
+        frame = self.pool.frame_of(page)
+        attn = self.cache["layers"]["attn"]
+        sl = slice(frame * self.page_size, (frame + 1) * self.page_size)
+        # host-sync: demotion copy-out — runs under frame pressure, never
+        # on the steady-state all-resident decode path
+        k_np, v_np = jax.device_get((attn["k"][:, sl], attn["v"][:, sl]))
+        self._host_kv[page] = (k_np, v_np)
+        self.pool.demote(page)
+
+    def _demote_for_frames(self, need: int, protect=frozenset()) -> bool:
+        """Free device frames by demoting victims in the policy's
+        ``demote_key`` order — cached-but-unreferenced pages first (their
+        frames serve nobody; their bytes keep prefix value on host), then
+        cold residents by last-use tick. Demotion always precedes
+        preemption or shedding: losing a frame costs one prefetch, losing
+        a slot costs a re-prefill. Pinned tails and ``protect`` pages are
+        never victims. True iff ``need`` frames are now free."""
+        if not self.tiered:
+            return True
+        if self.pool.free_frames >= need:
+            return True
+        lru_pos = {p: i for i, p in enumerate(self.pool.lru_page_ids())}
+        cands = [p for p in self.pool.resident_page_ids()
+                 if p not in protect and not self.pool.is_pinned(p)]
+        cands.sort(key=lambda p: self.policy.demote_key(
+            p, p in lru_pos, lru_pos.get(p, 0),
+            self._page_last_use.get(p, -1)))
+        for p in cands:
+            if self.pool.free_frames >= need:
+                break
+            self._demote_page(p)
+        return self.pool.free_frames >= need
+
+    def _promote_sync(self, page: int, protect=frozenset()) -> bool:
+        """Synchronous promote, counted — the miss-repair fallback and
+        the path for reads with no trash-masking to hide behind (prefill
+        prefix gathers, COW sources, decode write targets). Claims a
+        frame (demoting a victim if none is free), copies, completes.
+        False when no frame could be claimed this tick (injected
+        hbm_oom_on_promote, or every frame pinned/protected): the caller
+        defers its slot to the next tick — bit-safe under greedy
+        decoding, since nothing of that stream advanced."""
+        state = self.pool.tier_of(page)
+        if state == PC.IN_FLIGHT:
+            self._fetch.drain()
+            self._prune_host()
+            state = self.pool.tier_of(page)
+        if state == PC.RESIDENT:
+            return True
+        frame = self.pool.promote_begin(page)
+        if frame is None:
+            self._demote_for_frames(1, protect | {page})
+            frame = self.pool.promote_begin(page)
+        if frame is None:
+            return False
+        self._promote_copy(page, frame)
+        self.pool.promote_complete(page)
+        self.n_sync_fetches += 1
+        self._prune_host()
+        return True
+
+    def _ensure_resident(self, pages, protect=frozenset()) -> bool:
+        """Promote every off-device page in ``pages`` synchronously."""
+        if not self.tiered:
+            return True
+        todo = [p for p in pages if p is not None]
+        prot = frozenset(protect) | set(todo)
+        return all(self._promote_sync(p, prot) for p in todo)
+
+    def _repin_tail(self, slot: int) -> None:
+        """Pin the slot's current write-target (tail) page, unpinning the
+        previous one once the tail moves. The batched decode writes K/V
+        rows through the frame table; a pinned tail cannot be demoted, so
+        a write is never silently diverted to the trash frame."""
+        live = [p for p in self.slot_pages[slot] if p is not None]
+        tail = live[-1] if live else None
+        old = self._pinned_tail.get(slot)
+        if old == tail:
+            return
+        if old is not None:
+            self.pool.unpin(old)
+            self._pinned_tail.pop(slot, None)
+        if tail is not None:
+            self.pool.pin(tail)
+            self._pinned_tail[slot] = tail
+
+    def _frame_starved(self, slot: int) -> bool:
+        """True when this slot's decode-prep growth failed for *frames*
+        rather than logical pages: the pool could satisfy the growth (and
+        a pending COW copy) out of free or cached pages, so only the
+        device tier is short. Frame shortage is demotion's and deferral's
+        job; it must never preempt (DESIGN.md §13)."""
+        need = PagePool.pages_for(int(self.pos[slot]) + 1, self.page_size) \
+            - len(self.slot_pages[slot])
+        if slot in self._cow_pending:
+            need += 1
+        return self.pool.available_pages >= max(need, 0)
+
+    def _unpin_tails(self, keep) -> None:
+        """Drop the best-effort tail pins of every slot not in ``keep``.
+        Safe at any point after the pinned slot's last write landed: a
+        demotion copies the frame's rows to the host first, so unpinning
+        never loses data — it only lets the demotion policy consider
+        those frames again. Unpinned slots re-ensure and re-pin in their
+        own prep (or defer if they cannot)."""
+        for t in [t for t in self._pinned_tail if t not in keep]:
+            self.pool.unpin(self._pinned_tail.pop(t))
+
+    def _winner_pages(self, pt: np.ndarray, win: np.ndarray,
+                      sel: np.ndarray):
+        """slot -> set of logical pages this run's selection attended."""
+        out: Dict[int, set] = {}
+        for s in np.flatnonzero(sel):
+            out[int(s)] = {int(p) for p in pt[s][win[s]] if p != 0}
+        return out
+
+    def _repair_misses(self, miss: Dict[int, List[int]],
+                       winners: Dict[int, set],
+                       todo: np.ndarray) -> None:
+        """Promote the missed pages of as many slots as the device pool
+        allows, most urgent first; slots whose misses cannot all fit
+        *defer* (dropped from ``todo``; their streams re-run identically
+        next tick). Frames are granted incrementally: each repaired
+        slot's full winner set joins the protected set, so a later slot
+        can never demote an earlier one's pages and re-runs make strict
+        progress. When even the head-of-line slot cannot fit, every
+        other stream defers and unpins so it can claim the whole pool —
+        the ctor guarantees one request always fits on device."""
+        order = sorted(miss, key=lambda s: self.policy.decode_key(
+            self.slot_req[s], self._arrival[id(self.slot_req[s])],
+            int(self._last_decoded[s])))
+
+        def claim(pages, trial):
+            for p in pages:
+                if self.pool.tier_of(p) != PC.HOST:
+                    continue    # already in flight / just promoted
+                if not self._fetch.request(p):
+                    self._demote_for_frames(1, frozenset(trial))
+                    if not self._fetch.request(p):
+                        return False
+            return True
+
+        protect = set(self._pinned_tail.values())
+        head_took_all = False
+        for i, s in enumerate(order):
+            if head_took_all:
+                todo[s] = False
+                continue
+            trial = protect | winners[s]
+            if claim(miss[s], trial):
+                protect = trial
+                continue
+            if i == 0:
+                # head-of-line starvation: everything else defers, its
+                # pins lift (a deferred stream commits nothing this tick;
+                # next tick's prep re-promotes and re-pins its tail)
+                self._unpin_tails(keep={s})
+                head_took_all = True
+                trial = winners[s] | {self._pinned_tail.get(s)} - {None}
+                if claim(miss[s], trial):
+                    continue
+            todo[s] = False                 # defer this stream
+
+    def _decode_tiered(self, sel: np.ndarray, rng):
+        """Two-phase tiered decode (DESIGN.md §13): one optimistic jitted
+        run whose score pass reads only the always-resident latent
+        sidecar, then exact attention through the frame table. Slots
+        whose every attended (winner) page was resident **commit** their
+        token immediately — their run was exact. Slots that attended an
+        off-device page saw trash-frame garbage: their misses are
+        promoted through the bounded fetch queue and only *they* re-run.
+        Replay is exact because a slot's K/V row write depends only on
+        its input token and position (never on what attention read), the
+        recurrent state of re-run slots is restored from a pre-run device
+        snapshot, and positions only advance after the phase. A slot
+        whose misses cannot be promoted this tick is deferred whole.
+
+        Returns (nxt, finite, committed) over the full slot axis, with
+        ``committed`` <= the ``sel`` passed in."""
+        todo = sel.copy()
+        done = np.zeros_like(sel)
+        nxt_out = np.zeros((self.n_slots,), np.int64)
+        fin_out = np.ones((self.n_slots,), bool) if self.nan_guard \
+            else None
+        # one pre-phase snapshot of the recurrent-state leaves: every
+        # re-run restores its slots to this, so each stream's state
+        # advances exactly once no matter how many runs it took
+        snap = None
+        if self._fresh_state is not None:
+            layers = self.cache["layers"]
+            snap = {k: jax.tree.map(jnp.copy, layers[k])
+                    for k in self._fresh_state}
+        for attempt in range(_TIERED_MAX_RUNS):
+            ran = todo.copy()
+            sel_dev = jnp.asarray(todo)
+            pt = self.page_table * todo.astype(np.int32)[:, None]
+            ft = self._frame_table(pt)
+            logits, win, self.cache = self._run_decode_t(pt, ft, sel_dev)
+            if self._faults is not None:
+                bad = [s for s in np.flatnonzero(todo)
+                       if self._faults.hit("nan_logits", int(s))]
+                if bad:
+                    logits = logits.at[
+                        jnp.asarray(bad, jnp.int32)].set(jnp.nan)
+            finite_dev = jnp.isfinite(logits).all(axis=-1) \
+                if self.nan_guard else None
+            nxt = sample_next(logits, greedy=self.greedy, rng=rng,
+                              ticks=self.ticks)
+            # host-sync: the ONE batched device->host sync of the common
+            # (all-hit) tiered tick — sampled tokens, the nan-guard mask
+            # and the winner mask cross together
+            nxt_np, finite, win_np = jax.device_get(
+                (nxt, finite_dev, win))
+            winners = self._winner_pages(pt, np.asarray(win_np), todo)
+            miss = {s: [p for p in sorted(pages)
+                        if self.pool.tier_of(p) != PC.RESIDENT]
+                    for s, pages in winners.items()}
+            miss = {s: ps_ for s, ps_ in miss.items() if ps_}
+            if attempt == 0:
+                uniq = set().union(*winners.values()) if winners else set()
+                n_miss = sum(self.pool.tier_of(p) != PC.RESIDENT
+                             for p in uniq)
+                self.n_prefetch_misses += n_miss
+                self.n_prefetch_hits += len(uniq) - n_miss
+            # commit every fully-resident slot: its token is exact, its
+            # K/V row write is input-only (valid even beside garbage
+            # reads), and its advanced state must NOT be restored
+            for s in winners:
+                if s in miss:
+                    continue
+                done[s] = True
+                todo[s] = False
+                nxt_out[s] = nxt_np[s]
+                if fin_out is not None:
+                    fin_out[s] = bool(finite[s])
+                for p in winners[s]:
+                    self._page_last_use[p] = self.ticks
+            if todo.any():
+                self.n_decode_reruns += 1
+                self._repair_misses(miss, winners, todo)
+                self._fetch.drain()
+                self._prune_host()
+            # restore every slot that ran this attempt without
+            # committing — both the re-running and the just-deferred:
+            # their recurrent state advanced on garbage attention inputs
+            # and must rewind to the snapshot (committed slots keep
+            # theirs, so each stream's state advances exactly once)
+            stale = ran & ~done
+            if snap is not None and stale.any():
+                layers = self.cache["layers"]
+                for s in np.flatnonzero(stale):
+                    tree = CS.snapshot_slot_state(
+                        snap, self._fresh_state, int(s),
+                        lm.uses_scan(self.cfg))
+                    layers = CS.reset_slot_state(
+                        layers, tree, int(s), lm.uses_scan(self.cfg))
+                self.cache = {"layers": {**self.cache["layers"],
+                                         **layers}}
+            if not todo.any():
+                return nxt_out, fin_out, done
+        raise RuntimeError(
+            f"tiered decode did not converge in {_TIERED_MAX_RUNS} runs "
+            "(promotion/selection ping-pong; raise device_pages)")
+
+    def _run_decode_t(self, pt, ft, sel_dev):
+        """Tiered twin of ``_run_decode``: same kernel-failure
+        degradation ladder around the frame-table decode program."""
+        lv = sel_dev if self.has_state else None
+        on_pallas = dispatch.resolve_backend(
+            self.cfg.loki.backend) == "pallas"
+        try:
+            if (on_pallas and self._faults is not None
+                    and self._faults.hit("kernel_fail")):
+                raise FI.FaultInjected("injected fused-kernel abort")
+            return self._decode_t(self.params, self.cache, self.last_tok,
+                                  self.pos, pt, jnp.asarray(ft), lv)
+        except Exception as e:
+            if not on_pallas:
+                raise
+            dispatch.disable_backend("pallas", f"decode step failed: {e}")
+            self._build_programs()
+            self.n_backend_fallbacks += 1
+            return self._decode_t(self.params, self.cache, self.last_tok,
+                                  self.pos, pt, jnp.asarray(ft), lv)
 
     # ------------------------------------------------------------ phases
 
@@ -869,10 +1321,24 @@ class PagedServingEngine:
             return -1
         chunk = np.zeros((1, c), np.int32)
         chunk[0, :n_valid] = toks[start:start + n_valid]
-        _, self.cache = self._chunk(
-            self.params, self.cache, jnp.asarray(chunk),
-            jnp.int32(start), jnp.int32(n_valid), self.page_table[slot],
-            jnp.int32(slot))
+        if self.tiered:
+            # prefill reads the *whole* prefix exactly (no trash-masking
+            # selection to hide behind) and writes the chunk's pages:
+            # everything this slot holds must be resident, synchronously
+            held = [p for p in self.slot_pages[slot] if p is not None]
+            if not self._ensure_resident(held):
+                return -1        # frame-starved this tick: retry later
+            self._repin_tail(slot)
+            fr = self._frame_table(self.page_table[slot])
+            _, self.cache = self._chunk_t(
+                self.params, self.cache, jnp.asarray(chunk),
+                jnp.int32(start), jnp.int32(n_valid),
+                self.page_table[slot], jnp.asarray(fr), jnp.int32(slot))
+        else:
+            _, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(chunk),
+                jnp.int32(start), jnp.int32(n_valid),
+                self.page_table[slot], jnp.int32(slot))
         self._prefill_at[slot] = start + n_valid
         self.n_prefill_computed_tokens += n_valid
         self._register_ready_pages(slot)
@@ -898,16 +1364,48 @@ class PagedServingEngine:
         # the target page exists and is privately writable (COW first),
         # recycling window-dead pages so SWA slots stay within their
         # spec-table page bound
+        prepped: set = set()
         for slot in chosen:
             if not self.live[slot]:
                 continue                   # preempted by an earlier grow
             self._recycle_window(slot, int(self.pos[slot]))
             if not (self._resolve_cow(slot)
                     and self._grow_to(slot, int(self.pos[slot]) + 1)):
-                # this slot's request is the least urgent under memory
-                # pressure: vLLM's recompute policy preempts the requester
-                # itself rather than evicting a more urgent request
-                self._preempt(slot)
+                if self.tiered and self._frame_starved(slot):
+                    # demote-before-preempt (§13): the pool has logical
+                    # capacity and only device frames are short — a frame
+                    # shortage never costs a slot its pages. Pins are
+                    # best-effort and re-taken each tick, so drop the
+                    # tails pinned by slots that have not completed this
+                    # tick's prep (they re-ensure in their own iteration
+                    # or defer) and retry; if frames are still short,
+                    # defer the slot one tick instead of preempting.
+                    self._unpin_tails(keep=prepped | {slot})
+                    if not (self._resolve_cow(slot) and self._grow_to(
+                            slot, int(self.pos[slot]) + 1)):
+                        sel[slot] = False
+                        continue
+                else:
+                    # this slot's request is the least urgent under memory
+                    # pressure: vLLM's recompute policy preempts the
+                    # requester itself rather than evicting a more urgent
+                    # request
+                    self._preempt(slot)
+                    continue
+            if self.tiered:
+                # this step writes a K/V row into the tail page: promote
+                # it if demoted, pin it so no repair-loop demotion diverts
+                # the write to the trash frame. Frame-starved -> defer the
+                # slot one tick (bit-safe: nothing of its stream advances)
+                held = [p for p in self.slot_pages[slot] if p is not None]
+                if held:
+                    if not self._ensure_resident([held[-1]],
+                                                 frozenset(held)):
+                        sel[slot] = False
+                        continue
+                    self._repin_tail(slot)
+                    self._page_last_use[held[-1]] = self.ticks
+                prepped.add(slot)
         sel &= self.live
         if not sel.any():
             return False
@@ -915,24 +1413,30 @@ class PagedServingEngine:
         # slots (idle, mid-prefill, live-but-over-budget) must land in the
         # trash page, not at their current position — and their StateSlot
         # components must not advance (``live`` mask)
-        sel_dev = jnp.asarray(sel)
-        pt = self.page_table * sel.astype(np.int32)[:, None]
-        logits, self.cache = self._run_decode(pt, sel_dev)
+        if self.tiered:
+            nxt_np, finite, sel = self._decode_tiered(sel, rng)
+            if not sel.any():
+                return False    # every stream deferred to the next tick
+        else:
+            sel_dev = jnp.asarray(sel)
+            pt = self.page_table * sel.astype(np.int32)[:, None]
+            logits, self.cache = self._run_decode(pt, sel_dev)
+            if self._faults is not None:
+                bad = [s for s in np.flatnonzero(sel)
+                       if self._faults.hit("nan_logits", int(s))]
+                if bad:
+                    logits = logits.at[jnp.asarray(bad, jnp.int32)].set(
+                        jnp.nan)
+            finite_dev = jnp.isfinite(logits).all(axis=-1) \
+                if self.nan_guard else None
+            nxt = sample_next(logits, greedy=self.greedy, rng=rng,
+                              ticks=self.ticks)
+            # host-sync: the ONE batched device->host sync of the decode
+            # tick — sampled tokens (and the nan-guard mask) must reach
+            # Python to drive per-request lifecycle; everything else
+            # stays host-side
+            nxt_np, finite = jax.device_get((nxt, finite_dev))
         self.pos += sel.astype(np.int32)
-        if self._faults is not None:
-            bad = [s for s in np.flatnonzero(sel)
-                   if self._faults.hit("nan_logits", int(s))]
-            if bad:
-                logits = logits.at[jnp.asarray(bad, jnp.int32)].set(
-                    jnp.nan)
-        finite_dev = jnp.isfinite(logits).all(axis=-1) \
-            if self.nan_guard else None
-        nxt = sample_next(logits, greedy=self.greedy, rng=rng,
-                          ticks=self.ticks)
-        # host-sync: the ONE batched device->host sync of the decode tick
-        # — sampled tokens (and the nan-guard mask) must reach Python to
-        # drive per-request lifecycle; everything else stays host-side
-        nxt_np, finite = jax.device_get((nxt, finite_dev))
         self._last_decoded[sel] = self.ticks
         for slot in range(self.n_slots):
             req = self.slot_req[slot]
@@ -1094,6 +1598,21 @@ class PagedServingEngine:
             "n_quarantined": self.n_quarantined,
             "n_backend_fallbacks": self.n_backend_fallbacks,
         }
+        if self.tiered:
+            looked = self.n_prefetch_hits + self.n_prefetch_misses
+            out["tiered"] = {
+                "device_pages": self.pool.device_pages,
+                "n_demoted": self.pool.n_demoted,
+                "n_promoted": self.pool.n_promoted,
+                "n_prefetch_hits": self.n_prefetch_hits,
+                "n_prefetch_misses": self.n_prefetch_misses,
+                "prefetch_hit_rate": (self.n_prefetch_hits / looked
+                                      if looked else 1.0),
+                "n_sync_fetches": self.n_sync_fetches,
+                "n_fetches_issued": self._fetch.n_issued,
+                "n_sync_fallbacks": self._fetch.n_sync_fallback,
+                "n_decode_reruns": self.n_decode_reruns,
+            }
         if self._faults is not None:
             out["faults"] = dict(self._faults.counts)
         return out

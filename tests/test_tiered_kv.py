@@ -1,0 +1,241 @@
+"""Tiered KV page pool: host-offloaded full-D pages with Loki-guided
+async prefetch (DESIGN.md §13).
+
+Locks the tier from five sides: greedy bit-identity of a tiered pool vs
+the single-tier engine across families x Loki policies at the *minimum*
+legal device pool (maximum demotion traffic); a context whose total page
+footprint exceeds the device tier still completing; the
+demote-before-preempt ordering (frame pressure demotes, never preempts);
+the prefetch hit/miss and sync-fallback counters; and the PagePool tier
+state machine itself (illegal transitions raise). The chaos run drives
+the two tier fault sites — ``dma_timeout`` and ``hbm_oom_on_promote`` —
+with the invariant auditor on every tick and DONE outputs bit-identical
+to the fault-free run.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import faults as FI
+from repro.serving import paged_cache as PC
+from repro.serving.engine import Request
+from repro.serving.scheduler import PagedServingEngine
+
+
+def _cfg(arch, policy="loki_block"):
+    return get_smoke_config(arch).with_policy(
+        policy, k_f=0.5, d_f=0.5, block_size=8, local_window=4, min_k=4)
+
+
+def _stream(cfg, n=4, plen=18, max_new=10):
+    rng = np.random.default_rng(11)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab,
+                                        size=plen).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _run(params, cfg, reqs, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("smax", 48)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("audit", True)
+    eng = PagedServingEngine(params, cfg, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(2000)
+    assert all(r.done for r in reqs)
+    return [r.out for r in reqs], eng
+
+
+def _min_device_pages(eng):
+    """Smallest legal device tier: one full request plus one frame."""
+    return eng._req_pages_hard + 1
+
+
+# ===================================================================
+# bit-identity: tiered vs single-tier
+# ===================================================================
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "mixtral-8x22b",
+                                  "hymba-1.5b"])
+@pytest.mark.parametrize("policy", ["loki", "loki_block"])
+def test_tiered_greedy_bit_identity(arch, policy):
+    """The minimum legal device pool — maximum demotion/promotion churn —
+    must reproduce the single-tier stream token for token."""
+    cfg = _cfg(arch, policy)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    base, e0 = _run(params, cfg, _stream(cfg))
+    tiered, e1 = _run(params, cfg, _stream(cfg),
+                      device_pages=_min_device_pages(e0), max_inflight=2)
+    assert tiered == base, "tiered pool changed greedy outputs"
+    st = e1.stats()["tiered"]
+    assert st["n_demoted"] > 0, "minimum device pool never demoted"
+    assert st["n_promoted"] > 0
+
+
+def test_context_exceeding_device_pool_completes():
+    """Total logical footprint well beyond the device tier (the
+    'context larger than HBM' run): more slots than the device pool can
+    hold resident at once still drains, bit-identically."""
+    cfg = _cfg("llama2-7b", "loki")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    reqs = lambda: _stream(cfg, n=6, plen=20, max_new=12)
+    base, e0 = _run(params, cfg, reqs(), n_slots=4, smax=64)
+    dev = _min_device_pages(e0)
+    tiered, e1 = _run(params, cfg, reqs(), n_slots=4, smax=64,
+                      device_pages=dev, max_inflight=2)
+    assert e1.pool.n_pages > dev, "pressure never materialized"
+    assert tiered == base
+    assert e1.stats()["tiered"]["n_demoted"] > 0
+
+
+def test_per_layer_ranks_tiered_bit_identity():
+    """Per-layer latent ranks (Loki §4.2) ride through the tiered pool:
+    the sidecar keeps each layer's own rank and selection stays exact."""
+    cfg = _cfg("llama2-7b", "loki_block")
+    hd = cfg.resolved_head_dim
+    cfg = cfg.with_ranks(tuple(hd if i % 2 == 0 else hd // 2
+                               for i in range(cfg.n_layers)))
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    base, e0 = _run(params, cfg, _stream(cfg))
+    tiered, e1 = _run(params, cfg, _stream(cfg),
+                      device_pages=_min_device_pages(e0))
+    assert tiered == base
+    assert e1.stats()["tiered"]["n_demoted"] > 0
+
+
+# ===================================================================
+# policy: demotion precedes preemption; prefetch counters
+# ===================================================================
+
+def test_demotion_before_preemption():
+    """Frame pressure at the minimum device pool is absorbed entirely by
+    demotion + deferral: the logical pool has room for every request, so
+    nothing may be preempted (losing a frame costs one prefetch; losing
+    a slot would cost a re-prefill and, under Loki, exactness)."""
+    cfg = _cfg("llama2-7b", "loki")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    _, eng = _run(params, cfg, _stream(cfg, n=6), n_slots=4,
+                  device_pages=7, smax=48)
+    st = eng.stats()["tiered"]
+    assert st["n_demoted"] > 0
+    assert eng.n_preempted == 0, \
+        "frame shortage must demote/defer, never preempt"
+
+
+def test_prefetch_hit_and_miss_counters():
+    """Counter semantics: a device pool covering every page scores pure
+    hits; the minimum pool records misses, promotions through the fetch
+    queue, and a hit rate strictly between 0 and 1."""
+    cfg = _cfg("llama2-7b", "loki_block")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    _, full = _run(params, cfg, _stream(cfg),
+                   device_pages=None)  # single-tier: no tiered stats
+    assert "tiered" not in full.stats()
+
+    _, roomy = _run(params, cfg, _stream(cfg),
+                    device_pages=1 + 2 * full._req_pages_hard)
+    st = roomy.stats()["tiered"]
+    assert st["n_prefetch_hits"] > 0 and st["n_prefetch_misses"] == 0
+    assert st["prefetch_hit_rate"] == 1.0
+    assert st["n_sync_fetches"] == 0
+
+    _, tight = _run(params, cfg, _stream(cfg),
+                    device_pages=_min_device_pages(full))
+    st = tight.stats()["tiered"]
+    assert st["n_prefetch_misses"] > 0
+    assert st["n_promoted"] > 0
+    assert 0.0 < st["prefetch_hit_rate"] < 1.0
+
+
+# ===================================================================
+# PagePool tier state machine
+# ===================================================================
+
+def test_pool_tier_state_machine_raises():
+    pool = PC.PagePool(8, 4, device_pages=5, max_inflight=2)
+    pages = pool.alloc(4)
+    assert pages is not None
+    p = pages[0]
+    assert pool.tier_of(p) == PC.RESIDENT
+
+    frame = pool.demote(p)
+    assert frame >= 0 and pool.tier_of(p) == PC.HOST
+    with pytest.raises(ValueError, match="double-demote"):
+        pool.demote(p)
+
+    got = pool.promote_begin(p, faultable=False)
+    assert got is not None and pool.tier_of(p) == PC.IN_FLIGHT
+    with pytest.raises(ValueError, match="in-flight"):
+        pool.free([p])
+    pool.promote_complete(p)
+    assert pool.tier_of(p) == PC.RESIDENT
+    with pytest.raises(ValueError):
+        pool.promote_begin(p)          # promote of a RESIDENT page
+    with pytest.raises(ValueError):
+        pool.promote_complete(p)       # complete without begin
+
+    pool.pin(p)
+    with pytest.raises(ValueError, match="pinned"):
+        pool.demote(p)
+    pool.unpin(p)
+    with pytest.raises(ValueError, match="unpinned"):
+        pool.unpin(p)
+
+    q = pages[1]
+    pool.demote(q)
+    with pytest.raises(ValueError, match="non-resident"):
+        pool.pin(q)
+
+    # single-tier pools have no tier surface at all
+    flat = PC.PagePool(8, 4)
+    r = flat.alloc(1)[0]
+    with pytest.raises(ValueError, match="single-tier"):
+        flat.demote(r)
+    with pytest.raises(ValueError, match="single-tier"):
+        flat.promote_begin(r)
+
+
+def test_pool_inflight_budget_bounds_fetches():
+    pool = PC.PagePool(8, 4, device_pages=5, max_inflight=1)
+    pages = pool.alloc(3)
+    for p in pages:
+        pool.demote(p)
+    a = pool.promote_begin(pages[0], faultable=False)
+    assert a is not None
+    assert pool.promote_begin(pages[1], faultable=False) is None, \
+        "max_inflight=1 must refuse a second outstanding fetch"
+    pool.promote_complete(pages[0])
+    assert pool.promote_begin(pages[1], faultable=False) is not None
+
+
+# ===================================================================
+# chaos: the tier fault sites
+# ===================================================================
+
+def test_tiered_chaos_fault_sites_bit_identical():
+    """``dma_timeout`` (an in-flight fetch never lands -> sync fallback)
+    and ``hbm_oom_on_promote`` (staging alloc fails -> retry/defer) under
+    the per-tick auditor: every DONE output matches the fault-free
+    tiered run bit for bit."""
+    cfg = _cfg("llama2-7b", "loki_block")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    truth, e0 = _run(params, cfg, _stream(cfg, n=5), n_slots=3,
+                     device_pages=9, smax=48)
+
+    plan = FI.FaultPlan.parse(
+        "seed=5,dma_timeout=0.5,hbm_oom_on_promote=0.5")
+    rs = _stream(cfg, n=5)
+    out, e1 = _run(params, cfg, rs, n_slots=3, device_pages=9, smax=48,
+                   faults=plan)
+    assert out == truth, "tier faults changed DONE outputs"
+    assert plan.counts.get("dma_timeout", 0) > 0
+    assert plan.counts.get("hbm_oom_on_promote", 0) > 0
+    st = e1.stats()["tiered"]
+    assert st["n_sync_fallbacks"] > 0, \
+        "dma_timeout never forced the synchronous fallback"
