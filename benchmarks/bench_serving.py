@@ -144,28 +144,50 @@ def _cache_bytes(cfg, rows):
     return 2 * cfg.n_layers * rows * cfg.n_kv_heads * hd * 4  # f32 K+V
 
 
-def _decode_read_bytes(cfg, n_toks, rows_per_tok):
+def _decode_read_bytes(cfg, n_toks, rows_per_tok, rows_full=None):
     """Estimated decode-phase HBM reads (``--profile device``), split by
-    pass. A full-attention policy scans every K+V row once per token per
-    layer. Loki policies do NOT: the score pass touches only the
-    leading-d latent slice of K (d per layer from the spec table), then
-    exact attention gathers just the top-k winner rows at full storage
-    width — so the old single full-scan number over-counted the score
-    read by ~D/d and is kept only as the ``full_scan_equiv`` yardstick.
-    In a tiered pool the score slice is the always-resident sidecar:
-    ``score_pass`` bytes are exactly the resident-tier read."""
+    pass. ``rows_per_tok`` is the live-page row count a decode token
+    actually streams (held pages * page_size — recycled pages left the
+    table); ``rows_full`` is the un-recycled smax rectangle the legacy
+    estimate charged, kept as the ``full_scan_equiv`` yardstick.
+
+    ``full``/``exact_topk`` decode now streams K/V page-by-page through
+    the scalar-prefetched table, so both are charged live-page reads per
+    *generated* (packed-slot) token — never ``ticks * n_slots`` rows; a
+    masked tick's idle rows all read the single trash page, which stays
+    HBM-resident. ``exact_topk`` splits like Loki: its exact score pass
+    reads every live K row once, then only the top-k winners' V rows are
+    gathered. Loki policies additionally shrink the score read to the
+    leading-d latent slice of K (the resident sidecar in a tiered
+    pool)."""
     widths = [w for w in CS.layer_k_widths(cfg) if w]
-    full_scan = n_toks * rows_per_tok * cfg.n_kv_heads * 4 \
-        * sum(2 * w for w in widths)                    # f32 K+V all rows
-    if cfg.attn_policy() not in ("loki", "loki_block"):
-        return {"est_decode_read_bytes_ub": full_scan}
+    per_row = cfg.n_kv_heads * 4                        # f32 per K dim
+    full_scan = n_toks * (rows_full or rows_per_tok) * per_row \
+        * sum(2 * w for w in widths)                    # K+V, smax rect
+    live_scan = n_toks * rows_per_tok * per_row \
+        * sum(2 * w for w in widths)                    # K+V, live pages
+    pol = cfg.attn_policy()
+    if pol == "full":
+        return {"est_decode_read_bytes_ub": live_scan,
+                "est_decode_read_bytes": {
+                    "live_page_scan": live_scan,
+                    "full_scan_equiv": full_scan}}
+    k_rows = max(cfg.loki.min_k, int(cfg.loki.k_f * rows_per_tok))
+    if pol == "exact_topk":
+        score = n_toks * rows_per_tok * per_row * sum(widths)
+        attend = n_toks * min(k_rows, rows_per_tok) * per_row \
+            * sum(widths)                               # winners' V rows
+        return {"est_decode_read_bytes_ub": score + attend,
+                "est_decode_read_bytes": {
+                    "score_pass": score,
+                    "attend_pass_ub": attend,
+                    "full_scan_equiv": full_scan}}
     d = CS.latent_score_width(cfg)
     score_w = sum(min(d, w) for w in widths)            # K slice only
-    k_rows = max(cfg.loki.min_k, int(cfg.loki.k_f * rows_per_tok))
     attend = n_toks * min(k_rows, rows_per_tok) \
-        * cfg.n_kv_heads * 4 * sum(2 * w for w in widths)
+        * per_row * sum(2 * w for w in widths)
     return {"est_decode_read_bytes": {
-        "score_pass": n_toks * rows_per_tok * cfg.n_kv_heads * 4 * score_w,
+        "score_pass": n_toks * rows_per_tok * per_row * score_w,
         "attend_pass_ub": attend,
         "full_scan_equiv": full_scan,
         "score_reduction_vs_full_k":
@@ -414,6 +436,71 @@ def tiered_workload(data, *, n_slots, smax, page_size, chunk, max_new,
     return rows
 
 
+def packed_workload(data, *, n_slots, smax, page_size, chunk, max_new):
+    """Gather-packed decode acceptance (DESIGN.md §14): the identical
+    exact_topk stream at **25% occupancy** (n_slots//4 concurrent
+    requests in an n_slots-wide engine) through the masked full-width
+    engine (``packed=False``) and the gather-packed one. Greedy outputs
+    must agree token for token — asserted, not measured. Reports tok/s
+    for both (packed decode runs a power-of-two bucket of live rows per
+    tick instead of all n_slots), plus the exact-policy decode read-bytes
+    estimate before (legacy smax * batch rectangle) and after (live-page
+    rows per generated token)."""
+    params, _ = common.trained_params()
+    cfg = common.policy_cfg("exact_topk")
+    occ = max(n_slots // 4, 1)
+
+    rows = {}
+    engines = {}
+    for mode, packed in (("masked", False), ("packed", True)):
+        eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                                 page_size=page_size, prefill_chunk=chunk,
+                                 packed=packed)
+        # warm-up with the identical stream shape: the timed run must
+        # visit only buckets (live-count powers of two) the warm-up
+        # already compiled, or the compile lands inside the clock
+        _drain(eng, _requests(data, occ, max_new, vocab=cfg.vocab))
+        reqs = _requests(data, occ, max_new, vocab=cfg.vocab)
+        r = _drain(eng, reqs)
+        st = eng.stats()["packed"]
+        rows[mode] = {
+            "tok_per_s": r["tok_per_s"],
+            "generated_tokens": r["generated_tokens"],
+            "ticks": r["ticks"],
+            "n_packed_ticks": st["n_packed_ticks"],
+            "n_masked_ticks": st["n_masked_ticks"],
+            "rows_saved": st["n_rows_saved"],
+        }
+        engines[mode] = eng
+        rows[mode + "_out"] = [list(map(int, q.out)) for q in reqs]
+
+    assert rows["masked_out"] == rows["packed_out"], \
+        "gather-packed decode changed greedy outputs"
+    out_m, out_p = rows.pop("masked_out"), rows.pop("packed_out")
+    eng = engines["packed"]
+    est = _decode_read_bytes(cfg, rows["packed"]["generated_tokens"],
+                             eng.peak_slot_pages * page_size,
+                             rows_full=smax)
+    rows["decode_read_bytes_before"] = \
+        est["est_decode_read_bytes"]["full_scan_equiv"]
+    rows["decode_read_bytes_after"] = est["est_decode_read_bytes_ub"]
+    rows["decode_read_bytes_reduction"] = round(
+        rows["decode_read_bytes_before"]
+        / max(rows["decode_read_bytes_after"], 1), 2)
+    rows["occupancy"] = round(occ / n_slots, 3)
+    rows["outputs_bit_identical"] = True
+    rows["speedup_packed_vs_masked"] = round(
+        rows["packed"]["tok_per_s"]
+        / max(rows["masked"]["tok_per_s"], 1e-9), 3)
+    print(f"[packed] {occ}/{n_slots} slots live: packed "
+          f"{rows['packed']['tok_per_s']} tok/s vs masked "
+          f"{rows['masked']['tok_per_s']} "
+          f"({rows['speedup_packed_vs_masked']}x), exact-policy decode "
+          f"bytes {rows['decode_read_bytes_reduction']}x down, "
+          "bit-identical")
+    return rows
+
+
 def chaos_workload(params, cfg, data, *, n_slots, smax, page_size, chunk,
                    max_new, n_req, spec=""):
     """Robustness acceptance: one stream, fault-free then under a seeded
@@ -511,7 +598,7 @@ def main():
                          + ",".join(FAMILY_ARCHS))
     ap.add_argument("--workload", default="standard",
                     choices=["standard", "shared-prefix", "layout",
-                             "chaos", "donation", "tiered"],
+                             "chaos", "donation", "tiered", "packed"],
                     help="shared-prefix: N requests over one long system "
                          "prompt, prefix cache on vs off (hit rate, TTFT, "
                          "tok/s). layout: the same stream under each "
@@ -521,8 +608,11 @@ def main():
                          "(DESIGN.md §11 acceptance). tiered: the same "
                          "stream single-tier vs a half-sized device pool "
                          "with host offload + Loki-guided prefetch "
-                         "(DESIGN.md §13 acceptance). All merge into the "
-                         "existing JSON report")
+                         "(DESIGN.md §13 acceptance). packed: the same "
+                         "exact_topk stream at 25%% occupancy, masked "
+                         "full-width vs gather-packed decode (DESIGN.md "
+                         "§14 acceptance). All merge into the existing "
+                         "JSON report")
     ap.add_argument("--faults", default="",
                     help="FaultPlan spec for --workload chaos "
                          f"(default: {DEFAULT_CHAOS})")
@@ -603,6 +693,15 @@ def main():
         print(f"\nwrote {args.out}")
         return
 
+    if args.workload == "packed":
+        rows = packed_workload(
+            data, n_slots=n_slots, smax=smax, page_size=page_size,
+            chunk=chunk, max_new=max_new)
+        _write_merged(args.out, {"packed": rows})
+        print(json.dumps({"packed": rows}, indent=2))
+        print(f"\nwrote {args.out}")
+        return
+
     if args.workload == "chaos":
         rows = chaos_workload(
             params, cfg, data, n_slots=n_slots, smax=smax,
@@ -632,7 +731,8 @@ def main():
             rows_per_tok = (smax if eng_ is None
                             else eng_.peak_slot_pages * page_size)
             row.update(_decode_read_bytes(
-                cfg, row["generated_tokens"], rows_per_tok))
+                cfg, row["generated_tokens"], rows_per_tok,
+                rows_full=smax))
 
     # tight pool: the structural win — the same stream served from half the
     # pages (but always >= one full request), via continuous recycling

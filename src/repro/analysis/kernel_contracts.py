@@ -189,6 +189,20 @@ def _check_cell(path: str, entries: Dict[str, registry.KernelEntry], *,
                              block_size=bs, page_table=table,
                              page_size=ps, **scales),
                (1, 1, g, dim))
+    if "paged_full_decode" in entries:
+        ffn = entries["paged_full_decode"].fn
+        expect("paged_full_decode(paged)",
+               lambda: _eval(ffn, q, k_pool, v_pool, cur,
+                             block_size=bs, page_table=table,
+                             page_size=ps, **scales),
+               (1, 1, g, dim))
+    if "fused_exact_topk_decode" in entries:
+        efn = entries["fused_exact_topk_decode"].fn
+        expect("fused_exact_topk_decode(paged)",
+               lambda: _eval(efn, q, k_pool, v_pool, cur, k_blocks=kb,
+                             block_size=bs, page_table=table,
+                             page_size=ps, **scales),
+               (1, 1, g, dim))
 
     # contiguous-cache entry points carry no page/scale contract — one
     # representative eval per (plan, dtype) at full key width suffices

@@ -179,6 +179,13 @@ class ModelConfig:
     # dims at write time, which is self-consistent truncation (zeroed dims
     # contribute nothing to q̂·k̂).
     page_ranks: Optional[Tuple[int, ...]] = None
+    # per-layer sliding windows for architectures that mix SWA and
+    # full-attention layers (mixtral-SWA interleave, hymba's global/local
+    # split). Entry i is layer i's window; 0 = full attention. None =
+    # ``sliding_window`` uniformly. Layers with equal windows form one
+    # page-table group (cache_spec.table_groups): window groups recycle
+    # pages per layer while the full-attention group shares one table.
+    window_layers: Optional[Tuple[int, ...]] = None
     # decode attention policy: full|loki|loki_block|exact_topk|pcaattn|h2o
     policy: str = "full"
     # hybrid: which layers are attention (hymba runs attn ∥ mamba inside a block)
@@ -237,6 +244,22 @@ class ModelConfig:
                                       rank=max(ranks))
         return dataclasses.replace(self, page_layout=lay,
                                    page_ranks=ranks)
+
+    def layer_window(self, i: int) -> int:
+        """Effective sliding window of layer ``i`` (0 = full attention)."""
+        if self.window_layers is not None:
+            return self.window_layers[i]
+        return self.sliding_window
+
+    def with_window_layers(self, windows) -> "ModelConfig":
+        """Per-layer sliding windows (0 entries = full-attention layers)."""
+        windows = tuple(int(w) for w in windows)
+        if len(windows) != self.n_layers:
+            raise ValueError(f"window_layers needs {self.n_layers} entries, "
+                             f"got {len(windows)}")
+        if any(w < 0 for w in windows):
+            raise ValueError("window_layers entries must be >= 0")
+        return dataclasses.replace(self, window_layers=windows)
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

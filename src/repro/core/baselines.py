@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import LokiConfig
 from repro.core.attention import (NEG_INF, attend_selected, decode_full,
-                                  decode_scores, gather_heads, length_mask)
+                                  decode_scores, gather_heads, length_mask,
+                                  window_mask)
 from repro.core.loki import select_topk
 
 
@@ -31,6 +32,61 @@ def exact_topk_decode(q_rope, k_cache, v_cache, cur_len, cfg: LokiConfig,
     v_sel = gather_heads(v_cache, idx)
     return attend_selected(q_rope, k_sel, v_sel, valid,
                            logit_scale=logit_scale)
+
+
+def exact_topk_decode_block(q, k_cache, v_cache, cur_len, cfg: LokiConfig,
+                            *, logit_scale=None, sliding_window: int = 0,
+                            group_select: bool = True,
+                            page_table=None, page_size: int = 0,
+                            k_scale=None, v_scale=None):
+    """Block-granular exact top-k (TPU-native formulation; the jnp oracle
+    for ``kernels/fused_decode.fused_exact_topk_decode``).
+
+    Selection runs over per-block maxima of the *exact* full-width scores
+    — the same adaptation ``loki.loki_decode_block`` makes for the
+    approximate path, minus the d-slice and minus recency inflation (the
+    baseline has neither). ``group_select`` shares one block selection
+    across the GQA group, the fused kernel's semantics. With
+    ``page_table``/``page_size`` the caches are the serving engine's
+    shared pools (R, Hkv, ·) and this reference gathers the logical view
+    through the same table the kernel indexes."""
+    if page_table is not None:
+        from repro.serving.paged_cache import gather_logical_dq
+        k_cache = gather_logical_dq(k_cache, k_scale, page_table, page_size)
+        v_cache = gather_logical_dq(v_cache, v_scale, page_table, page_size)
+    smax = k_cache.shape[1]
+    bs = cfg.block_size
+    assert smax % bs == 0, "cache length must be a multiple of block_size"
+    n_blocks = smax // bs
+
+    scores = decode_scores(q, k_cache, logit_scale=logit_scale)
+    m = length_mask(smax, cur_len)
+    if sliding_window:
+        m = m & window_mask(smax, cur_len, sliding_window)
+    scores = jnp.where(m, scores, NEG_INF)
+    blk = scores.reshape(*scores.shape[:-1], n_blocks, bs).max(-1)
+
+    k_blocks = max(int(cfg.k_f * n_blocks), 1)
+    if group_select:
+        blk_g = blk.max(axis=2, keepdims=True)          # (B,Hkv,1,nb)
+        _, bidx = jax.lax.top_k(blk_g, k_blocks)        # (B,Hkv,1,kb)
+        bidx = jnp.broadcast_to(bidx, (*blk.shape[:-1], k_blocks))
+        taken = jnp.take_along_axis(blk_g, bidx[:, :, :1], axis=-1)
+        bvalid = jnp.broadcast_to(taken > NEG_INF / 2, bidx.shape)
+    else:
+        _, bidx = jax.lax.top_k(blk, k_blocks)          # (B,Hkv,G,kb)
+        taken = jnp.take_along_axis(blk, bidx, axis=-1)
+        bvalid = taken > NEG_INF / 2
+
+    tok = bidx[..., None] * bs + jnp.arange(bs)
+    idx = tok.reshape(*tok.shape[:-2], k_blocks * bs)
+    valid = jnp.broadcast_to(bvalid[..., None], tok.shape)
+    valid = valid.reshape(idx.shape)
+    valid = valid & (jnp.take_along_axis(scores, idx, axis=-1) > NEG_INF / 2)
+
+    k_sel = gather_heads(k_cache, idx)
+    v_sel = gather_heads(v_cache, idx)
+    return attend_selected(q, k_sel, v_sel, valid, logit_scale=logit_scale)
 
 
 def pcaattn_decode(q_rope, k_hat_cache_d, v_cache, cur_len, proj,

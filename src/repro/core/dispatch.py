@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LokiConfig
-from repro.core import loki
+from repro.core import attention as attn
+from repro.core import baselines, loki
 from repro.kernels import ops, tuning
 
 BACKENDS = ("auto", "pallas", "xla")
@@ -179,6 +180,142 @@ def loki_block_decode(q_rope, k_hat_cache, v_cache, cur_len, proj,
              block_size=plan.block_size, scale=logit_scale,
              local_window=cfg.local_window, sliding_window=sliding_window,
              interpret=interpret, **pargs, **qargs)
+    return out.reshape(b, h, dim)
+
+
+def _gathered(k_cache, v_cache, page_table, page_size, k_scale, v_scale):
+    """Logical (B,Smax,Hkv,·) views of possibly-pooled caches."""
+    if page_table is None:
+        return k_cache, v_cache
+    from repro.serving.paged_cache import gather_logical_dq
+    return (gather_logical_dq(k_cache, k_scale, page_table, page_size),
+            gather_logical_dq(v_cache, v_scale, page_table, page_size))
+
+
+def full_paged_decode(q, k_cache, v_cache, cur_len, *, backend: str = "auto",
+                      block_size: int = 128, sliding_window: int = 0,
+                      logit_scale=None, page_table=None, page_size: int = 0,
+                      k_scale=None, v_scale=None,
+                      interpret: Optional[bool] = None):
+    """Full-attention decode through the configured backend.
+
+    q (B,H,W) queries already in the storage basis (W <= D the stored key
+    width); k_cache (B,Smax,Hkv,W) or pooled (R,Hkv,W) with ``page_table``;
+    v_cache (·,Hkv,D). Returns (B,H,D).
+
+    backend="xla" is the bit-preserved reference (gather the logical view,
+    ``attention.decode_full``); "pallas" streams live blocks through the
+    page table (gather_attention.paged_full_decode) — same math, online
+    softmax, so parity is within float tolerance. Shapes with no viable
+    tiling fall back to the jnp path."""
+    backend = resolve_backend(backend)
+    paged = page_table is not None
+    b, h = q.shape[0], q.shape[1]
+    if paged:
+        n_kv, kd = k_cache.shape[-2], k_cache.shape[-1]
+        smax = page_table.shape[1] * page_size
+    else:
+        _, smax, n_kv, kd = k_cache.shape
+    dim = v_cache.shape[-1]
+    g = h // n_kv
+    if logit_scale is None and kd < dim:
+        logit_scale = dim ** -0.5
+
+    plan = None
+    if backend == "pallas":
+        plan = tuning.plan_full_decode(
+            smax, dim, g, kd, block_size,
+            itemsize=jnp.dtype(k_cache.dtype).itemsize)
+        if plan is not None and paged and page_size % plan.block_size:
+            plan = None
+    if plan is None:
+        kc, vc = _gathered(k_cache, v_cache, page_table, page_size,
+                           k_scale, v_scale)
+        return attn.decode_full(q, kc, vc, cur_len,
+                                sliding_window=sliding_window,
+                                logit_scale=logit_scale)
+    qg = q.reshape(b, n_kv, g, kd)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = ops.full_decode(qg, k_cache, v_cache, cur,
+                          block_size=plan.block_size, scale=logit_scale,
+                          sliding_window=sliding_window,
+                          page_table=page_table, page_size=page_size,
+                          k_scale=k_scale, v_scale=v_scale,
+                          interpret=interpret)
+    return out.reshape(b, h, dim)
+
+
+def exact_topk_paged_decode(q, k_cache, v_cache, cur_len, cfg: LokiConfig,
+                            *, logit_scale=None, page_table=None,
+                            page_size: int = 0, k_scale=None, v_scale=None,
+                            interpret: Optional[bool] = None):
+    """Exact-top-k decode through the configured backend.
+
+    backend="xla" is the bit-preserved token-granular reference
+    (``baselines.exact_topk_decode`` over the gathered logical view);
+    "pallas" fuses the exact score pass with block top-k the same way the
+    Loki kernel fuses its approximate pass (score width = full stored key
+    width, group-shared selection — ``baselines.exact_topk_decode_block``
+    is the jnp oracle and the fallback for kernel-shaped configurations
+    no plan covers)."""
+    backend = resolve_backend(cfg.backend)
+    paged = page_table is not None
+    b, h = q.shape[0], q.shape[1]
+    if paged:
+        n_kv, kd = k_cache.shape[-2], k_cache.shape[-1]
+        smax = page_table.shape[1] * page_size
+    else:
+        _, smax, n_kv, kd = k_cache.shape
+    dim = v_cache.shape[-1]
+    g = h // n_kv
+    if logit_scale is None and kd < dim:
+        logit_scale = dim ** -0.5
+    pargs = dict(page_table=page_table, page_size=page_size,
+                 k_scale=k_scale, v_scale=v_scale)
+
+    if backend == "xla":
+        kc, vc = _gathered(k_cache, v_cache, page_table, page_size,
+                           k_scale, v_scale)
+        return baselines.exact_topk_decode(q, kc, vc, cur_len, cfg,
+                                           logit_scale=logit_scale)
+    # the exact score pass reads the full stored width: plan with d = kd
+    plan = tuning.plan_decode(smax, dim, g, kd, cfg.block_size,
+                              itemsize=jnp.dtype(k_cache.dtype).itemsize)
+    if plan is not None and paged and page_size % plan.block_size:
+        plan = None
+    if plan is None:
+        if smax % cfg.block_size == 0 and (
+                not paged or page_size % cfg.block_size == 0):
+            # kernel-shaped fallback: keep the block/group-shared semantics
+            return baselines.exact_topk_decode_block(
+                q, k_cache, v_cache, cur_len, cfg, logit_scale=logit_scale,
+                group_select=True, **pargs)
+        kc, vc = _gathered(k_cache, v_cache, page_table, page_size,
+                           k_scale, v_scale)
+        return baselines.exact_topk_decode(q, kc, vc, cur_len, cfg,
+                                           logit_scale=logit_scale)
+
+    nb = smax // plan.block_size
+    k_blocks = max(int(cfg.k_f * nb), 1)
+    qg = q.reshape(b, n_kv, g, kd)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if plan.variant == "fused":
+        out = ops.exact_topk_decode_fused(
+            qg, k_cache, v_cache, cur, k_blocks=k_blocks,
+            block_size=plan.block_size, scale=logit_scale,
+            interpret=interpret, **pargs)
+    else:
+        # the two-kernel pair at d = kd scores exactly — select_blocks'
+        # "approximate" stream reads the whole key, so this is the same
+        # selection as the fused variant
+        out = ops.loki_decode_two_kernel(
+            qg, k_cache, v_cache, cur, d=kd, k_blocks=k_blocks,
+            block_size=plan.block_size, scale=logit_scale,
+            local_window=0, sliding_window=0, interpret=interpret, **pargs)
     return out.reshape(b, h, dim)
 
 

@@ -322,6 +322,83 @@ def fused_loki_decode(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
     return out
 
 
+@kernel_entry(scalar_prefetch=("cur_len", "page_table"),
+              smem_sidecars=("k_scale", "v_scale"),
+              paged_operand="page_table", grid="(B, Hkv)")
+def fused_exact_topk_decode(q_hat, k_hat, v, cur_len, *, k_blocks: int,
+                            block_size: int = 128, scale=None,
+                            sliding_window: int = 0,
+                            page_table=None, page_size: int = 0,
+                            k_scale=None, v_scale=None,
+                            interpret: bool = False):
+    """Single-pass exact-top-k decode: the ``exact_topk`` baseline's score
+    pass and block top-k fused the same way the Loki kernel's approximate
+    pass is — but the score stream reads the *full* stored key width, so
+    selection is over exact scores (the quality-upper-bound baseline,
+    Section 5). No recency inflation: the baseline has none.
+
+    Shapes/paging/quantization follow ``fused_loki_decode`` exactly:
+    (B,Hkv,G,W),(B,S,Hkv,W),(B,S,Hkv,D),(B,) -> (B,Hkv,G,D), pooled
+    (R,Hkv,·) caches with ``page_table``/``page_size``, per-page f32
+    scale sidecars for quantized layouts, cur_len >= 1 per row."""
+    b, n_kv, g, kdim = q_hat.shape
+    dim = v.shape[-1]
+    assert k_hat.shape[-1] == kdim, "q_hat/k_hat widths must match"
+    bs = block_size
+    paged, s_len, prefetch = _paged_args(q_hat, k_hat, cur_len, page_table,
+                                         page_size, bs)
+    quant = k_scale is not None
+    assert not quant or (paged and v_scale is not None), \
+        "per-page scales require paged caches"
+    assert s_len % bs == 0, "cache length must be a multiple of block_size"
+    nb = s_len // bs
+    nb_pad = pad_lanes(nb)
+    k_blocks = min(k_blocks, nb)
+    scale = float(scale if scale is not None else dim ** -0.5)
+
+    # d = kdim: the "approximate" stream IS the exact score pass
+    kernel = functools.partial(
+        _fused_kernel, paged=paged, quant=quant, ps=page_size, d=kdim,
+        bs=bs, nb=nb, nb_pad=nb_pad, k_blocks=k_blocks, scale=scale, g=g,
+        kdim=kdim, dim=dim, local_window=0, sliding_window=sliding_window)
+    if paged:
+        io_map = lambda i, j, ln, pt: (i, j, 0, 0)
+    else:
+        io_map = lambda i, j, ln: (i, j, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, kdim), io_map),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    inputs = [q_hat, k_hat, v]
+    if quant:
+        in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM),
+                     pl.BlockSpec(memory_space=pltpu.SMEM)]
+        inputs += [k_scale.astype(jnp.float32).reshape(-1, 1),
+                   v_scale.astype(jnp.float32).reshape(-1, 1)]
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(prefetch),
+            grid=(b, n_kv),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, g, dim), io_map),
+            scratch_shapes=[
+                pltpu.VMEM((2, bs, kdim), k_hat.dtype),  # full-width stream
+                pltpu.VMEM((bs, kdim), k_hat.dtype),     # winner K block
+                pltpu.VMEM((bs, dim), v.dtype),          # winner V block
+                pltpu.VMEM((1, nb_pad), jnp.float32),    # block maxima
+                pltpu.SMEM((k_blocks,), jnp.int32),      # selected blocks
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
+        interpret=interpret,
+    )(*prefetch, *inputs)
+    return out
+
+
 def _select_kernel(*args, paged: bool, quant: bool, ps: int, d: int,
                    bs: int, nb: int, nb_pad: int, k_blocks: int,
                    scale: float, local_window: int, sliding_window: int):

@@ -110,6 +110,194 @@ def block_sparse_attention(q_hat, k_hat, v, blk_idx, cur_len, *,
     return out
 
 
+# ------------------------------------------- streaming full-decode variant
+
+def _full_kernel(*args, paged: bool, quant: bool, ps: int, bs: int,
+                 scale: float, g: int, kdim: int, dim: int,
+                 sliding_window: int):
+    if quant:
+        (len_ref, pt_ref, q_ref, k_ref, v_ref, ksc_ref, vsc_ref, out_ref,
+         kbuf, vbuf, sem_k, sem_v) = args
+    elif paged:
+        (len_ref, pt_ref, q_ref, k_ref, v_ref, out_ref,
+         kbuf, vbuf, sem_k, sem_v) = args
+    else:
+        (len_ref, q_ref, k_ref, v_ref, out_ref,
+         kbuf, vbuf, sem_k, sem_v) = args
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ln = len_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, W)
+
+    def k_slice(ref, blk, width):
+        """HBM source for (logical) block ``blk``: direct for contiguous
+        caches, through the page table for pooled ones."""
+        tok = blk * bs
+        if paged:
+            row = pt_ref[b, tok // ps] * ps + tok % ps
+            return ref.at[pl.ds(row, bs), h, pl.ds(0, width)]
+        return ref.at[b, pl.ds(tok, bs), h, pl.ds(0, width)]
+
+    def page_of(blk):
+        return pt_ref[b, (blk * bs) // ps]
+
+    def copies(j, slot):
+        ck = pltpu.make_async_copy(k_slice(k_ref, j, kdim), kbuf.at[slot],
+                                   sem_k.at[slot])
+        cv = pltpu.make_async_copy(k_slice(v_ref, j, dim), vbuf.at[slot],
+                                   sem_v.at[slot])
+        return ck, cv
+
+    if sliding_window:
+        # only the window's blocks are live: under window page recycling
+        # the older table entries point at trash anyway, so their DMAs
+        # would be pure waste — start at the first overlapping block
+        lo = jnp.maximum(ln - sliding_window, 0) // bs
+    else:
+        lo = jnp.int32(0)
+    # stream live blocks only: the trip count follows cur_len, not smax —
+    # this is the whole point versus gathering the logical view (decode
+    # reads scale with the live prefix / window, never the table capacity)
+    hi = (ln + bs - 1) // bs
+    ck0, cv0 = copies(lo, jax.lax.rem(lo, 2))
+    ck0.start()
+    cv0.start()
+
+    def att_blk(j, carry):
+        m_prev, l_prev, acc = carry
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < hi)
+        def _prefetch():
+            ck, cv = copies(j + 1, 1 - slot)
+            ck.start()
+            cv.start()
+
+        ck, cv = copies(j, slot)
+        ck.wait()
+        cv.wait()
+        kb = kbuf[slot].astype(jnp.float32)                # (bs, W)
+        if quant:
+            # per-page scale from SMEM, applied in the DMA epilogue —
+            # HBM only ever moves the narrow codes (DESIGN.md §10)
+            kb = kb * ksc_ref[page_of(j), 0]
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        live = pos < ln                                    # (1, bs)
+        if sliding_window:
+            live &= pos >= ln - sliding_window
+        s = jnp.where(live, s, NEG_INF)                    # (G, bs)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        # guard: an all-masked block with an empty accumulator
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0)) \
+            * (m_prev > NEG_INF / 2)
+        p = jnp.exp(s - m_safe[:, None]) * live            # (G, bs)
+        vb = vbuf[slot].astype(jnp.float32)                # (bs, D)
+        if quant:
+            vb = vb * vsc_ref[page_of(j), 0]
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, vb, preferred_element_type=jnp.float32)
+        return m_new, l_prev * alpha + jnp.sum(p, axis=1), acc
+
+    m0 = jnp.full((g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    a0 = jnp.zeros((g, dim), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(lo, hi, att_blk, (m0, l0, a0))
+    out_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(
+        out_ref.dtype)
+
+
+@kernel_entry(scalar_prefetch=("cur_len", "page_table"),
+              smem_sidecars=("k_scale", "v_scale"),
+              paged_operand="page_table", grid="(B, Hkv)")
+def paged_full_decode(q_hat, k_hat, v, cur_len, *, block_size: int = 128,
+                      scale=None, sliding_window: int = 0,
+                      page_table=None, page_size: int = 0,
+                      k_scale=None, v_scale=None,
+                      interpret: bool = False):
+    """Streaming full-attention decode over live blocks only.
+
+    The ``full`` policy's paged fast path: instead of gathering the whole
+    logical KV view per layer (the jnp route), one grid step per
+    (batch, kv-head) double-buffer DMAs K/V block-by-block through the
+    scalar-prefetched page table and folds each block into a (G,)-wide
+    online softmax. The block loop runs ``ceil(cur_len/bs)`` iterations
+    (from the window's first block under ``sliding_window``), so HBM
+    traffic follows the *live* prefix, never the table capacity.
+
+      q_hat    (B, Hkv, G, W)  grouped queries, already in the storage
+                               basis (W <= D: rank-r latent keys)
+      k_hat    (B, S, Hkv, W)  or pooled (R, Hkv, W) with ``page_table``
+      v        (B, S, Hkv, D)  or pooled (R, Hkv, D)
+      cur_len  (B,)
+    Output:    (B, Hkv, G, D)
+
+    Requires cur_len >= 1 per row (the decode invariant). Quantized
+    layouts pass the pools' (n_pages,) f32 ``k_scale``/``v_scale``
+    sidecars (paged only); dequantization happens in the DMA epilogue."""
+    b, n_kv, g, kdim = q_hat.shape
+    dim = v.shape[-1]
+    assert k_hat.shape[-1] == kdim, "q_hat/k_hat widths must match"
+    bs = block_size
+    paged = page_table is not None
+    if paged:
+        assert page_size > 0 and page_size % bs == 0, \
+            "kernel blocks must tile pages exactly (page_size % bs == 0)"
+        assert k_hat.ndim == 3, "paged caches are pooled (R, Hkv, D)"
+        s_len = page_table.shape[1] * page_size
+        prefetch = (cur_len.astype(jnp.int32), page_table.astype(jnp.int32))
+    else:
+        s_len = k_hat.shape[1]
+        prefetch = (cur_len.astype(jnp.int32),)
+    quant = k_scale is not None
+    assert not quant or (paged and v_scale is not None), \
+        "per-page scales require paged caches"
+    assert s_len % bs == 0, "cache length must be a multiple of block_size"
+    scale = float(scale if scale is not None else dim ** -0.5)
+
+    kernel = functools.partial(
+        _full_kernel, paged=paged, quant=quant, ps=page_size, bs=bs,
+        scale=scale, g=g, kdim=kdim, dim=dim, sliding_window=sliding_window)
+    if paged:
+        io_map = lambda i, j, ln, pt: (i, j, 0, 0)
+    else:
+        io_map = lambda i, j, ln: (i, j, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, kdim), io_map),
+        # caches stay in HBM; the kernel DMAs live blocks itself
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    inputs = [q_hat, k_hat, v]
+    if quant:
+        # (n_pages, 1) f32 sidecars land whole in SMEM (scalar prefetch
+        # itself is int32-only)
+        in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM),
+                     pl.BlockSpec(memory_space=pltpu.SMEM)]
+        inputs += [k_scale.astype(jnp.float32).reshape(-1, 1),
+                   v_scale.astype(jnp.float32).reshape(-1, 1)]
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(prefetch),
+            grid=(b, n_kv),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, g, dim), io_map),
+            scratch_shapes=[
+                pltpu.VMEM((2, bs, kdim), k_hat.dtype),  # K stream buffers
+                pltpu.VMEM((2, bs, dim), v.dtype),       # V stream buffers
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, dim), q_hat.dtype),
+        interpret=interpret,
+    )(*prefetch, *inputs)
+    return out
+
+
 # ------------------------------------------------- GQA-batched variant
 
 def _gkernel(*args, paged: bool, quant: bool, bs: int, bpp: int,

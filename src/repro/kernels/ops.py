@@ -23,9 +23,11 @@ import jax.numpy as jnp
 from repro.kernels.approx_scores import block_max_scores
 from repro.kernels.approx_scores_fm import block_max_scores_fm
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.fused_decode import fused_loki_decode, select_blocks
+from repro.kernels.fused_decode import (fused_exact_topk_decode,
+                                        fused_loki_decode, select_blocks)
 from repro.kernels.gather_attention import (block_sparse_attention,
-                                            block_sparse_attention_grouped)
+                                            block_sparse_attention_grouped,
+                                            paged_full_decode)
 
 
 @functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",
@@ -104,6 +106,47 @@ def loki_decode_fused(q_hat, k_hat, v, cur_len, *, d: int, k_blocks: int,
                              page_table=page_table, page_size=page_size,
                              k_scale=k_scale, v_scale=v_scale,
                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "scale",
+                                             "sliding_window", "page_size",
+                                             "interpret"))
+def full_decode(q_hat, k_hat, v, cur_len, *, block_size: int = 128,
+                scale=None, sliding_window: int = 0,
+                page_table=None, page_size: int = 0,
+                k_scale=None, v_scale=None, interpret: bool = False):
+    """Streaming full-attention decode (the ``full`` policy's paged fast
+    path): K/V stream block-by-block through the page table into a
+    (G,)-wide online softmax, reading only the live prefix (or window).
+    Shapes and scale sidecars follow ``loki_decode_fused``."""
+    return paged_full_decode(q_hat, k_hat, v, cur_len,
+                             block_size=block_size, scale=scale,
+                             sliding_window=sliding_window,
+                             page_table=page_table, page_size=page_size,
+                             k_scale=k_scale, v_scale=v_scale,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k_blocks", "block_size",
+                                             "scale", "sliding_window",
+                                             "page_size", "interpret"))
+def exact_topk_decode_fused(q_hat, k_hat, v, cur_len, *, k_blocks: int,
+                            block_size: int = 128, scale=None,
+                            sliding_window: int = 0,
+                            page_table=None, page_size: int = 0,
+                            k_scale=None, v_scale=None,
+                            interpret: bool = False):
+    """Single-pass exact-top-k decode: full-width exact scores, block
+    top-k and sparse attention in one kernel — ``exact_topk``'s analogue
+    of ``loki_decode_fused`` (whose paging/quantization rules it shares)."""
+    return fused_exact_topk_decode(q_hat, k_hat, v, cur_len,
+                                   k_blocks=k_blocks, block_size=block_size,
+                                   scale=scale,
+                                   sliding_window=sliding_window,
+                                   page_table=page_table,
+                                   page_size=page_size,
+                                   k_scale=k_scale, v_scale=v_scale,
+                                   interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("d", "k_blocks", "block_size",

@@ -75,6 +75,32 @@ def pad_lanes(n: int) -> int:
     return -(-n // 128) * 128
 
 
+def plan_full_decode(smax: int, dim: int, g: int, kdim: int,
+                     block_size: int,
+                     itemsize: int = 4) -> Optional[KernelPlan]:
+    """Block size for the streaming full-decode kernel
+    (gather_attention.paged_full_decode), or None for no-kernel.
+
+    The streaming kernel holds only the double-buffered K/V block pair
+    plus the (G,)-wide online-softmax state — no score row, no selection
+    — so its working set is independent of S and the only constraints
+    are divisibility and the stream buffers fitting VMEM."""
+    bs = 0
+    for cand in dict.fromkeys((block_size,) + _BS_CANDIDATES):
+        if cand > 0 and smax % cand == 0 and smax >= cand:
+            bs = cand
+            break
+    if not bs:
+        return None
+    sub = SUBLANE.get(itemsize, 8)
+    rows = -(-bs // sub) * sub
+    stream = 2 * rows * (pad_lanes(kdim) + pad_lanes(dim)) * itemsize
+    accum = 4 * max(g, 8) * pad_lanes(dim) * 4
+    if stream + accum > VMEM_BUDGET:
+        return None
+    return KernelPlan("stream", bs)
+
+
 def plan_decode(smax: int, dim: int, g: int, d: int, block_size: int,
                 itemsize: int = 4) -> Optional[KernelPlan]:
     """Pick (variant, block_size) for one decode step, or None for no-kernel.

@@ -149,10 +149,15 @@ def _write_cache(cache_arr, new, pos_len):
 
 def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
                 page_table=None, page_size: int = 0, frame_table=None,
-                rank=None):
+                rank=None, sliding_window=None):
     """One-token decode with the configured attention policy.
 
     x (B,E); pos_len (B,) tokens already cached. Returns (y (B,E), cache).
+
+    ``sliding_window`` (static): this layer's attention window, overriding
+    the config-global ``cfg.sliding_window`` — models mixing SWA and
+    full-attention layers (``cfg.window_layers``) pass each layer's own
+    window through the unrolled decode path (0 = full attention).
 
     With ``page_table (B, max_pages)``/``page_size`` the cache arrays are
     the serving engine's shared page pools (R,Hkv,D): the new token's K/V
@@ -188,6 +193,7 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
     proj = p["pca"]
     cur_len = positions + 1                       # cache incl. new token
     paged = page_table is not None
+    sw = cfg.sliding_window if sliding_window is None else sliding_window
 
     if policy == "h2o":
         if paged:
@@ -243,7 +249,7 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
                                                   page_size)}
             out, win = dispatch.loki_tiered_decode(
                 q, cache["k"], cache["v"], cache["k_lat"], cur_len, proj,
-                cfg.loki, sliding_window=cfg.sliding_window,
+                cfg.loki, sliding_window=sw,
                 page_table=page_table, frame_table=frame_table,
                 page_size=page_size, token_granular=(policy == "loki"))
             y = L.dot(out.reshape(b, cfg.q_dim), p["wo"].astype(x.dtype))
@@ -284,22 +290,38 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
         q_read = qh[..., :lay.k_width(hd)].reshape(b, cfg.n_heads, -1)
 
     if policy == "full":
-        out = A.decode_full(q_read, view("k"), view("v"), cur_len,
-                            sliding_window=cfg.sliding_window,
-                            logit_scale=hd ** -0.5)
+        # backend-dispatched like loki_block: on the Pallas path the paged
+        # streaming kernel reads live blocks through the table; the XLA
+        # path is the bit-preserved gather + decode_full reference
+        out = dispatch.full_paged_decode(q_read, cache["k"], cache["v"],
+                                         cur_len, backend=cfg.loki.backend,
+                                         block_size=cfg.loki.block_size,
+                                         sliding_window=sw,
+                                         logit_scale=hd ** -0.5,
+                                         page_table=page_table,
+                                         page_size=page_size,
+                                         k_scale=cache.get("k_scale"),
+                                         v_scale=cache.get("v_scale"))
     elif policy == "exact_topk":
-        out = baselines.exact_topk_decode(q_read, view("k"), view("v"),
-                                          cur_len, cfg.loki,
-                                          logit_scale=hd ** -0.5)
+        # exact scores + block top-k fused the same way loki_block's
+        # approximate pass is; XLA keeps the token-granular reference
+        out = dispatch.exact_topk_paged_decode(q_read, cache["k"],
+                                               cache["v"], cur_len,
+                                               cfg.loki,
+                                               logit_scale=hd ** -0.5,
+                                               page_table=page_table,
+                                               page_size=page_size,
+                                               k_scale=cache.get("k_scale"),
+                                               v_scale=cache.get("v_scale"))
     elif policy == "loki":
         if cfg.loki.n_chunks:
             out = loki.loki_decode_chunked(
                 q, view("k"), view("v"), cur_len, proj,
-                cfg.loki, sliding_window=cfg.sliding_window)
+                cfg.loki, sliding_window=sw)
         else:
             out = loki.loki_decode(q, view("k"), view("v"),
                                    cur_len, proj, cfg.loki,
-                                   sliding_window=cfg.sliding_window)
+                                   sliding_window=sw)
     elif policy == "loki_block":
         # backend-dispatched: fused Pallas kernels on TPU (or when forced),
         # the jnp reference otherwise (core/dispatch.py). Paged caches pass
@@ -307,7 +329,7 @@ def attn_decode(p, cache, x, pos_len, cfg: ModelConfig, *,
         # dequantize quantized layouts in their DMA epilogue.
         out = dispatch.loki_block_decode(q, cache["k"], cache["v"], cur_len,
                                          proj, cfg.loki,
-                                         sliding_window=cfg.sliding_window,
+                                         sliding_window=sw,
                                          page_table=page_table,
                                          page_size=page_size,
                                          k_scale=cache.get("k_scale"),
@@ -375,8 +397,11 @@ def attn_prefill(p, cache, x, positions, cfg: ModelConfig):
 
 def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
                        table_row, page_size: int, frame_row=None,
-                       rank=None):
+                       rank=None, sliding_window=None):
     """One chunk of a paged, chunked prefill for a single request.
+
+    ``sliding_window`` overrides ``cfg.sliding_window`` for this layer
+    (per-layer windows, ``cfg.window_layers``; 0 = full attention).
 
     x (1,C,E) holds the chunk's token embeddings at logical positions
     ``pos_start .. pos_start+C-1``; only the first ``n_valid`` are real
@@ -475,10 +500,11 @@ def attn_prefill_chunk(p, cache, x, pos_start, n_valid, cfg: ModelConfig, *,
     chunk_cols = pos_start + jnp.arange(c)
     scores = scores.at[:, :, :, :, chunk_cols].set(s_chunk, mode="drop")
 
+    sw = cfg.sliding_window if sliding_window is None else sliding_window
     kv_pos = jnp.arange(sl)
     mask = kv_pos[None, :] <= positions[0][:, None]        # causal (C, Sl)
-    if cfg.sliding_window:
-        mask &= positions[0][:, None] - kv_pos[None, :] < cfg.sliding_window
+    if sw:
+        mask &= positions[0][:, None] - kv_pos[None, :] < sw
     scores = jnp.where(mask[None, None, None], scores, A.NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(vlog.dtype)
     o = jnp.einsum("bhgcs,bshd->bchgd", w, vlog)

@@ -384,7 +384,7 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 
 def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
                   page_table=None, page_size: int = 0, live=None,
-                  frame_table=None, rank=None):
+                  frame_table=None, rank=None, sliding_window=None):
     def keep_live(new, old):
         """StateSlot protection for the batched paged tick: slots that are
         idle or mid-prefill must not have their carried recurrent state
@@ -410,7 +410,8 @@ def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
         else:
             a, new_attn = B.attn_decode(p["attn"], c["attn"], h, pos_len,
                                         cfg, page_table=page_table,
-                                        page_size=page_size, rank=rank)
+                                        page_size=page_size, rank=rank,
+                                        sliding_window=sliding_window)
         c = dict(c)
         c["attn"] = new_attn
         if kind == "hybrid":
@@ -450,6 +451,53 @@ def _layer_decode(p, c, x, pos_len, cfg: ModelConfig, kind: str, *,
 
 _UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
 
+# cache keys whose leading (post-L) axis is the *slot* axis — everything
+# else in a paged cache is pooled (no batch dim) and shared by all slots
+_SLOT_KEYS = ("ssm", "cross_k", "cross_v", "cross_k_scale", "cross_v_scale")
+
+
+def _slot_gather(layers, sidx, scan: bool):
+    """Compact the per-slot cache components to the packed batch: leaf
+    [n_slots] rows -> [n_live] rows at ``sidx``. Pooled attn leaves pass
+    through untouched (they carry no slot axis)."""
+    ax = 1 if scan else 0
+
+    def g(tree):
+        return jax.tree.map(lambda a: jnp.take(a, sidx, axis=ax), tree)
+
+    if scan:
+        return {k: (g(v) if k in _SLOT_KEYS else v)
+                for k, v in layers.items()}
+    return [{k: (g(v) if k in _SLOT_KEYS else v) for k, v in lc.items()}
+            for lc in layers]
+
+
+def _slot_scatter(full_layers, packed_layers, sidx, scan: bool):
+    """Merge a packed decode's cache back into the full-width cache.
+
+    Recurrent state (``ssm``) scatters to its slots — sound because the
+    packed batch holds *distinct* slot ids. Cross K/V is read-only during
+    decode, so the original leaves are kept (no copy). Pooled attn leaves
+    come from the packed run verbatim: page-table indirection already
+    landed their writes at the right physical rows."""
+    def sc(full, pk, ax):
+        idx = (slice(None), sidx) if ax else sidx
+        return jax.tree.map(
+            lambda f, p: f.at[idx].set(p.astype(f.dtype)), full, pk)
+
+    def merge(full_lc, packed_lc, ax):
+        out = dict(packed_lc)
+        for k in _SLOT_KEYS:
+            if k not in full_lc:
+                continue
+            out[k] = (sc(full_lc[k], packed_lc[k], ax) if k == "ssm"
+                      else full_lc[k])
+        return out
+
+    if scan:
+        return merge(full_layers, packed_layers, 1)
+    return [merge(f, p, 0) for f, p in zip(full_layers, packed_layers)]
+
 
 def _cache_bits(tree):
     """Float leaves -> same-width uint views (free bitcast on TPU). The scan
@@ -473,7 +521,7 @@ def _cache_unbits(tree, dtypes):
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
                 page_table=None, page_size: int = 0, live=None,
-                frame_table=None):
+                frame_table=None, slot_idx=None):
     """One generation step. token (B,) int32; pos_len (B,) tokens cached.
 
     Returns (logits (B,V), new_cache). With ``page_table (B, max_pages)``/
@@ -482,6 +530,19 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
     ``live (B,)`` bool: slots marked dead keep their StateSlot components
     (recurrent state / cross K/V are per-slot, with no trash row to divert
     writes to).
+
+    ``slot_idx (B,)`` int32 — gather-packed decode: the batch rows are a
+    *compaction* of the cache's slot axis (distinct slot ids; token /
+    pos_len / live / page_table rows arrive pre-packed by the scheduler).
+    Per-slot components are gathered to the packed batch before the layer
+    stack and the advanced recurrent state is scattered back after, so
+    decode FLOPs scale with live slots instead of engine capacity while
+    the cache keeps its full-width layout.
+
+    With ``cfg.window_layers`` (per-layer SWA/full mixes) the layer stack
+    unrolls so each layer gets its *static* window, and a rank-3
+    ``page_table (B, n_groups, max_pages)`` carries one table row per
+    page-table group (cache_spec.layer_group_ids picks each layer's row).
 
     ``frame_table (B, max_pages)`` (tiered pools, DESIGN.md §13) maps each
     logical table entry to its device frame (0 = trash frame for HOST
@@ -500,10 +561,21 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
     if cfg.page_ranks is not None and page_table is not None:
         ranks = jnp.asarray(cfg.page_ranks, jnp.int32)
 
-    if uses_scan(cfg):
+    scan = uses_scan(cfg)
+    hetero = cfg.window_layers is not None and scan
+    if tiered and hetero:
+        raise ValueError("tiered pools do not compose with per-layer "
+                         "window groups (window_layers)")
+    packed = slot_idx is not None
+    layers_in = cache["layers"]
+    if packed:
+        sidx = jnp.asarray(slot_idx, jnp.int32)
+        layers_in = _slot_gather(layers_in, sidx, scan)
+
+    if scan and not hetero:
         kind = layer_kind(cfg, 0)
-        dtypes = jax.tree.map(lambda a: a.dtype, cache["layers"])
-        xs = (params["layers"], _cache_bits(cache["layers"]))
+        dtypes = jax.tree.map(lambda a: a.dtype, layers_in)
+        xs = (params["layers"], _cache_bits(layers_in))
         if ranks is not None:
             xs = xs + (ranks,)
 
@@ -527,6 +599,30 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
             win = None
             x, new_bits = jax.lax.scan(body, x, xs)
         new_cache = {"layers": _cache_unbits(new_bits, dtypes)}
+    elif hetero:
+        # per-layer static windows: unroll over the stacked leaves so each
+        # layer's mask/kernel window and page-table group row are compile-
+        # time constants (these models are shallow; the scan families'
+        # compact-HLO concern doesn't bite)
+        win = None
+        gids = CS.layer_group_ids(cfg)
+        kind = layer_kind(cfg, 0)
+        new_layers = layers_in
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            c = jax.tree.map(lambda a: a[i], new_layers)
+            pt_i = page_table
+            if page_table is not None and page_table.ndim == 3:
+                pt_i = page_table[:, gids[i]]
+            x, c, _ = _layer_decode(
+                p, c, x, pos_len, cfg, kind,
+                page_table=pt_i, page_size=page_size, live=live,
+                rank=None if ranks is None else ranks[i],
+                sliding_window=cfg.layer_window(i))
+            new_layers = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                    full, one.astype(full.dtype), i, 0), new_layers, c)
+        new_cache = {"layers": new_layers}
     else:
         # non-scan families (xlstm) have no paged attention: no tiering
         win = None
@@ -534,7 +630,7 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
         x_cur = x
         for i in range(cfg.n_layers):
             x_cur, c, _ = _layer_decode(params["layers"][i],
-                                        cache["layers"][i],
+                                        layers_in[i],
                                         x_cur, pos_len, cfg,
                                         layer_kind(cfg, i),
                                         page_table=page_table,
@@ -543,6 +639,10 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos_len, *,
         x = x_cur
         new_cache = {"layers": new_list}
 
+    if packed:
+        new_cache = {"layers": _slot_scatter(cache["layers"],
+                                             new_cache["layers"],
+                                             sidx, scan)}
     x = L.norm_apply(params["final_norm"], x)
     logits = L.unembed_apply(params["embed"], x[:, None], cfg)[:, 0]
     if tiered:
@@ -674,7 +774,12 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
     the frame row simply redirects the K/V writes and gathers while the
     latent sidecar is written through the logical ``table_row``."""
     CS.assert_pageable(cfg)
-    table_row = page_table[0] if page_table.ndim == 2 else page_table
+    if cfg.window_layers is not None:
+        # per-layer table groups: the table is (n_groups, max_pages) (or
+        # batch-1 of it); each layer slices its group's row below
+        table_row = page_table[0] if page_table.ndim == 3 else page_table
+    else:
+        table_row = page_table[0] if page_table.ndim == 2 else page_table
     if frame_row is not None and frame_row.ndim == 2:
         frame_row = frame_row[0]
     ranks = (jnp.asarray(cfg.page_ranks, jnp.int32)
@@ -695,21 +800,17 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
 
     if uses_scan(cfg):
         kind = layer_kind(cfg, 0)
-        xs = (params["layers"], cache["layers"])
-        if ranks is not None:
-            xs = xs + (ranks,)
 
-        def body(x, pc):
-            p, cc = pc[0], pc[1]
-            rk = pc[2] if len(pc) > 2 else None
+        def body_at(x, p, cc, rk, trow, sw):
             cc = dict(cc)
             h = L.norm_apply(p["ln1"], x)
             a, new_attn = B.attn_prefill_chunk(p["attn"], cc["attn"], h,
                                                pos_start, n_valid, cfg,
-                                               table_row=table_row,
+                                               table_row=trow,
                                                page_size=page_size,
                                                frame_row=frame_row,
-                                               rank=rk)
+                                               rank=rk,
+                                               sliding_window=sw)
             cc["attn"] = new_attn
             if kind == "hybrid":
                 st = jax.tree.map(slot_take, cc["ssm"])
@@ -741,8 +842,35 @@ def prefill_chunk(params, cfg: ModelConfig, cache, tokens, pos_start,
                 y = L.mlp_apply(p["mlp"], h, cfg)
             return x + y, cc
 
-        x, new_layers = jax.lax.scan(body, x, xs)
-        new_cache = {"layers": new_layers}
+        if cfg.window_layers is not None:
+            # unrolled: each layer's window is static and its K/V scatter
+            # goes through its page-table group's row
+            gids = CS.layer_group_ids(cfg)
+            new_layers = cache["layers"]
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                cc = jax.tree.map(lambda a: a[i], new_layers)
+                trow = (table_row[gids[i]] if table_row.ndim == 2
+                        else table_row)
+                x, cc = body_at(x, p, cc,
+                                None if ranks is None else ranks[i],
+                                trow, cfg.layer_window(i))
+                new_layers = jax.tree.map(
+                    lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                        full, one.astype(full.dtype), i, 0),
+                    new_layers, cc)
+            new_cache = {"layers": new_layers}
+        else:
+            xs = (params["layers"], cache["layers"])
+            if ranks is not None:
+                xs = xs + (ranks,)
+
+            def body(x, pc):
+                rk = pc[2] if len(pc) > 2 else None
+                return body_at(x, pc[0], pc[1], rk, table_row, None)
+
+            x, new_layers = jax.lax.scan(body, x, xs)
+            new_cache = {"layers": new_layers}
     else:
         # ssm family (xlstm): no pages at all — the chunk runs the
         # recurrences from the slot's carried state, masking pad tokens

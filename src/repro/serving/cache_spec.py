@@ -211,9 +211,9 @@ def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
     def attn_for(i: int) -> Component:
         li = lay if ranks is None else dataclasses.replace(
             lay, basis="pca", rank=ranks[i])
-        if cfg.sliding_window:
-            return WindowPagedAttn(cfg.n_kv_heads, hd, cfg.sliding_window,
-                                   li)
+        w = cfg.layer_window(i)
+        if w:
+            return WindowPagedAttn(cfg.n_kv_heads, hd, w, li)
         return PagedAttn(cfg.n_kv_heads, hd, li)
 
     def one(i: int) -> LayerSpec:
@@ -329,15 +329,64 @@ def recycle_window(cfg: ModelConfig) -> int:
     return max(windows) if windows else 0
 
 
-def request_page_budget(cfg: ModelConfig, smax: int, page_size: int) -> int:
-    """Max pages one request can hold at once under the spec table."""
-    if not has_paged_attn(cfg):
-        return 0
+def group_windows(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Window of each page-table group, one entry per group.
+
+    Layers with *equal* attention windows share one page table: their
+    masks move past a page at the same position, so recycling the page is
+    sound for every layer reading that table. Distinct windows therefore
+    get distinct tables (per-layer page-table groups) — a full-attention
+    layer never recycles, while a window layer's group recycles at its own
+    window instead of pinning pages forever.
+
+    Group 0 is the full-attention group when one exists, else the widest
+    window group (so the primary table's recycle semantics match the
+    single-table engine: ``recycle_window(cfg) == group_windows(cfg)[0]``
+    ... with 0 meaning "never recycle"). Remaining groups are ordered by
+    descending window."""
+    windows = {s.attn.window if isinstance(s.attn, WindowPagedAttn) else 0
+               for s in layer_specs(cfg) if s.attn is not None}
+    if not windows:
+        return ()
+    return tuple(sorted(windows, key=lambda w: (w != 0, -w)))
+
+
+def layer_group_ids(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Page-table group id of each layer (-1 = layer has no paged attn)."""
+    gid = {w: i for i, w in enumerate(group_windows(cfg))}
+    out = []
+    for s in layer_specs(cfg):
+        if s.attn is None:
+            out.append(-1)
+        elif isinstance(s.attn, WindowPagedAttn):
+            out.append(gid[s.attn.window])
+        else:
+            out.append(gid[0])
+    return tuple(out)
+
+
+def n_table_groups(cfg: ModelConfig) -> int:
+    return max(len(group_windows(cfg)), 1)
+
+
+def group_page_budget(cfg: ModelConfig, gid: int, smax: int,
+                      page_size: int) -> int:
+    """Max pages one request can hold in group ``gid``'s table."""
     max_pages = -(-smax // page_size)
-    w = recycle_window(cfg)
+    w = group_windows(cfg)[gid]
     if w:
         return min(max_pages, window_page_budget(w, page_size))
     return max_pages
+
+
+def request_page_budget(cfg: ModelConfig, smax: int, page_size: int) -> int:
+    """Max pages one request can hold at once under the spec table —
+    summed over its page-table groups (a mixed SWA/full model holds
+    group 0's full-prefix pages plus each window group's bounded set)."""
+    if not has_paged_attn(cfg):
+        return 0
+    return sum(group_page_budget(cfg, g, smax, page_size)
+               for g in range(len(group_windows(cfg))))
 
 
 # ------------------------------------------------------------- state init

@@ -266,18 +266,23 @@ def audit_engine(engine) -> None:
     held = pool.holders()
     free = set(pool.free_page_ids())
 
-    # B + C: slot references, counted against refcounts
+    # B + C: slot references, counted against refcounts — over the
+    # primary table's pages AND every aux page-table group's (per-layer
+    # window groups hold pages the primary list never sees)
+    aux_pages = getattr(engine, "aux_pages", [])
     holders: Counter = Counter()
-    for slot, pages in enumerate(engine.slot_pages):
-        for p in pages:
-            if p is None:
-                continue
-            if not isinstance(p, (int, np.integer)) or not 1 <= p < n:
-                _fail("C", f"slot {slot} references wild page {p!r}")
-            if p in free:
-                _fail("C", f"slot {slot} references page {p} which is "
-                           "on the free list")
-            holders[int(p)] += 1
+    for gi, group in enumerate([engine.slot_pages] + list(aux_pages)):
+        for slot, pages in enumerate(group):
+            for p in pages:
+                if p is None:
+                    continue
+                if not isinstance(p, (int, np.integer)) or not 1 <= p < n:
+                    _fail("C", f"slot {slot} group {gi} references wild "
+                               f"page {p!r}")
+                if p in free:
+                    _fail("C", f"slot {slot} group {gi} references page "
+                               f"{p} which is on the free list")
+                holders[int(p)] += 1
     for p, cnt in holders.items():
         if held.get(p, 0) != cnt:
             _fail("B", f"page {p}: refcount {held.get(p, 0)} != "
@@ -297,15 +302,20 @@ def audit_engine(engine) -> None:
                 _fail("D", f"page {p} shared by {cnt} slots is a "
                            "*private* retained entry")
 
-    # E: device table mirrors host bookkeeping
-    table = np.asarray(engine.page_table)
-    for slot, pages in enumerate(engine.slot_pages):
-        want = np.zeros((engine.max_pages,), np.int32)
-        for i, p in enumerate(pages):
-            want[i] = 0 if p is None else p
-        if not np.array_equal(table[slot], want):
-            _fail("E", f"slot {slot} device table {table[slot].tolist()} "
-                       f"!= host pages {want.tolist()}")
+    # E: every group's table mirrors its host bookkeeping
+    aux_tables = getattr(engine, "aux_tables", [])
+    groups = zip([engine.page_table] + list(aux_tables),
+                 [engine.slot_pages] + list(aux_pages))
+    for gi, (tbl, plists) in enumerate(groups):
+        table = np.asarray(tbl)
+        for slot, pages in enumerate(plists):
+            want = np.zeros((engine.max_pages,), np.int32)
+            for i, p in enumerate(pages):
+                want[i] = 0 if p is None else p
+            if not np.array_equal(table[slot], want):
+                _fail("E", f"slot {slot} group {gi} table "
+                           f"{table[slot].tolist()} != host pages "
+                           f"{want.tolist()}")
 
     # H + I: tiered-engine safety (tail residency, host bytes, budget)
     if getattr(pool, "tiered", False):

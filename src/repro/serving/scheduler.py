@@ -147,6 +147,14 @@ class PagedServingEngine:
                    layout. None (default) = single-tier, all-resident.
     max_inflight   outstanding async host->HBM fetches the tiered pool's
                    fetch queue may hold (default 2: double-buffered)
+    packed         gather-packed decode (DESIGN.md §14): compact the
+                   tick's live slots into a dense batch padded to a
+                   power-of-two bucket, so decode FLOPs scale with
+                   occupancy instead of ``n_slots``. Bucket programs jit
+                   lazily; under a sealed TraceGuard an unwarmed bucket
+                   falls back to the full-width masked program instead of
+                   recompiling in the hot path. False = always masked
+                   full-width (the A/B benchmarking baseline).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
@@ -162,7 +170,7 @@ class PagedServingEngine:
                  audit: bool = False, nan_guard: bool = True,
                  trace_guard=None, donate: bool = True,
                  device_pages: Optional[int] = None,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2, packed: bool = True):
         if backend is not None:
             cfg = cfg.replace(
                 loki=dataclasses.replace(cfg.loki, backend=backend))
@@ -192,20 +200,31 @@ class PagedServingEngine:
             "" if not prefix_cache else why)     # bypass reason, if any
 
         # page accounting from the spec table: ``req_budget`` is the
-        # decode-phase bound per request (= ceil(window/ps)+1 for SWA
-        # models, else max_pages); ``_req_pages_hard`` additionally covers
-        # a mid-prefill chunk, whose pages can't be recycled until the
-        # chunk's earliest query has moved past them
+        # decode-phase bound per request (summed over its page-table
+        # groups); ``_group_pages_hard`` additionally covers a mid-prefill
+        # chunk, whose pages can't be recycled until the chunk's earliest
+        # query has moved past them. Layers whose windows differ keep
+        # separate page tables (DESIGN.md §14): group 0 owns the primary
+        # table and every existing mechanism (prefix cache, COW,
+        # snapshots); groups 1.. are aux window groups that grow and
+        # recycle in lockstep with it but at their own window
         self.window = CS.recycle_window(cfg)
+        self.group_windows = CS.group_windows(cfg)
+        self.n_groups = max(len(self.group_windows), 1)
         self.req_budget = CS.request_page_budget(cfg, self.smax,
                                                  self.page_size)
-        if self.window:
-            self._req_pages_hard = min(
-                self.max_pages,
-                CS.window_page_budget(self.window + self.prefill_chunk - 1,
-                                      self.page_size))
+
+        def hard(w: int) -> int:
+            if w:
+                return min(self.max_pages, CS.window_page_budget(
+                    w + self.prefill_chunk - 1, self.page_size))
+            return self.max_pages
+        if self.group_windows:
+            self._group_pages_hard = [hard(w) for w in self.group_windows]
         else:
-            self._req_pages_hard = self.req_budget
+            self._group_pages_hard = [hard(self.window) if self.window
+                                      else self.req_budget]
+        self._req_pages_hard = sum(self._group_pages_hard)
         if n_pages is None:
             n_pages = 1 + max(n_slots * self._req_pages_hard, 1)
         if self.has_pages and n_pages - 1 < self._req_pages_hard:
@@ -229,6 +248,11 @@ class PagedServingEngine:
             if not (self.has_pages and lm.uses_scan(cfg)):
                 raise ValueError("tiered KV pool needs paged attention "
                                  "layers in a scan family")
+            if self.n_groups > 1:
+                raise ValueError(
+                    "tiered KV pool does not compose with per-layer "
+                    "page-table groups (cfg.window_layers): the frame "
+                    "table and pin ledger are single-table")
             if device_pages - 1 < self._req_pages_hard:
                 raise ValueError(
                     f"device pool of {device_pages} frames cannot hold "
@@ -274,6 +298,15 @@ class PagedServingEngine:
         # non-None entries is what the slot actually holds
         self.slot_pages: List[List[Optional[int]]] = [
             [] for _ in range(n_slots)]
+        # aux page-table groups 1..n-1 mirror the primary table's shape;
+        # their pages are never prefix-shared (any multi-group config has
+        # a WindowPagedAttn component, which bypasses prefix caching), so
+        # every aux page is sole-owned and COW/registration never apply
+        self.aux_tables: List[np.ndarray] = [
+            np.zeros((n_slots, self.max_pages), np.int32)
+            for _ in range(self.n_groups - 1)]
+        self.aux_pages: List[List[List[Optional[int]]]] = [
+            [[] for _ in range(n_slots)] for _ in range(self.n_groups - 1)]
         # slot -> logical index of a shared tail page this request must
         # copy-on-write before its first write lands in it (full-page
         # prefix hits need no COW: the slot never writes below its first
@@ -332,6 +365,14 @@ class PagedServingEngine:
                        if self.tiered else None)
         self._trace_guard = trace_guard
         self._donate = donate       # False only for A/B benchmarking
+        # gather-packed decode: tiered decode already packs its work by
+        # re-running only missing slots, and its winner-mask bookkeeping
+        # is slot-indexed — keep it on the full-width masked program
+        self.packed = bool(packed) and not self.tiered
+        self.n_packed_ticks = 0
+        self.n_masked_ticks = 0
+        self.n_packed_rows_saved = 0   # (n_slots - bucket) summed
+        self.n_packed_fallbacks = 0    # sealed-guard unwarmed buckets
 
         self._build_programs()
 
@@ -357,6 +398,10 @@ class PagedServingEngine:
                      p, cfg, c, t, pl, page_table=pt, page_size=ps,
                      live=lv)),
             donate_argnums=(1,) if self._donate else ())
+        # per-bucket packed decode programs jit lazily (_packed_program);
+        # a rebuild invalidates them all so the retrace resolves to the
+        # surviving backend exactly like the programs above
+        self._decode_packed: Dict[int, Any] = {}
         self._chunk = jax.jit(
             wrap("prefill_chunk",
                  lambda p, c, toks, start, nv, row, sl: lm.prefill_chunk(
@@ -389,11 +434,55 @@ class PagedServingEngine:
                      lambda c, k, v, f: lm.promote_page_rows(
                          cfg, c, k, v, f, ps)),
                 donate_argnums=(0,) if self._donate else ())
+            if self._fresh_state is not None:
+                # batched rewind for the miss-repair re-run: one masked
+                # restore over every stale slot at once (tiered requires a
+                # scan family, so the slot axis of every state leaf is 1)
+                def rewind(sub, snap, stale):
+                    def mask_one(cur, sv):
+                        m = stale.reshape((1, -1) + (1,) * (cur.ndim - 2))
+                        return jnp.where(m, sv, cur)
+                    return jax.tree.map(mask_one, sub, snap)
+                self._rewind = jax.jit(
+                    wrap("tiered_rewind", rewind),
+                    donate_argnums=(0,) if self._donate else ())
         if self.is_encdec:
             self._encode_cross = jax.jit(
                 lambda p, fr: lm.encode_cross_kv(p, cfg, fr))
 
+    def _packed_program(self, bucket: int):
+        """The packed decode program for one bucket width, jitted on
+        first use — or None when the trace guard is sealed and this
+        bucket was never warmed, in which case the caller runs the
+        full-width masked program instead of recompiling mid-hot-path."""
+        prog = self._decode_packed.get(bucket)
+        if prog is not None:
+            return prog
+        guard = self._trace_guard
+        name = f"decode_step_packed[b{bucket}]"
+        if guard is not None and guard.sealed \
+                and not guard.traces.get(name):
+            return None
+        cfg, ps = self.cfg, self.page_size
+        wrap = guard.wrap if guard is not None else (lambda _n, f: f)
+        prog = jax.jit(
+            wrap(name,
+                 lambda p, c, t, pl, pt, lv, si: lm.decode_step(
+                     p, cfg, c, t, pl, page_table=pt, page_size=ps,
+                     live=lv, slot_idx=si)),
+            donate_argnums=(1,) if self._donate else ())
+        self._decode_packed[bucket] = prog
+        return prog
+
     # --------------------------------------------------- per-slot state
+
+    def _group_tables(self) -> List[np.ndarray]:
+        """Every group's host page table, primary (group 0) first."""
+        return [self.page_table] + self.aux_tables
+
+    def _group_pages(self, g: int) -> List[List[Optional[int]]]:
+        """Group ``g``'s per-slot logical page lists."""
+        return self.slot_pages if g == 0 else self.aux_pages[g - 1]
 
     def _key(self, req: Request):
         """The policy's urgency key (smaller = more urgent)."""
@@ -598,6 +687,9 @@ class PagedServingEngine:
         req.prompt = toks
         self.slot_req[slot] = req
         self.slot_pages[slot] = []
+        for g in range(1, self.n_groups):
+            self.aux_pages[g - 1][slot] = []
+            self.aux_tables[g - 1][slot] = 0
         self._cow_pending.pop(slot, None)
         self._admit_order.append(slot)
         self.pos[slot] = 0
@@ -665,6 +757,11 @@ class PagedServingEngine:
         # a sole-owned one returns to the free list / LRU
         self.pool.release(
             [p for p in self.slot_pages[slot] if p is not None])
+        for g in range(1, self.n_groups):
+            self.pool.release(
+                [p for p in self.aux_pages[g - 1][slot] if p is not None])
+            self.aux_pages[g - 1][slot] = []
+            self.aux_tables[g - 1][slot] = 0
         if self.tiered:
             self._prune_host()
         self.slot_pages[slot] = []
@@ -748,7 +845,11 @@ class PagedServingEngine:
             # host-sync: preemption snapshot copy-out — rare, off the
             # steady-state decode path by construction
             self._state_snap[id(req)] = (consumed, jax.device_get(snap))
-            if self.has_pages:
+            if self.has_pages and self.n_groups == 1:
+                # multi-group hybrids recompute: retention parks only the
+                # primary table's pages, and a restore over missing aux
+                # pages would attend garbage (_try_restore_state is
+                # all-or-nothing, so no psnap -> recompute)
                 self._retain_slot_pages(slot, req)
         # lifecycle: PREFILL|DECODE -> QUEUED
         LC.transition(req, Status.QUEUED, "preempted")
@@ -795,29 +896,42 @@ class PagedServingEngine:
         return True
 
     def _grow_to(self, slot: int, n_tokens: int) -> bool:
-        """Ensure the slot's table covers logical positions [0, n_tokens)."""
+        """Ensure every group's table covers logical positions
+        [0, n_tokens). Groups grow in lockstep — each group's layers write
+        the same token row, so logical coverage is identical across
+        tables; only recycling (per-group window) makes them diverge."""
         if not self.has_pages:
             return True                    # StateSlot-only model (xlstm)
-        need = PagePool.pages_for(n_tokens, self.page_size) \
-            - len(self.slot_pages[slot])
-        if need <= 0:
+        want = PagePool.pages_for(n_tokens, self.page_size)
+        needs = [max(want - len(self._group_pages(g)[slot]), 0)
+                 for g in range(self.n_groups)]
+        total = sum(needs)
+        if total <= 0:
             return True
-        if not self._make_room(need, protect=slot):
+        if not self._make_room(total, protect=slot):
             return False
         # tiered: fresh pages are born RESIDENT, so claim frames first —
         # by demotion, never by preempting (demote-before-preempt: the
         # _make_room above handles *logical* page shortage, which frames
         # cannot fix; frame shortage is always demotion's job)
         if self.tiered and not self._demote_for_frames(
-                need, protect=frozenset(
+                total, protect=frozenset(
                     p for p in self.slot_pages[slot] if p is not None)):
             return False
-        pages = self.pool.alloc(need)
-        if pages is None:
-            return False        # injected alloc_fail: contended this tick
-        base = len(self.slot_pages[slot])
-        self.page_table[slot, base:base + need] = pages
-        self.slot_pages[slot].extend(pages)
+        for g, (need, table) in enumerate(zip(needs,
+                                              self._group_tables())):
+            if not need:
+                continue
+            pages = self.pool.alloc(need)
+            if pages is None:
+                # injected alloc_fail: contended this tick. Groups grown
+                # so far keep their (consistent) pages; the retry only
+                # re-requests what is still missing
+                return False
+            plist = self._group_pages(g)[slot]
+            base = len(plist)
+            table[slot, base:base + need] = pages
+            plist.extend(pages)
         self.peak_slot_pages = max(
             self.peak_slot_pages,
             sum(p is not None for p in self.slot_pages[slot]))
@@ -908,24 +1022,28 @@ class PagedServingEngine:
         mask exactly like the dense cache's dead rows). ``next_q`` is the
         earliest position any future query of this slot can have; it
         attends kv >= next_q - window + 1."""
-        if not self.window:
-            return
-        first_live = max(0, next_q - self.window + 1) // self.page_size
-        pages = self.slot_pages[slot]
-        freed = [p for p in pages[:first_live] if p is not None]
-        if not freed:
-            return
-        pages[:first_live] = [None] * min(first_live, len(pages))
-        self.pool.release(freed)
-        if self.tiered:
-            self._prune_host()
-        self.n_recycled_pages += len(freed)
-        self.page_table[slot, :first_live] = 0
-        live = sum(p is not None for p in pages)
-        if live > self._req_pages_hard:
-            raise RuntimeError(
-                f"slot {slot} holds {live} pages after recycling, above "
-                f"the spec-table bound {self._req_pages_hard}")
+        windows = self.group_windows or ((self.window,)
+                                         if self.window else ())
+        for g, w in enumerate(windows):
+            if not w:
+                continue         # full-attention group: pages pin forever
+            first_live = max(0, next_q - w + 1) // self.page_size
+            pages = self._group_pages(g)[slot]
+            freed = [p for p in pages[:first_live] if p is not None]
+            if not freed:
+                continue
+            pages[:first_live] = [None] * min(first_live, len(pages))
+            self.pool.release(freed)
+            if self.tiered:
+                self._prune_host()
+            self.n_recycled_pages += len(freed)
+            self._group_tables()[g][slot, :first_live] = 0
+            live = sum(p is not None for p in pages)
+            if live > self._group_pages_hard[g]:
+                raise RuntimeError(
+                    f"slot {slot} group {g} holds {live} pages after "
+                    "recycling, above the spec-table bound "
+                    f"{self._group_pages_hard[g]}")
 
     # ------------------------------------------- tiered KV pool (§13)
 
@@ -1216,15 +1334,13 @@ class PagedServingEngine:
             # theirs, so each stream's state advances exactly once)
             stale = ran & ~done
             if snap is not None and stale.any():
+                # one jitted masked restore over every stale slot at once
+                # (was a per-slot snapshot/reset Python loop: a chain of
+                # eagerly-dispatched slice updates per re-run)
                 layers = self.cache["layers"]
-                for s in np.flatnonzero(stale):
-                    tree = CS.snapshot_slot_state(
-                        snap, self._fresh_state, int(s),
-                        lm.uses_scan(self.cfg))
-                    layers = CS.reset_slot_state(
-                        layers, tree, int(s), lm.uses_scan(self.cfg))
-                self.cache = {"layers": {**self.cache["layers"],
-                                         **layers}}
+                sub = {k: layers[k] for k in snap}
+                sub = self._rewind(sub, snap, jnp.asarray(stale))
+                self.cache = {"layers": {**layers, **sub}}
             if not todo.any():
                 return nxt_out, fin_out, done
         raise RuntimeError(
@@ -1335,10 +1451,12 @@ class PagedServingEngine:
                 jnp.int32(start), jnp.int32(n_valid),
                 self.page_table[slot], jnp.asarray(fr), jnp.int32(slot))
         else:
+            row = self.page_table[slot] if self.n_groups == 1 \
+                else np.stack([t[slot] for t in self._group_tables()])
             _, self.cache = self._chunk(
                 self.params, self.cache, jnp.asarray(chunk),
                 jnp.int32(start), jnp.int32(n_valid),
-                self.page_table[slot], jnp.int32(slot))
+                row, jnp.int32(slot))
         self._prefill_at[slot] = start + n_valid
         self.n_prefill_computed_tokens += n_valid
         self._register_ready_pages(slot)
@@ -1418,24 +1536,70 @@ class PagedServingEngine:
             if not sel.any():
                 return False    # every stream deferred to the next tick
         else:
-            sel_dev = jnp.asarray(sel)
-            pt = self.page_table * sel.astype(np.int32)[:, None]
-            logits, self.cache = self._run_decode(pt, sel_dev)
-            if self._faults is not None:
-                bad = [s for s in np.flatnonzero(sel)
-                       if self._faults.hit("nan_logits", int(s))]
-                if bad:
-                    logits = logits.at[jnp.asarray(bad, jnp.int32)].set(
-                        jnp.nan)
-            finite_dev = jnp.isfinite(logits).all(axis=-1) \
-                if self.nan_guard else None
-            nxt = sample_next(logits, greedy=self.greedy, rng=rng,
-                              ticks=self.ticks)
-            # host-sync: the ONE batched device->host sync of the decode
-            # tick — sampled tokens (and the nan-guard mask) must reach
-            # Python to drive per-request lifecycle; everything else
-            # stays host-side
-            nxt_np, finite = jax.device_get((nxt, finite_dev))
+            order = self._packed_order(sel)
+            if order is not None:
+                # gather-packed step: the batch is the live slots plus
+                # distinct idle pad rows up to the bucket width — pad
+                # rows write to the trash page (zeroed table rows) and
+                # their state is live-masked, so only result unpacking
+                # differs from the masked path below
+                prog, sidx, plive = order
+                n_live = int(plive.sum())
+                self.n_packed_ticks += 1
+                self.n_packed_rows_saved += self.n_slots - len(sidx)
+                keep = plive.astype(np.int32)
+                if self.n_groups > 1:
+                    pt = np.stack([t[sidx] for t in self._group_tables()],
+                                  axis=1) * keep[:, None, None]
+                else:
+                    pt = self.page_table[sidx] * keep[:, None]
+                logits, self.cache = self._run_decode_packed(
+                    prog, len(sidx), sidx, pt, plive)
+                if self._faults is not None:
+                    bad = [i for i in range(n_live)
+                           if self._faults.hit("nan_logits",
+                                               int(sidx[i]))]
+                    if bad:
+                        logits = logits.at[
+                            jnp.asarray(bad, jnp.int32)].set(jnp.nan)
+                finite_dev = jnp.isfinite(logits).all(axis=-1) \
+                    if self.nan_guard else None
+                nxt = sample_next(logits, greedy=self.greedy, rng=rng,
+                                  ticks=self.ticks)
+                # host-sync: the ONE batched device->host sync of the
+                # packed decode tick
+                nxt_p, fin_p = jax.device_get((nxt, finite_dev))
+                nxt_np = np.zeros((self.n_slots,), nxt_p.dtype)
+                nxt_np[sidx[:n_live]] = nxt_p[:n_live]
+                finite = None
+                if fin_p is not None:
+                    finite = np.ones((self.n_slots,), bool)
+                    finite[sidx[:n_live]] = fin_p[:n_live]
+            else:
+                self.n_masked_ticks += 1
+                sel_dev = jnp.asarray(sel)
+                keep = sel.astype(np.int32)
+                if self.n_groups > 1:
+                    pt = np.stack(self._group_tables(),
+                                  axis=1) * keep[:, None, None]
+                else:
+                    pt = self.page_table * keep[:, None]
+                logits, self.cache = self._run_decode(pt, sel_dev)
+                if self._faults is not None:
+                    bad = [s for s in np.flatnonzero(sel)
+                           if self._faults.hit("nan_logits", int(s))]
+                    if bad:
+                        logits = logits.at[
+                            jnp.asarray(bad, jnp.int32)].set(jnp.nan)
+                finite_dev = jnp.isfinite(logits).all(axis=-1) \
+                    if self.nan_guard else None
+                nxt = sample_next(logits, greedy=self.greedy, rng=rng,
+                                  ticks=self.ticks)
+                # host-sync: the ONE batched device->host sync of the
+                # decode tick — sampled tokens (and the nan-guard mask)
+                # must reach Python to drive per-request lifecycle;
+                # everything else stays host-side
+                nxt_np, finite = jax.device_get((nxt, finite_dev))
         self.pos += sel.astype(np.int32)
         self._last_decoded[sel] = self.ticks
         for slot in range(self.n_slots):
@@ -1490,6 +1654,60 @@ class PagedServingEngine:
             self.n_backend_fallbacks += 1
             return self._decode(self.params, self.cache, self.last_tok,
                                 self.pos, pt, lv)
+
+    def _packed_order(self, sel: np.ndarray):
+        """Plan this tick's gather-packed batch: (program, slot order,
+        packed live mask), or None when the tick should run masked
+        full-width — packing disabled, the bucket would not be narrower
+        than ``n_slots``, or the trace guard is sealed and this bucket
+        was never warmed."""
+        if not self.packed:
+            return None
+        live_idx = np.flatnonzero(sel)
+        n_live = int(live_idx.size)
+        # bucketed padding keeps the set of program shapes small and
+        # stable (log2(n_slots) buckets), so a warmed engine never
+        # retraces as occupancy wanders
+        bucket = 1 << max(n_live - 1, 0).bit_length()
+        if bucket >= self.n_slots:
+            return None
+        prog = self._packed_program(bucket)
+        if prog is None:
+            self.n_packed_fallbacks += 1
+            return None
+        # pad with DISTINCT non-selected slot ids: the packed cache
+        # scatter requires unique rows, and uniqueness is what lets pad
+        # rows reuse the live-masking/trash-page machinery untouched
+        pad = np.setdiff1d(np.arange(self.n_slots, dtype=np.int64),
+                           live_idx)[:bucket - n_live]
+        sidx = np.concatenate([live_idx, pad]).astype(np.int32)
+        plive = np.zeros((bucket,), bool)
+        plive[:n_live] = True
+        return prog, sidx, plive
+
+    def _run_decode_packed(self, prog, bucket: int, sidx: np.ndarray,
+                           pt: np.ndarray, plive: np.ndarray):
+        """Packed twin of ``_run_decode``: same degradation ladder, with
+        token/position rows gathered to the packed order on the host."""
+        lv = jnp.asarray(plive) if self.has_state else None
+        tok, pos = self.last_tok[sidx], self.pos[sidx]
+        on_pallas = dispatch.resolve_backend(
+            self.cfg.loki.backend) == "pallas"
+        try:
+            if (on_pallas and self._faults is not None
+                    and self._faults.hit("kernel_fail")):
+                raise FI.FaultInjected("injected fused-kernel abort")
+            return prog(self.params, self.cache, tok, pos, pt, lv,
+                        jnp.asarray(sidx))
+        except Exception as e:
+            if not on_pallas:
+                raise
+            dispatch.disable_backend("pallas", f"decode step failed: {e}")
+            self._build_programs()
+            self.n_backend_fallbacks += 1
+            prog = self._packed_program(bucket)
+            return prog(self.params, self.cache, tok, pos, pt, lv,
+                        jnp.asarray(sidx))
 
     def _inject_corruption(self) -> None:
         """``slot_corrupt`` site: silently repoint one live slot's tail
@@ -1597,7 +1815,20 @@ class PagedServingEngine:
             "n_shed": self.n_shed,
             "n_quarantined": self.n_quarantined,
             "n_backend_fallbacks": self.n_backend_fallbacks,
+            "packed": {
+                "enabled": self.packed,
+                "n_packed_ticks": self.n_packed_ticks,
+                "n_masked_ticks": self.n_masked_ticks,
+                "n_rows_saved": self.n_packed_rows_saved,
+                "n_sealed_fallbacks": self.n_packed_fallbacks,
+            },
         }
+        if self.n_groups > 1:
+            out["table_groups"] = {
+                "n_groups": self.n_groups,
+                "group_windows": list(self.group_windows),
+                "group_pages_hard": list(self._group_pages_hard),
+            }
         if self.tiered:
             looked = self.n_prefetch_hits + self.n_prefetch_misses
             out["tiered"] = {

@@ -1,0 +1,306 @@
+"""All-policy paged decode: packed ticks and per-layer page-table groups.
+
+Three seams locked (DESIGN.md §14):
+
+* the paged ``full`` / ``exact_topk`` Pallas kernels against their jnp
+  oracles — G in {1,4,8} x {fp32, int8, fp8} pca-basis pools x ragged
+  page tables whose dead tail points at the trash page, interpret mode
+  so CI runs on CPU;
+* gather-packed decode: greedy outputs identical to the masked
+  full-batch path for every paged policy, with packed ticks actually
+  engaged (row savings counted, auditor on);
+* per-layer page-table groups: on every tick each group's live pages
+  stay within its spec-table hard bound, window groups recycle while
+  the full-attention group pins — on mixtral-SWA and the hymba hybrid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import LokiConfig
+from repro.core import baselines
+from repro.core.attention import decode_full
+from repro.kernels import ops
+from repro.models import lm
+from repro.serving import cache_spec as CS
+from repro.serving.engine import Request
+from repro.serving.paged_cache import QUANT_EPS, gather_logical_dq
+from repro.serving.scheduler import PAGED_POLICIES, PagedServingEngine
+
+
+# ------------------------------------------------------------ helpers
+
+def _setup(b, hkv, g, s, dim, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, hkv * g, dim), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dim), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dim), dtype)
+    return q, k, v
+
+
+def _orthogonal(hkv, dim, seed=0):
+    rng = np.random.RandomState(seed)
+    mats = [np.linalg.qr(rng.randn(dim, dim))[0] for _ in range(hkv)]
+    return jnp.asarray(np.stack(mats), jnp.float32)
+
+
+def _grouped_q(q, proj, hkv):
+    b, h, dim = q.shape
+    qg = q.reshape(b, hkv, h // hkv, dim)
+    return jnp.einsum("bhgd,hde->bhge", qg, proj.astype(q.dtype))
+
+
+def _paged_pool(k_hat, v, ps, seed=0):
+    """Scatter contiguous (B,S,Hkv,D) caches into a shuffled page pool.
+
+    Returns (pool_k, pool_v, page_table) with page 0 left as trash."""
+    b, s, hkv, dim = k_hat.shape
+    mp = s // ps
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(b * mp) + 1              # physical pages, 1-based
+    table = perm.reshape(b, mp).astype(np.int32)
+    n_pages = b * mp + 1
+    pool_k = np.zeros((n_pages * ps, hkv, dim), np.asarray(k_hat).dtype)
+    pool_v = np.zeros_like(pool_k)
+    kn, vn = np.asarray(k_hat), np.asarray(v)
+    for i in range(b):
+        for p in range(mp):
+            rows = slice(table[i, p] * ps, table[i, p] * ps + ps)
+            pool_k[rows] = kn[i, p * ps:(p + 1) * ps]
+            pool_v[rows] = vn[i, p * ps:(p + 1) * ps]
+    return pool_k, pool_v, table
+
+
+#: PageLayout dtype -> (storage dtype, qmax); None = unquantized fp32
+LAYOUTS = {"fp32": (None, 0.0),
+           "int8": (jnp.int8, 127.0),
+           "fp8": (jnp.float8_e4m3fn, 448.0)}
+
+
+def _quantize_pool(pool, ps, dtype, qmax):
+    """Per-page amax quantization, the pool writers' scheme: one f32
+    scale per page, codes = rows / scale (rounded+clipped for ints)."""
+    arr = np.asarray(pool, np.float32)
+    n_pages = arr.shape[0] // ps
+    scales = np.zeros((n_pages,), np.float32)
+    codes = np.zeros_like(arr)
+    for p in range(n_pages):
+        rows = arr[p * ps:(p + 1) * ps]
+        scales[p] = max(np.abs(rows).max(), QUANT_EPS) / qmax
+        y = rows / scales[p]
+        if np.issubdtype(np.dtype(dtype), np.integer):
+            y = np.clip(np.round(y), -qmax, qmax)
+        codes[p * ps:(p + 1) * ps] = y
+    return jnp.asarray(codes).astype(dtype), jnp.asarray(scales)
+
+
+def _paged_case(g, layout, seed):
+    """One parity cell: rotated (pca-basis) caches scattered into a
+    shuffled pool, ragged lengths AND a ragged table (row 1's dead tail
+    re-pointed at the trash page — the kernels must never read it)."""
+    b, hkv, s, dim, bs, ps = 2, 2, 256, 64, 32, 32
+    q, k, v = _setup(b, hkv, g, s, dim, seed=seed)
+    proj = _orthogonal(hkv, dim, seed=seed)
+    k_hat = jnp.einsum("bshd,hde->bshe", k, proj)
+    cur = jnp.array([s, 100], jnp.int32)
+    pool_k, pool_v, table = _paged_pool(k_hat, v, ps, seed=g)
+    live1 = -(-100 // ps)
+    table[1, live1:] = 0                            # dead tail -> trash page
+    dtype, qmax = LAYOUTS[layout]
+    if dtype is None:
+        k_scale = v_scale = None
+        pool_k, pool_v = jnp.asarray(pool_k), jnp.asarray(pool_v)
+    else:
+        pool_k, k_scale = _quantize_pool(pool_k, ps, dtype, qmax)
+        pool_v, v_scale = _quantize_pool(pool_v, ps, dtype, qmax)
+    q_hat = _grouped_q(q, proj, hkv)
+    table = jnp.asarray(table)
+    return (b, hkv, g, s, dim, bs, ps, q_hat, pool_k, pool_v, table, cur,
+            k_scale, v_scale)
+
+
+# ===================================================================
+# Paged full / exact_topk kernels vs the jnp oracle
+# ===================================================================
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+@pytest.mark.parametrize("g", [1, 4, 8])
+def test_paged_full_decode_matches_oracle(g, layout):
+    """Streaming paged full attention == dense softmax over the
+    dequantized logical view gathered through the same table."""
+    (b, hkv, g_, s, dim, bs, ps, q_hat, pool_k, pool_v, table, cur,
+     k_scale, v_scale) = _paged_case(g, layout, seed=g + 17)
+    got = ops.full_decode(q_hat, pool_k, pool_v, cur, block_size=bs,
+                          page_table=table, page_size=ps,
+                          k_scale=k_scale, v_scale=v_scale, interpret=True)
+    k_dq = gather_logical_dq(pool_k, k_scale, table, ps).astype(jnp.float32)
+    v_dq = gather_logical_dq(pool_v, v_scale, table, ps).astype(jnp.float32)
+    h = hkv * g
+    want = decode_full(q_hat.reshape(b, h, dim), k_dq, v_dq, cur)
+    assert got.shape == (b, hkv, g, dim)
+    np.testing.assert_allclose(np.asarray(got).reshape(b, h, dim),
+                               np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+@pytest.mark.parametrize("g", [1, 4, 8])
+def test_paged_exact_topk_matches_oracle(g, layout):
+    """Single-pass paged exact-top-k == the block-granular jnp baseline
+    reading the pool through the same (ragged) table and scales."""
+    (b, hkv, g_, s, dim, bs, ps, q_hat, pool_k, pool_v, table, cur,
+     k_scale, v_scale) = _paged_case(g, layout, seed=g + 31)
+    cfg = LokiConfig(enabled=False, k_f=0.25, block_size=bs, local_window=0)
+    kb = max(int(cfg.k_f * (s // bs)), 1)
+    got = ops.exact_topk_decode_fused(
+        q_hat, pool_k, pool_v, cur, k_blocks=kb, block_size=bs,
+        page_table=table, page_size=ps,
+        k_scale=k_scale, v_scale=v_scale, interpret=True)
+    h = hkv * g
+    want = baselines.exact_topk_decode_block(
+        q_hat.reshape(b, h, dim), pool_k, pool_v, cur, cfg,
+        page_table=table, page_size=ps, k_scale=k_scale, v_scale=v_scale)
+    assert got.shape == (b, hkv, g, dim)
+    np.testing.assert_allclose(np.asarray(got).reshape(b, h, dim),
+                               np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ===================================================================
+# Gather-packed decode: greedy identity vs the masked path
+# ===================================================================
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke_config("qwen2.5-3b")
+    return lm.init(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _policy(cfg, policy):
+    if policy == "full":
+        return cfg
+    return cfg.with_policy(policy, k_f=0.5, d_f=0.5, block_size=8,
+                           local_window=4, min_k=4)
+
+
+@pytest.mark.parametrize("policy", PAGED_POLICIES)
+def test_packed_matches_masked_greedy(policy, qwen):
+    """At 50% occupancy the packed engine must emit the same greedy
+    tokens as the masked full-batch engine, and must actually have run
+    packed ticks (smaller buckets, rows saved)."""
+    params, cfg0 = qwen
+    cfg = _policy(cfg0, policy)
+
+    def run(packed):
+        eng = PagedServingEngine(params, cfg, n_slots=6, smax=64,
+                                 page_size=8, prefill_chunk=8,
+                                 packed=packed, audit=True)
+        reqs = [Request(rid=i, prompt=(np.arange(5 + i) * 3 + i) % cfg.vocab,
+                        max_new=6) for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done(400)
+        assert all(r.done for r in reqs), [r.status for r in reqs]
+        return [tuple(r.out) for r in reqs], eng
+
+    masked, _ = run(packed=False)
+    packed, eng = run(packed=True)
+    assert masked == packed, (policy, masked, packed)
+    st = eng.stats()["packed"]
+    assert st["enabled"]
+    assert st["n_packed_ticks"] > 0, st
+    assert st["n_rows_saved"] > 0, st
+    assert st["n_sealed_fallbacks"] == 0, st
+
+
+# ===================================================================
+# Per-layer page-table groups: hard bound held on every tick
+# ===================================================================
+
+def _run_bounded(cfg, *, n_slots, n_reqs, max_new, smax=128, page_size=8):
+    """Serve a stream, asserting per tick that every group's live pages
+    stay within its spec-table hard bound. Returns the engine."""
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, n_slots=n_slots, smax=smax,
+                             page_size=page_size, prefill_chunk=8,
+                             audit=True, packed=True)
+    reqs = [Request(rid=i, prompt=(np.arange(20 + 4 * i) * 3 + i) % cfg.vocab,
+                    max_new=max_new) for i in range(n_reqs)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(800):
+        if not eng._queue and not eng._admit_order:
+            break
+        eng.tick()
+        for g in range(eng.n_groups):
+            bound = eng._group_pages_hard[g]
+            for slot in range(eng.n_slots):
+                held = sum(p is not None for p in eng._group_pages(g)[slot])
+                assert held <= bound, (g, slot, held, bound)
+    assert all(r.done for r in reqs), [r.status for r in reqs]
+    return eng
+
+
+def test_mixtral_swa_group_budget_bound_per_tick():
+    cfg = get_smoke_config("mixtral-8x22b").with_window_layers((16, 0))
+    assert CS.group_windows(cfg) == (0, 16)
+    eng = _run_bounded(cfg, n_slots=4, n_reqs=6, max_new=30)
+    st = eng.stats()
+    assert st["table_groups"]["n_groups"] == 2
+    assert st["table_groups"]["group_windows"] == [0, 16]
+    assert st["n_recycled_pages"] > 0, "window group never recycled"
+
+
+def test_hymba_group_budget_bound_per_tick():
+    """Hybrid family: attention runs in parallel with the SSM heads, so
+    per-layer windows still form page-table groups over the attn specs."""
+    cfg = get_smoke_config("hymba-1.5b").with_window_layers((0, 16))
+    assert CS.group_windows(cfg) == (0, 16)
+    eng = _run_bounded(cfg, n_slots=4, n_reqs=5, max_new=24)
+    st = eng.stats()
+    assert st["table_groups"]["n_groups"] == 2
+    assert st["n_recycled_pages"] > 0, "window group never recycled"
+
+
+def test_full_group_pins_while_window_group_recycles():
+    """With mixed windows the full-attention table must never grow holes
+    (no recycling) while the window group's table does."""
+    cfg = get_smoke_config("mixtral-8x22b").with_window_layers((16, 0))
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, n_slots=1, smax=128, page_size=8,
+                             prefill_chunk=8, audit=True)
+    req = Request(rid=0, prompt=(np.arange(40) * 5 + 1) % cfg.vocab,
+                  max_new=40)
+    eng.submit(req)
+    saw_hole_main = saw_hole_aux = False
+    for _ in range(400):
+        if not eng._queue and not eng._admit_order:
+            break
+        eng.tick()
+        if eng.slot_pages[0]:
+            saw_hole_main |= any(p is None for p in eng.slot_pages[0])
+            saw_hole_aux |= any(p is None for p in eng.aux_pages[0][0])
+    assert req.done
+    assert not saw_hole_main, "full-attention group recycled a page"
+    assert saw_hole_aux, "window group never recycled"
+
+
+def test_uniform_window_layers_is_single_group():
+    """window_layers with one distinct window collapses to the single
+    table engine: same groups, same greedy output."""
+    cfg_u = get_smoke_config("mixtral-8x22b").replace(sliding_window=None)
+    cfg_g = cfg_u.with_window_layers((0, 0))
+    assert CS.n_table_groups(cfg_g) == 1
+    params = lm.init(jax.random.PRNGKey(0), cfg_u)
+    outs = []
+    for cfg in (cfg_u, cfg_g):
+        eng = PagedServingEngine(params, cfg, n_slots=2, smax=64,
+                                 page_size=8, prefill_chunk=8, audit=True)
+        reqs = [Request(rid=i, prompt=(np.arange(6 + i) * 3 + i) % cfg.vocab,
+                        max_new=5) for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done(400)
+        assert all(r.done for r in reqs)
+        outs.append([tuple(r.out) for r in reqs])
+    assert outs[0] == outs[1]
